@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: cluster setups from the paper's Table 1,
+model list from Table 2, CSV emission."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+from repro.core import hardware as HW
+from repro.core.profiler import ZPGroupShape
+from repro.models import registry
+
+# Paper Table 1 cluster setups.
+SETUPS: Dict[str, ZPGroupShape] = {
+    "O1": ZPGroupShape(M=6, N=6, attn_class=HW.A40, exp_class=HW.V100),
+    "O2": ZPGroupShape(M=4, N=8, attn_class=HW.A40, exp_class=HW.V100),
+    "O3": ZPGroupShape(M=6, N=3, attn_class=HW.A40, exp_class=HW.V100),
+    "C1": ZPGroupShape(M=2, N=6, attn_class=HW.L40S, exp_class=HW.T4),
+    "C2": ZPGroupShape(M=2, N=8, attn_class=HW.L40S, exp_class=HW.T4),
+}
+
+# Paper Table 2 models.
+PAPER_MODELS = ["mixtral-w1", "mixtral-w2", "mixtral-d1", "mixtral-d2",
+                "mixtral-d3"]
+
+SEQ_LENS = [4096, 8192, 16384, 24576, 32768]
+
+
+def global_batch_for(seq_len: int, tokens_per_iter: int = 2 ** 22) -> int:
+    """Paper: 'global batch size to the maximum allowed by GPU memory' —
+    we hold tokens/iteration constant (~4M) across sequence lengths."""
+    return max(tokens_per_iter // seq_len, 2)
+
+
+ROWS: List[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """Required CSV row format: name,us_per_call,derived."""
+    ROWS.append({"name": name, "us": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        out = fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    return out, (time.perf_counter() - t0) / iters * 1e6

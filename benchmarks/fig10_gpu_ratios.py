@@ -1,0 +1,32 @@
+"""Paper Fig. 10: impact of the A40:V100 ratio in a ZP group. M fixed at 4;
+experts scale with N so EP divisibility holds; compares against EP (Ideal).
+Asym-EA activates only where M|N or N|M (paper §4.2)."""
+
+import dataclasses
+
+from benchmarks.common import emit, global_batch_for
+from repro.core import hardware as HW, simulator as sim
+from repro.core.planner import plan_zp_group
+from repro.core.profiler import ZPGroupShape
+from repro.models import registry
+
+
+def main():
+    base = registry.get_config("mixtral-d1")
+    for s in (4096, 12288, 20480, 32768):
+        gb = global_batch_for(s)
+        for N in (2, 3, 4, 5, 6, 7, 8):
+            cfg = dataclasses.replace(base, n_experts=3 * N)
+            zp = ZPGroupShape(M=4, N=N, attn_class=HW.A40,
+                              exp_class=HW.V100)
+            plan = plan_zp_group(cfg, zp, gb, s)
+            th = gb * s / plan.predicted.iter_time
+            th_ideal = sim.ep_ideal_throughput(cfg, zp, gb, s)
+            emit(f"fig10/s{s}/ratio4to{N}",
+                 plan.predicted.iter_time * 1e6,
+                 f"tok_s={th:.0f};vs_ideal={th / th_ideal:.2f}x;"
+                 f"asym_offload={sum(plan.offload)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Fig. 11: HeterMoE on 2xA40+2xV100 vs homogeneous EP on 4xA40,
+4xV100 and 2xA100."""
+
+import dataclasses
+
+from benchmarks.common import emit, global_batch_for
+from repro.core import hardware as HW, simulator as sim
+from repro.core.planner import plan_zp_group
+from repro.core.profiler import ZPGroupShape
+from repro.models import registry
+
+
+def main():
+    cfg = dataclasses.replace(registry.get_config("mixtral-d1"), n_experts=8)
+    for s in (4096, 8192, 12288, 16384, 20480, 24576, 32768):
+        gb = global_batch_for(s)
+        zp = ZPGroupShape(M=2, N=2, attn_class=HW.A40, exp_class=HW.V100)
+        plan = plan_zp_group(cfg, zp, gb, s)
+        th_hm = gb * s / plan.predicted.iter_time
+        emit(f"fig11/s{s}/hetermoe_2a40_2v100",
+             plan.predicted.iter_time * 1e6, f"tok_s={th_hm:.0f}")
+        for dev, count, tag in [(HW.A40, 4, "4xa40"), (HW.V100, 4, "4xv100"),
+                                (HW.A100, 2, "2xa100")]:
+            t = sim.homogeneous_ep_iter_time(cfg, dev, count, gb, s)
+            emit(f"fig11/s{s}/ep_{tag}", t * 1e6,
+                 f"tok_s={gb * s / t:.0f};"
+                 f"rel_to_hm={(gb * s / t) / th_hm:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

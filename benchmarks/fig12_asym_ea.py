@@ -1,0 +1,23 @@
+"""Paper Fig. 12: speed-up from Asym-EA (vs zebra parallelism without it),
+Mixtral-W1 and D1 on the O1 setup across sequence lengths."""
+
+from benchmarks.common import SETUPS, emit, global_batch_for
+from repro.core.planner import plan_zp_group
+from repro.models import registry
+
+
+def main():
+    zp = SETUPS["O1"]
+    for model in ("mixtral-w1", "mixtral-d1"):
+        cfg = registry.get_config(model)
+        for s in (4096, 8192, 16384, 24576, 32768):
+            gb = global_batch_for(s)
+            plan = plan_zp_group(cfg, zp, gb, s)
+            speed = plan.predicted_no_asym.iter_time / \
+                plan.predicted.iter_time
+            emit(f"fig12/{model}/s{s}", plan.predicted.iter_time * 1e6,
+                 f"asym_speedup={speed:.3f}x;offload={sum(plan.offload)}")
+
+
+if __name__ == "__main__":
+    main()

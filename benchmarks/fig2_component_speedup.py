@@ -1,0 +1,29 @@
+"""Paper Fig. 2: newer-over-older GPU speed-up on attention vs expert
+modules (Mixtral-8x7B setting), from the calibrated hardware model."""
+
+from benchmarks.common import emit
+from repro.core import hardware as HW, profiler as PF
+from repro.models.config import LayerSpec, ModelConfig
+
+MIXTRAL_8X7B = ModelConfig(
+    name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=14336, d_ff_expert=14336,
+    vocab_size=32000, pattern=(LayerSpec(ffn="moe"),), n_experts=8, top_k=2)
+
+
+def main():
+    for new, old, tag in [(HW.A40, HW.V100, "a40_over_v100"),
+                          (HW.L40S, HW.T4, "l40s_over_t4")]:
+        for s in (4096, 8192, 16384, 32768, 65536):
+            ta_new = PF.attention_block_time(MIXTRAL_8X7B, s, s, new) * 3
+            ta_old = PF.attention_block_time(MIXTRAL_8X7B, s, s, old) * 3
+            te_new = PF.expert_ffn_time(MIXTRAL_8X7B, s, new) * 3
+            te_old = PF.expert_ffn_time(MIXTRAL_8X7B, s, old) * 3
+            emit(f"fig2/{tag}/attn/s{s}", ta_old * 1e6,
+                 f"speedup={ta_old / ta_new:.2f}x")
+            emit(f"fig2/{tag}/expert/s{s}", te_old * 1e6,
+                 f"speedup={te_old / te_new:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

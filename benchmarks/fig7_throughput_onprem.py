@@ -1,0 +1,52 @@
+"""Paper Fig. 7: training throughput on the on-premise A40+V100 setups
+(O1-O3) for the Table-2 Mixtral models: HeterMoE vs EP / DistEP /
+EP (Ideal), via the discrete-event simulator + analytical profiler."""
+
+from benchmarks.common import (PAPER_MODELS, SEQ_LENS, SETUPS, emit,
+                               global_batch_for)
+from repro.core import simulator as sim
+from repro.core.planner import plan_zp_group
+from repro.models import registry
+
+
+def run_setup(setup_names, tag):
+    for setup_name in setup_names:
+        zp = SETUPS[setup_name]
+        for model in PAPER_MODELS:
+            cfg = registry.get_config(model)
+            if cfg.n_experts % zp.N:
+                continue  # EP divisibility (paper: experts % GPUs == 0)
+            for s in SEQ_LENS:
+                gb = global_batch_for(s)
+                plan = plan_zp_group(cfg, zp, gb, s)
+                tokens = gb * s
+                th_hm = tokens / plan.predicted.iter_time
+                # baselines
+                t_ep = sim.ep_iter_time(cfg, zp, gb, s,
+                                        min(zp.attn_class.link_bw,
+                                            zp.exp_class.link_bw))
+                th_ep = tokens / t_ep
+                d = sim.distep_iter_time(cfg, zp, gb, s,
+                                         min(zp.attn_class.link_bw,
+                                             zp.exp_class.link_bw))
+                th_dist = tokens / d.iter_time
+                th_ideal = sim.ep_ideal_throughput(cfg, zp, gb, s)
+                emit(f"fig7/{setup_name}/{model}/s{s}/hetermoe",
+                     plan.predicted.iter_time * 1e6, f"tok_s={th_hm:.0f}")
+                emit(f"fig7/{setup_name}/{model}/s{s}/ep",
+                     t_ep * 1e6, f"tok_s={th_ep:.0f};"
+                     f"hm_speedup={th_hm / th_ep:.2f}x")
+                emit(f"fig7/{setup_name}/{model}/s{s}/distep",
+                     d.iter_time * 1e6, f"tok_s={th_dist:.0f};"
+                     f"hm_speedup={th_hm / th_dist:.2f}x")
+                emit(f"fig7/{setup_name}/{model}/s{s}/ep_ideal",
+                     tokens / th_ideal * 1e6, f"tok_s={th_ideal:.0f};"
+                     f"hm_speedup={th_hm / th_ideal:.2f}x")
+
+
+def main():
+    run_setup(["O1", "O2", "O3"], "fig7")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Paper Fig. 8: throughput on the AWS setups (L40S + T4, C1/C2)."""
+
+from benchmarks.fig7_throughput_onprem import run_setup
+
+
+def main():
+    run_setup(["C1", "C2"], "fig8")
+
+
+if __name__ == "__main__":
+    main()

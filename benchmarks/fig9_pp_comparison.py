@@ -1,0 +1,30 @@
+"""Paper Fig. 9: HeterMoE's zebra parallelism vs heterogeneity-aware
+pipeline parallelism (Metis/FlashFlex-style layer balancing)."""
+
+from benchmarks.common import SEQ_LENS, SETUPS, emit, global_batch_for
+from repro.core import simulator as sim
+from repro.core.planner import plan_zp_group
+from repro.models import registry
+
+
+def main():
+    for setup_name in ("O1", "O2"):
+        zp = SETUPS[setup_name]
+        for model in ("mixtral-w1", "mixtral-d1"):
+            cfg = registry.get_config(model)
+            if cfg.n_experts % zp.N:
+                continue
+            for s in SEQ_LENS:
+                gb = global_batch_for(s)
+                plan = plan_zp_group(cfg, zp, gb, s)
+                th_hm = gb * s / plan.predicted.iter_time
+                t_pp = sim.pp_iter_time(cfg, zp, gb, s)
+                th_pp = gb * s / t_pp
+                emit(f"fig9/{setup_name}/{model}/s{s}/hetermoe",
+                     plan.predicted.iter_time * 1e6, f"tok_s={th_hm:.0f}")
+                emit(f"fig9/{setup_name}/{model}/s{s}/pp", t_pp * 1e6,
+                     f"tok_s={th_pp:.0f};hm_speedup={th_hm / th_pp:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

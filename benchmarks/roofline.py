@@ -1,0 +1,63 @@
+"""Roofline benchmark: three-term roofline per (arch x shape x mesh) cell.
+
+Reads the dry-run grid CSV (experiments/dryrun_single.csv /
+dryrun_multi.csv) produced by ``python -m repro.launch.dryrun --all``; if
+missing, computes a small representative subset inline (slow). Hardware
+constants per the brief: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+import csv
+import json
+import os
+
+from benchmarks.common import emit
+
+CSVS = ["experiments/dryrun_grid.csv", "experiments/dryrun_single.csv",
+        "experiments/dryrun_multi.csv"]
+INLINE_CELLS = [("llama3.2-3b", "train_4k"), ("qwen3-moe-30b-a3b",
+                                              "train_4k")]
+
+
+def _emit_row(r):
+    if r.get("status") != "ok":
+        return
+    name = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+    t = max(float(r["t_compute_s"]), float(r["t_memory_s"]),
+            float(r["t_collective_s"]))
+    emit(name, t * 1e6,
+         f"bound={r['bound']};tc={float(r['t_compute_s']):.3f}s;"
+         f"tm={float(r['t_memory_s']):.3f}s;"
+         f"tx={float(r['t_collective_s']):.3f}s;"
+         f"mfu_bound={float(r['mfu_bound']):.3f};"
+         f"useful={float(r['useful_flops_frac']):.3f}")
+
+
+def main():
+    found = False
+    for path in CSVS:
+        if not os.path.exists(path):
+            continue
+        found = True
+        with open(path) as f:
+            for r in csv.DictReader(f):
+                _emit_row(r)
+    if not found:
+        print("# no dry-run CSV found; computing a small inline subset "
+              "(run `python -m repro.launch.dryrun --all --mesh both` "
+              "for the full grid)")
+        import subprocess
+        import sys
+        for arch, shape in INLINE_CELLS:
+            out = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+                 arch, "--shape", shape, "--mesh", "single"],
+                capture_output=True, text=True,
+                env={**os.environ, "PYTHONPATH": "src"})
+            for line in out.stdout.splitlines():
+                if line.startswith("{"):
+                    _emit_row(json.loads(line))
+
+
+if __name__ == "__main__":
+    main()

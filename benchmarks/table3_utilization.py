@@ -1,0 +1,30 @@
+"""Paper Table 3: GPU utilization (fraction of time on effective compute)
+with ZP only and ZP+Asym-EA, vs DistEP — Mixtral-D1 on O1."""
+
+from benchmarks.common import SETUPS, emit, global_batch_for
+from repro.core import simulator as sim
+from repro.core.planner import plan_zp_group
+from repro.models import registry
+
+
+def main():
+    zp = SETUPS["O1"]
+    cfg = registry.get_config("mixtral-d1")
+    for s in (8192, 16384):
+        gb = global_batch_for(s)
+        plan = plan_zp_group(cfg, zp, gb, s, use_asym=False)
+        with_asym = plan_zp_group(cfg, zp, gb, s, use_asym=True)
+        dist = sim.distep_iter_time(cfg, zp, gb, s,
+                                    min(zp.attn_class.link_bw,
+                                        zp.exp_class.link_bw))
+        for tag, res in [("zp_only", plan.predicted),
+                         ("zp_asym", with_asym.predicted),
+                         ("distep", dist)]:
+            emit(f"table3/s{s}/{tag}", res.iter_time * 1e6,
+                 f"attn_util={res.attn_util:.2f};"
+                 f"exp_util={res.exp_util:.2f};"
+                 f"attn_vs_distep={res.attn_util / max(dist.attn_util, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

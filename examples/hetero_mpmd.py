@@ -1,0 +1,53 @@
+"""Paper-faithful heterogeneous run: disaggregated attention/expert groups
+(zebra MPMD engine) with Asym-EA offload, vs the fused baseline.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/hetero_mpmd.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hardware as HW
+from repro.core.planner import plan_zp_group
+from repro.core.profiler import ZPGroupShape
+from repro.core.zebra_mpmd import ZebraMPMD
+from repro.models import registry, stack
+from repro.models.modules import Policy, RunConfig
+from repro.pytree import split_params
+
+
+def main():
+    cfg = registry.smoke_config(registry.get_config("mixtral-w1"))
+    cfg = dataclasses.replace(cfg, n_layers=4, capacity_factor=8.0)
+    run = RunConfig(policy=Policy(compute_dtype=jnp.float32),
+                    moe_impl="gather")
+
+    # Plan the ZP group as if on A40+V100 (paper's O-testbed classes).
+    zp = ZPGroupShape(M=4, N=4, attn_class=HW.A40, exp_class=HW.V100)
+    plan = plan_zp_group(registry.get_config("mixtral-w1"), zp,
+                         global_batch=16, seq_len=4096)
+    print(f"planned R={plan.R} offload={plan.offload} "
+          f"iter={plan.predicted.iter_time*1e3:.1f}ms "
+          f"(no-asym {plan.predicted_no_asym.iter_time*1e3:.1f}ms)")
+
+    devs = jax.devices()
+    eng = ZebraMPMD(cfg, run, attn_devices=devs[:4], exp_devices=devs[4:8],
+                    num_microbatches=2,
+                    offload=tuple(min(o, cfg.n_experts // 2)
+                                  for o in plan.offload[:cfg.n_layers]))
+    params, _ = split_params(stack.init_model(jax.random.PRNGKey(0), cfg))
+    attn_side, exp_layers = eng.shard_params(params)
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (8, 64), 0, cfg.vocab_size)
+    targets = jax.random.randint(jax.random.fold_in(key, 1), (8, 64), 0,
+                                 cfg.vocab_size)
+    loss, ga, ge = eng.train_step(attn_side, exp_layers, tokens, targets)
+    print(f"disaggregated loss: {float(loss):.4f}")
+    print("MPMD hetero example OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Batched serving example: prefill + continuous greedy decode
+(deliverable b, serving flavour).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import jax
+import sys
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    n = jax.device_count()
+    mesh = {1: "1x1", 2: "1x2", 4: "2x2", 8: "2x4"}.get(n, f"1x{n}")
+    return serve_cli.main([
+        "--arch", "qwen3-moe-30b-a3b", "--smoke", "--batch", "4",
+        "--prompt-len", "32", "--gen", "16", "--mesh", mesh,
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""§Perf hillclimb driver: re-lower selected cells under candidate changes
+and diff the roofline terms against the paper-faithful baseline.
+
+    PYTHONPATH=src python experiments/hillclimb.py dbrx-132b train_4k \
+        baseline bf16_params zebra_r8 ...
+
+Each variant is one hypothesis from the EXPERIMENTS.md §Perf log.
+"""
+
+import json
+import sys
+import time
+
+
+VARIANTS = {
+    # paper-faithful baseline: EP sharding, alltoall dispatch, full remat,
+    # f32 master params
+    "baseline": {},
+    # store params bf16, f32 master in ZeRO-sharded opt state
+    "bf16_params": {"param_dtype": "bfloat16"},
+    # TPU-hybrid zebra: TP attention + EP experts, R=8 microbatch pipeline
+    "zebra_r8": {"zebra_mode": "replicated", "microbatches": 8},
+    "zebra_r8_bf16": {"zebra_mode": "replicated", "microbatches": 8,
+                      "param_dtype": "bfloat16"},
+    # remat policy: save dot outputs instead of full recompute
+    "remat_dots": {"remat": "dots"},
+    # reduce-scatter gradients into the param layout (vs full all-reduce)
+    "grad_rs": {"constrain_grads": True},
+    "grad_rs_bf16": {"constrain_grads": True, "param_dtype": "bfloat16"},
+    "zebra_r8_grs_bf16": {"zebra_mode": "replicated", "microbatches": 8,
+                          "param_dtype": "bfloat16",
+                          "constrain_grads": True},
+    "remat_none": {"remat": "none"},
+    # replicated-bf16 embedding gather + batch-sharded xent chunk stream
+    "embed_repl": {"embed_mode": "replicated"},
+    "embed_repl_dots": {"embed_mode": "replicated", "remat": "dots"},
+    "best_dbrx": {"embed_mode": "replicated", "remat": "dots",
+                  "param_dtype": "bfloat16"},
+    # larger attention query chunks (fewer K/V re-reads in chunked attn)
+    "chunk2048": {"chunk_q": 2048},
+    "chunk1024": {"chunk_q": 1024},
+    "chunk2048_bf16": {"chunk_q": 2048, "param_dtype": "bfloat16"},
+    "combo": {"zebra_mode": "replicated", "microbatches": 8,
+              "param_dtype": "bfloat16", "chunk_q": 1024},
+    # dropless-leaning capacity (1.0): -20% expert FLOPs + smaller buffers
+    "cap1_dots_bf16": {"capacity_factor": 1.0, "remat": "dots",
+                       "param_dtype": "bfloat16"},
+    "cap1": {"capacity_factor": 1.0},
+}
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = sys.argv[3:] or ["baseline"]
+    from repro.launch.dryrun import lower_cell
+    rows = []
+    for v in variants:
+        kw = VARIANTS[v]
+        t0 = time.time()
+        try:
+            rec = lower_cell(arch, shape, multi_pod=False, **kw)
+        except Exception as e:
+            rec = {"status": f"FAIL {type(e).__name__}: {e}"}
+        rec["variant"] = v
+        rec["wall_s"] = round(time.time() - t0, 1)
+        rows.append(rec)
+        print(json.dumps(rec), flush=True)
+
+    print(f"\n== {arch} x {shape} ==")
+    print(f"{'variant':18s} {'t_comp':>8s} {'t_mem':>8s} {'t_coll':>8s} "
+          f"{'t_ring':>8s} {'bound':>10s} {'mfu_bound':>9s} {'temp_GB':>8s} "
+          f"fits")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['variant']:18s} {r.get('status', '?')[:50]}")
+            continue
+        print(f"{r['variant']:18s} {r['t_compute_s']:8.3f} "
+              f"{r['t_memory_s']:8.3f} {r['t_collective_s']:8.3f} "
+              f"{r.get('t_collective_ring_s', 0):8.3f} "
+              f"{r['bound']:>10s} {r['mfu_bound']:9.4f} "
+              f"{r['temp_bytes_per_device'] / 1e9:8.1f} "
+              f"{'Y' if r['fits_16gb'] else 'N'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct stand-ins + concrete batches for every (arch x shape).
+
+``input_specs`` is the dry-run contract: weak-type-correct, shardable, no
+device allocation. Modality frontends are stubbed per the brief —
+whisper receives precomputed mel-frame embeddings, the VLM receives
+precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+
+
+def _shape(shape_or_name) -> ShapeConfig:
+    if isinstance(shape_or_name, str):
+        return SHAPES[shape_or_name]
+    return shape_or_name
+
+
+def input_specs(cfg: ModelConfig, shape_or_name, compute_dtype=jnp.bfloat16):
+    """Dict of jax.ShapeDtypeStruct for one input-shape cell."""
+    sc = _shape(shape_or_name)
+    B = sc.global_batch
+    S = 1 if sc.kind == "decode" else sc.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if sc.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encdec:
+        specs["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), compute_dtype)
+    if cfg.vision_seq > 0:
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_seq, cfg.vision_dim or cfg.d_model), compute_dtype)
+    return specs
+
+
+def make_batch(key, cfg: ModelConfig, shape_or_name, compute_dtype=jnp.bfloat16):
+    """Concrete random batch with the same structure as input_specs."""
+    sc = _shape(shape_or_name)
+    specs = input_specs(cfg, sc, compute_dtype)
+    out = {}
+    for name, spec in specs.items():
+        key = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            out[name] = jax.random.randint(key, spec.shape, 0,
+                                           cfg.vocab_size, spec.dtype)
+        else:
+            out[name] = jax.random.normal(key, spec.shape, spec.dtype)
+    return out

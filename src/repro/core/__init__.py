@@ -1,0 +1,17 @@
+"""HeterMoE core: zebra parallelism, Asym-EA, planner, simulator.
+
+  asym_ea    — Algorithm 1 (gather-and-squeeze) + alpha/beta memory bounds
+  schedule   — Theorem 1 task ordering + dependency model
+  simulator  — discrete-event simulator (paper §6.4.1 fn.2) + baselines
+  hardware   — device-class models calibrated to the paper's Fig. 2
+  profiler   — analytical stand-in for the §5 profiler
+  planner    — ZP-group planning / elastic replanning
+  zebra_spmd — single-mesh production engine (scan-pipelined overlap)
+  zebra_mpmd — two-mesh paper-faithful disaggregation engine
+"""
+
+from repro.core import (asym_ea, hardware, planner, profiler, schedule,
+                        simulator)
+
+__all__ = ["asym_ea", "hardware", "planner", "profiler", "schedule",
+           "simulator"]

@@ -1,0 +1,152 @@
+"""Asymmetric expert assignment — Algorithm 1 of the paper (+ alpha/beta).
+
+Decides, per layer, how many experts each expert GPU offloads back to the
+attention GPUs: "gather" per-layer bubbles on the attention GPUs across
+consecutive layers until at least one chunk (n1 experts per attention GPU /
+n2 per expert GPU) can be "squeezed" out.
+
+Units: all o_l are experts offloaded FROM EACH expert GPU (paper output
+spec); n_min / n_max bound sum(O) in the same units.
+
+Note on line 4: the paper prints T_squeeze = (T_E^Exp N/n) n1 +
+(T_E^Attn N/n) n2, but its own prose defines N*T_E^Exp/n as the time saved
+per expert *offloaded by an expert GPU* (n2 per chunk) and N*T_E^Attn/n as
+the time added per expert *acquired by an attention GPU* (n1 per chunk). We
+implement the prose (n2 with the Exp term, n1 with the Attn term); the two
+readings coincide whenever M == N (all of the paper's Asym-EA-active
+evaluation ratios are powers of two where both give identical schedules for
+M=N, and the divisibility rule makes the difference a constant factor
+otherwise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+from repro.core.profiler import LayerTimes
+
+
+@dataclasses.dataclass(frozen=True)
+class AsymEAPlan:
+    offload: tuple  # o_l per layer: experts offloaded per expert GPU
+    n1: int  # experts each attention GPU acquires per chunk
+    n2: int  # experts each expert GPU offloads per chunk
+    t_gather: float
+    t_squeeze: float
+    alpha: float
+    beta: float
+
+    @property
+    def total_offload(self) -> int:
+        return sum(self.offload)
+
+    def experts_on_attention(self, layer: int, N: int) -> int:
+        """Total experts resident on the attention group for `layer`."""
+        return self.offload[layer] * N
+
+
+def divisibility_ok(M: int, N: int) -> bool:
+    """Asym-EA requires M | N or N | M (paper §4.2)."""
+    return M % N == 0 or N % M == 0
+
+
+def asym_ea_offload(
+    n: int,
+    L: int,
+    M: int,
+    N: int,
+    t_attn: float,
+    t_exp_attn: float,
+    t_exp: float,
+    n_min: int = 0,
+    n_max: Optional[int] = None,
+) -> AsymEAPlan:
+    """Algorithm 1. Times are per-microbatch forward durations.
+
+    n: experts per layer; L: layers; M/N: attention/expert GPUs per ZP group.
+    t_attn = T_A^Attn, t_exp_attn = T_E^Attn (one expert FFN on an attention
+    GPU), t_exp = T_E^Exp.
+    n_min/n_max: bounds on sum(O) in per-expert-GPU units.
+    """
+    if not divisibility_ok(M, N):
+        raise ValueError(f"Asym-EA needs M|N or N|M, got M={M}, N={N}")
+    n1 = max(1, N // M)                      # line 1
+    n2 = n1 * M // N                          # line 2
+    if n_max is None:
+        n_max = n  # at most everything
+    n_max = min(n_max, L * (n // N))          # cannot offload more than held
+
+    t_gather = t_exp - t_attn                 # line 3
+    # line 4 (prose form; see module docstring):
+    t_squeeze = (t_exp * N / n) * n2 + (t_exp_attn * N / n) * n1
+
+    # Degenerate: no bubbles to squeeze and no memory pressure.
+    if t_gather <= 0 and n_min <= 0:
+        return AsymEAPlan(tuple([0] * L), n1, n2, t_gather, t_squeeze,
+                          1.0, 1.0)
+    if t_gather <= 0:
+        # Memory-forced offload with no perf bubbles: spread n_min evenly.
+        chunks = math.ceil(n_min / n2)
+        per = chunks // L
+        extra = chunks % L
+        O = [(per + (1 if l < extra else 0)) * n2 for l in range(L)]
+        return AsymEAPlan(tuple(O), n1, n2, t_gather, t_squeeze, 1.0,
+                          float("inf"))
+
+    # alpha/beta memory coefficients (paper, "Addressing memory limitations")
+    gatherable = L * t_gather
+    alpha = min(((n_max // n2) * t_squeeze) / gatherable, 1.0)
+    beta = max((math.ceil(n_min / n2) * t_squeeze) / gatherable, 1.0)
+
+    t_bubble = 0.0                            # line 5
+    O: List[int] = []
+    per_gpu = n // N  # an expert GPU cannot offload more than it holds
+    for _ in range(L):                        # line 6
+        t_bubble += alpha * beta * t_gather   # line 7 (modified)
+        o_l = 0
+        if t_bubble >= t_squeeze:             # line 8
+            o_l = int(t_bubble // t_squeeze)  # line 9
+            o_l = min(o_l, per_gpu // n2)     # physical per-layer cap
+            t_bubble -= o_l * t_squeeze       # line 10
+            o_l *= n2                         # line 11
+        O.append(o_l)
+    # Enforce hard bounds exactly (alpha/beta steer; rounding can overshoot).
+    O = _clamp_total(O, n_min, n_max, n2, L)
+    return AsymEAPlan(tuple(O), n1, n2, t_gather, t_squeeze, alpha, beta)
+
+
+def _clamp_total(O: List[int], n_min: int, n_max: int, n2: int,
+                 L: int) -> List[int]:
+    total = sum(O)
+    if total > n_max:
+        excess = total - (n_max // n2) * n2
+        for l in range(L - 1, -1, -1):
+            if excess <= 0:
+                break
+            take = min(O[l], ((excess + n2 - 1) // n2) * n2)
+            O[l] -= take
+            excess -= take
+    total = sum(O)
+    if total < n_min:
+        deficit = math.ceil((n_min - total) / n2) * n2
+        l = 0
+        while deficit > 0:
+            O[l % L] += n2
+            deficit -= n2
+            l += 1
+    return O
+
+
+def apply_offload_to_times(times: LayerTimes, offload_l: int, n: int, N: int,
+                           M: int) -> tuple:
+    """Per-layer durations after offloading o_l experts per expert GPU.
+
+    Returns (t_exp_new, t_attn_extra): expert-GPU time for one microbatch
+    and the extra per-microbatch expert work added to each attention GPU.
+    """
+    t_exp_new = times.t_exp * (1.0 - offload_l * N / n)
+    acquired_per_attn = offload_l * N / M
+    t_attn_extra = acquired_per_attn * (times.t_exp_attn * N / n)
+    return max(t_exp_new, 0.0), t_attn_extra

@@ -1,0 +1,118 @@
+"""ZP-group planning: profile -> Asym-EA -> simulate -> pick.
+
+The Optimizer box of the paper's Fig. 3: given a ZP group (M attention
+devices of one class, N expert devices of another), a model and batch
+geometry, it produces a `ZebraPlan` — microbatch count, per-layer Asym-EA
+offloads, and the predicted iteration time / utilizations — by running
+Algorithm 1 on profiler outputs and validating candidates in the simulator.
+Also provides the elastic replanning entry point used by repro.ft.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.core import profiler as P
+from repro.core import simulator as sim
+from repro.core.asym_ea import (AsymEAPlan, asym_ea_offload, divisibility_ok)
+from repro.core.hardware import DeviceClass
+from repro.core.profiler import LayerTimes, ZPGroupShape
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ZebraPlan:
+    zp: ZPGroupShape
+    R: int
+    offload: tuple
+    times: LayerTimes
+    comm: sim.CommTimes
+    predicted: sim.SimResult
+    predicted_no_asym: sim.SimResult
+    n_min: int
+    n_max: int
+
+    @property
+    def tokens_per_iter(self) -> int:
+        return self._tokens
+
+    def throughput(self, global_batch: int, seq_len: int) -> float:
+        return global_batch * seq_len / self.predicted.iter_time
+
+
+def plan_zp_group(cfg: ModelConfig, zp: ZPGroupShape, global_batch: int,
+                  seq_len: int, R: Optional[int] = None,
+                  candidates: Sequence[int] = (2, 4, 8, 16),
+                  use_asym: bool = True) -> ZebraPlan:
+    """Pick (R, offload) minimizing simulated iteration time."""
+    best = None
+    rs = [R] if R else [r for r in candidates if global_batch % r == 0] or [1]
+    for r in rs:
+        times = P.profile_layer(cfg, zp, global_batch, seq_len, r)
+        comm = sim.comm_times(cfg, global_batch, seq_len, r,
+                              min(zp.attn_class.link_bw,
+                                  zp.exp_class.link_bw), zp.M, zp.N)
+        no_asym = sim.simulate_hetermoe(cfg, times, comm, r, zp.M, zp.N)
+        chosen = no_asym
+        offload = tuple([0] * cfg.n_layers)
+        n_min, n_max = P.asym_ea_memory_bounds(cfg, zp, global_batch,
+                                               seq_len, r)
+        # express n_max in per-expert-GPU units (sum(O) bound; see asym_ea)
+        n_max_units = n_max // max(zp.N, 1)
+        if use_asym and cfg.is_moe and divisibility_ok(zp.M, zp.N):
+            try:
+                plan = asym_ea_offload(
+                    cfg.n_experts, cfg.n_layers, zp.M, zp.N,
+                    t_attn=times.t_attn, t_exp_attn=times.t_exp_attn,
+                    t_exp=times.t_exp, n_min=n_min // max(zp.N, 1),
+                    n_max=n_max_units)
+                with_asym = sim.simulate_hetermoe(cfg, times, comm, r, zp.M,
+                                                  zp.N, plan)
+                if with_asym.iter_time < chosen.iter_time:
+                    chosen = with_asym
+                    offload = plan.offload
+            except ValueError:
+                pass
+        zp_plan = ZebraPlan(zp=zp, R=r, offload=offload, times=times,
+                            comm=comm, predicted=chosen,
+                            predicted_no_asym=no_asym, n_min=n_min,
+                            n_max=n_max)
+        if best is None or chosen.iter_time < best.predicted.iter_time:
+            best = zp_plan
+    return best
+
+
+def sweep_ratios(cfg: ModelConfig, attn_class: DeviceClass,
+                 exp_class: DeviceClass, M: int, Ns: Sequence[int],
+                 global_batch: int, seq_len: int):
+    """Fig. 10: HeterMoE throughput vs expert-GPU count at fixed M."""
+    out = {}
+    for N in Ns:
+        zp = ZPGroupShape(M=M, N=N, attn_class=attn_class,
+                          exp_class=exp_class)
+        out[N] = plan_zp_group(cfg, zp, global_batch, seq_len)
+    return out
+
+
+def replan(cfg: ModelConfig, plan: ZebraPlan, global_batch: int,
+           seq_len: int, *, lost_attn: int = 0, lost_exp: int = 0,
+           slow_factor: float = 1.0) -> ZebraPlan:
+    """Elastic / straggler replanning (repro.ft): recompute the ZP plan for
+    a shrunken group or a slowed expert class (straggler mitigation via
+    expert re-placement — the same Asym-EA mechanism that balances
+    generations also rebalances around degraded devices)."""
+    exp_class = plan.zp.exp_class
+    if slow_factor != 1.0:
+        exp_class = dataclasses.replace(
+            exp_class, name=exp_class.name + "-degraded",
+            peak_flops=exp_class.peak_flops / slow_factor,
+            hbm_bw=exp_class.hbm_bw / slow_factor)
+    M = plan.zp.M - lost_attn
+    N = plan.zp.N - lost_exp
+    if M < 1 or N < 1:
+        raise RuntimeError("ZP group no longer viable; trigger full restart")
+    zp = ZPGroupShape(M=M, N=N, attn_class=plan.zp.attn_class,
+                      exp_class=exp_class)
+    return plan_zp_group(cfg, zp, global_batch, seq_len)

@@ -1,0 +1,180 @@
+"""Analytical profiler — stands in for the paper's §5 measurement profiler.
+
+Produces the quantities Algorithm 1 and the simulator consume:
+
+    T_A^Attn : one layer's attention block (incl. QKV/O projections, gate)
+               for one microbatch, on an attention-GPU class.
+    T_E^Exp  : one layer's expert compute for one microbatch on one expert
+               GPU (depends on the tokens it receives, not which experts).
+    T_E^Attn : a single expert FFN with the same per-GPU batch on an
+               attention-GPU class.
+    memory   : per-expert and attention-side memory -> n_min / n_max.
+
+Timing model per module: max(FLOP term, HBM-traffic term) with per-class
+efficiency constants (hardware.py). Backward = 2x forward (paper §4.2: the
+assignment optimized on forward times reduces both).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.hardware import DeviceClass
+from repro.models.config import ModelConfig
+
+BYTES = 2  # bf16/fp16 compute per the paper's mixed-precision setup
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerTimes:
+    """Per-microbatch forward times (seconds) for one layer.
+
+    Follows the paper's §5 profiler semantics: T_E^Attn is ONE expert FFN
+    over the full per-expert-GPU token batch B on an attention GPU (one
+    expert's actual share is then T_E^Attn * N / n).
+    """
+
+    t_attn: float       # T_A^Attn on the attention class
+    t_exp: float        # T_E^Exp on the expert class (its full token load)
+    t_exp_attn: float   # T_E^Attn on the attention class (full B tokens)
+    t_exp_on_exp: float      # one expert FFN, full B tokens, expert class
+    t_attn_on_exp: float     # attention block on the expert class (EP baseline)
+
+
+def gemm_time(flops: float, bytes_moved: float, dev: DeviceClass) -> float:
+    return max(flops / (dev.peak_flops * dev.gemm_eff),
+               bytes_moved / dev.hbm_bw)
+
+
+def attention_core_time(flops: float, bytes_moved: float,
+                        dev: DeviceClass) -> float:
+    if dev.has_flash_attention:
+        return flops / (dev.peak_flops * dev.attn_eff)
+    # Unfused attention: low achieved compute efficiency AND S-matrix HBM
+    # traffic — whichever binds.
+    return max(flops / (dev.peak_flops * dev.attn_eff_nofa),
+               bytes_moved / dev.hbm_bw)
+
+
+def attention_block_time(cfg: ModelConfig, tokens_per_gpu: int, seq_len: int,
+                         dev: DeviceClass) -> float:
+    """One layer's attention block (projections + SDPA + router) forward."""
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    n_seq = max(tokens_per_gpu // seq_len, 1)
+    proj_flops = 2 * tokens_per_gpu * d * (2 * h * hd + 2 * kh * hd)
+    proj_bytes = BYTES * d * (2 * h * hd + 2 * kh * hd)
+    t = gemm_time(proj_flops, proj_bytes, dev)
+    # SDPA core: 2 matmuls, causal halves the work.
+    causal_frac = 0.5 if cfg.causal else 1.0
+    core_flops = 2 * 2 * n_seq * seq_len * seq_len * h * hd * causal_frac
+    # Unfused: S materialized in HBM ~4 passes (write S, read S, write P,
+    # read P), fp16.
+    core_bytes = 4 * n_seq * h * seq_len * seq_len * BYTES * causal_frac
+    t += attention_core_time(core_flops, core_bytes, dev)
+    if cfg.is_moe:  # router
+        t += gemm_time(2 * tokens_per_gpu * d * cfg.n_experts,
+                       BYTES * d * cfg.n_experts, dev)
+    return t
+
+
+def expert_ffn_time(cfg: ModelConfig, tokens: int, dev: DeviceClass) -> float:
+    """One expert FFN over `tokens` tokens, forward."""
+    d, f = cfg.d_model, cfg.d_ff_expert
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    flops = 2 * tokens * d * f * n_mats
+    byts = BYTES * d * f * n_mats
+    return gemm_time(flops, byts, dev)
+
+
+def mixer_nonattn_time(cfg: ModelConfig, tokens: int, dev: DeviceClass) -> float:
+    """SSD / RG-LRU mixers (for completeness in non-MoE archs)."""
+    d = cfg.d_model
+    if cfg.ssm_state:
+        din = cfg.ssm_expand * d
+        flops = 2 * tokens * d * (2 * din + 2 * cfg.ssm_state) \
+            + 2 * tokens * din * d \
+            + 2 * tokens * cfg.ssm_chunk * (din + 2 * cfg.ssm_state)
+        return gemm_time(flops, BYTES * 3 * d * din, dev)
+    w = cfg.lru_width
+    flops = 2 * tokens * (2 * d * w + 2 * w * w + w * d)
+    return gemm_time(flops, BYTES * (2 * d * w + 2 * w * w + w * d), dev)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZPGroupShape:
+    """A zebra-parallelism group: M attention devices + N expert devices."""
+
+    M: int
+    N: int
+    attn_class: DeviceClass
+    exp_class: DeviceClass
+
+
+def profile_layer(cfg: ModelConfig, zp: ZPGroupShape, global_batch: int,
+                  seq_len: int, num_microbatches: int) -> LayerTimes:
+    """The paper-profiler quantities for one (model, ZP group, batch)."""
+    mb_tokens = global_batch * seq_len // num_microbatches
+    tokens_per_attn_gpu = mb_tokens // zp.M
+    # Each expert GPU receives (top_k-weighted) token copies for its experts.
+    copies = mb_tokens * max(cfg.top_k, 1)
+    tokens_per_exp_gpu = copies // max(zp.N, 1)
+
+    t_attn = attention_block_time(cfg, tokens_per_attn_gpu,
+                                  seq_len, zp.attn_class)
+    t_exp = expert_ffn_time(cfg, tokens_per_exp_gpu, zp.exp_class)
+    t_exp_attn = expert_ffn_time(cfg, tokens_per_exp_gpu, zp.attn_class)
+    t_exp_on_exp = expert_ffn_time(cfg, tokens_per_exp_gpu, zp.exp_class)
+    t_attn_on_exp = attention_block_time(cfg, tokens_per_attn_gpu, seq_len,
+                                         zp.exp_class)
+    return LayerTimes(t_attn=t_attn, t_exp=t_exp, t_exp_attn=t_exp_attn,
+                      t_exp_on_exp=t_exp_on_exp,
+                      t_attn_on_exp=t_attn_on_exp)
+
+
+# ---------------------------------------------------------------------------
+# Memory estimation -> n_min / n_max for Asym-EA
+# ---------------------------------------------------------------------------
+
+def expert_memory_bytes(cfg: ModelConfig, tokens_per_expert: int) -> float:
+    """Weights + grads + Adam states + activations for ONE expert FFN."""
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    w = n_mats * cfg.d_model * cfg.d_ff_expert
+    weight_grad_opt = w * (BYTES + BYTES + 8)  # bf16 w, bf16 g, f32 m+v
+    acts = tokens_per_expert * cfg.d_ff_expert * BYTES * 2  # ckpt boundary
+    return weight_grad_opt + acts
+
+
+def attention_side_memory_bytes(cfg: ModelConfig, tokens_per_gpu: int) -> float:
+    """Non-expert params + states + activations per attention GPU."""
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    per_layer = d * (2 * h * hd + 2 * kh * hd) + 2 * d
+    if cfg.is_moe:
+        per_layer += d * cfg.n_experts
+    w = per_layer * cfg.n_layers + 2 * cfg.vocab_size * d
+    weight_grad_opt = w * (BYTES + BYTES + 8)
+    # activation checkpointing: one activation per layer boundary + working set
+    acts = cfg.n_layers * tokens_per_gpu * d * BYTES \
+        + 6 * tokens_per_gpu * d * BYTES
+    return weight_grad_opt + acts
+
+
+def asym_ea_memory_bounds(cfg: ModelConfig, zp: ZPGroupShape,
+                          global_batch: int, seq_len: int,
+                          num_microbatches: int):
+    """(n_min, n_max): total experts that MUST / CAN move to attention GPUs.
+
+    n_min: experts that do not fit on the N expert GPUs (summed over layers).
+    n_max: spare capacity per attention GPU in expert units.
+    """
+    mb_tokens = global_batch * seq_len // num_microbatches
+    tokens_per_expert = mb_tokens * max(cfg.top_k, 1) // max(cfg.n_experts, 1)
+    e_mem = expert_memory_bytes(cfg, tokens_per_expert)
+    total_expert_mem = cfg.n_layers * cfg.n_experts * e_mem
+    exp_capacity = zp.N * zp.exp_class.mem_bytes * 0.9
+    n_min = max(0, math.ceil((total_expert_mem - exp_capacity) / e_mem))
+
+    a_mem = attention_side_memory_bytes(cfg, mb_tokens // zp.M)
+    spare = zp.attn_class.mem_bytes * 0.9 - a_mem
+    n_max_per_gpu = max(0, int(spare // e_mem))
+    return n_min, n_max_per_gpu * zp.M

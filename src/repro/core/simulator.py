@@ -1,0 +1,250 @@
+"""Discrete-event simulator of heterogeneous MoE training schedules.
+
+This is the paper's own methodology made explicit: HeterMoE ships a
+simulator "to estimate the training throughput under different ZP group
+setups" (§6.4.1 fn.2). Ours simulates the zebra schedule (and the EP /
+DistEP / EP-Ideal / heterogeneity-aware-PP baselines) from per-task
+durations supplied by the analytical profiler, and is what the fig7..fig12
+benchmarks run.
+
+Semantics: tasks execute on four FIFO streams (attention compute, expert
+compute, two link directions). A task starts when its stream predecessor
+AND its data dependencies are done. Iteration time = max end time. This is
+exactly the constraint system of §4.1 (eq. for t(A_{i,j}^F)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Dict, Optional
+
+from repro.core import schedule as S
+from repro.core.asym_ea import AsymEAPlan, apply_offload_to_times
+from repro.core.profiler import LayerTimes
+
+BWD_RATIO = 2.0  # backward ~ 2x forward (paper §4.2)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommTimes:
+    """Per-microbatch all-to-all durations (one direction)."""
+
+    dispatch: float
+    combine: float
+
+
+@dataclasses.dataclass
+class SimResult:
+    iter_time: float
+    attn_busy: float
+    exp_busy: float
+    attn_util: float
+    exp_util: float
+    starts: Dict
+
+    @property
+    def attn_bubble(self) -> float:
+        return 1.0 - self.attn_util
+
+
+def task_duration(task, times: LayerTimes, comm: CommTimes, L: int,
+                  offload, n_experts: int, N: int, M: int,
+                  head_time: float) -> float:
+    kind, phase, l, _ = task
+    scale = BWD_RATIO if phase == "B" else 1.0
+    o_l = offload[l] if 0 <= l < L else 0
+    if kind == "A":
+        return times.t_attn * scale
+    if kind == "E":
+        t_exp, _ = apply_offload_to_times(times, o_l, n_experts, N, M)
+        return t_exp * scale
+    if kind == "X":
+        _, t_extra = apply_offload_to_times(times, o_l, n_experts, N, M)
+        return t_extra * scale
+    if kind == "D":
+        frac = 1.0 - o_l * N / n_experts  # offloaded tokens stay local-ish
+        return comm.dispatch * frac * (1.0 if phase == "F" else 1.0)
+    if kind == "C":
+        frac = 1.0 - o_l * N / n_experts
+        return comm.combine * frac
+    if kind == "H":
+        return head_time
+    raise ValueError(task)
+
+
+def simulate(sched: S.ZebraSchedule, times: LayerTimes, comm: CommTimes,
+             n_experts: int, N: int, M: int,
+             head_time: float = 0.0) -> SimResult:
+    """List-schedule the task system; Kahn topological order over
+    (dependency edges + stream-FIFO edges)."""
+    L, offload = sched.L, sched.offload
+    preds: Dict = defaultdict(list)
+    succs: Dict = defaultdict(list)
+    indeg: Dict = defaultdict(int)
+    tasks = sched.all_tasks()
+    tset = set(tasks)
+
+    def add_edge(a, b):
+        preds[b].append(a)
+        succs[a].append(b)
+        indeg[b] += 1
+
+    for stream_tasks in sched.streams.values():
+        for a, b in zip(stream_tasks, stream_tasks[1:]):
+            add_edge(a, b)
+    for t in tasks:
+        for d in S.dependencies(t, L, offload):
+            if d in tset:
+                add_edge(d, t)
+
+    end: Dict = {}
+    start: Dict = {}
+    q = deque([t for t in tasks if indeg[t] == 0])
+    done = 0
+    while q:
+        t = q.popleft()
+        done += 1
+        st = max((end[p] for p in preds[t]), default=0.0)
+        dur = task_duration(t, times, comm, L, offload, n_experts, N, M,
+                            head_time)
+        start[t] = st
+        end[t] = st + dur
+        for s_ in succs[t]:
+            indeg[s_] -= 1
+            if indeg[s_] == 0:
+                q.append(s_)
+    if done != len(tasks):
+        raise ValueError("schedule has a dependency cycle")
+
+    total = max(end.values())
+    attn_busy = sum(end[t] - start[t] for t in sched.streams["attn_comp"])
+    exp_busy = sum(end[t] - start[t] for t in sched.streams["exp_comp"])
+    return SimResult(
+        iter_time=total,
+        attn_busy=attn_busy,
+        exp_busy=exp_busy,
+        attn_util=attn_busy / total if total else 0.0,
+        exp_util=exp_busy / total if total else 0.0,
+        starts=start,
+    )
+
+
+# ---------------------------------------------------------------------------
+# System-level throughput models (paper baselines)
+# ---------------------------------------------------------------------------
+
+def comm_times(cfg, global_batch: int, seq_len: int, R: int,
+               link_bw: float, M: int, N: int) -> CommTimes:
+    """All-to-all volume per microbatch: every routed token copy crosses the
+    bipartite cut once per direction (paper: no extra communication vs EP)."""
+    mb_tokens = global_batch * seq_len // R
+    byts = mb_tokens * max(cfg.top_k, 1) * cfg.d_model * 2  # bf16
+    agg_bw = link_bw * min(M, N) if min(M, N) else link_bw
+    t = byts / agg_bw
+    return CommTimes(dispatch=t, combine=t)
+
+
+def simulate_hetermoe(cfg, times: LayerTimes, comm: CommTimes, R: int,
+                      M: int, N: int, plan: Optional[AsymEAPlan] = None,
+                      head_time: float = 0.0) -> SimResult:
+    offload = plan.offload if plan is not None else tuple([0] * cfg.n_layers)
+    sched = S.canonical_schedule(cfg.n_layers, R, offload)
+    return simulate(sched, times, comm, cfg.n_experts, N, M, head_time)
+
+
+def simulate_distep(cfg, times: LayerTimes, comm: CommTimes, M: int,
+                    N: int, head_time: float = 0.0) -> SimResult:
+    """Naive disaggregation: no microbatch pipeline (R=1), no overlap.
+    `times`/`comm` must be profiled at R=1 (whole batch per step)."""
+    sched = S.canonical_schedule(cfg.n_layers, 1, None)
+    return simulate(sched, times, comm, cfg.n_experts, N, M, head_time)
+
+
+def distep_iter_time(cfg, zp, global_batch: int, seq_len: int,
+                     link_bw: float) -> SimResult:
+    """DistEP baseline with its own R=1 profile."""
+    from repro.core import profiler as P
+    times = P.profile_layer(cfg, zp, global_batch, seq_len, 1)
+    comm = comm_times(cfg, global_batch, seq_len, 1, link_bw, zp.M, zp.N)
+    return simulate_distep(cfg, times, comm, zp.M, zp.N)
+
+
+def ep_iter_time(cfg, zp, global_batch: int, seq_len: int,
+                 link_bw: float) -> float:
+    """Vanilla EP over the heterogeneous cluster: every GPU computes
+    attention + its expert shard; the slowest class paces every stage."""
+    from repro.core import profiler as P
+    G = zp.M + zp.N
+    tokens_per_gpu = global_batch * seq_len // G
+    copies_per_gpu = tokens_per_gpu * max(cfg.top_k, 1)
+    t_attn = max(
+        P.attention_block_time(cfg, tokens_per_gpu, seq_len, zp.attn_class),
+        P.attention_block_time(cfg, tokens_per_gpu, seq_len, zp.exp_class))
+    t_exp = max(
+        P.expert_ffn_time(cfg, copies_per_gpu, zp.attn_class),
+        P.expert_ffn_time(cfg, copies_per_gpu, zp.exp_class))
+    byts = tokens_per_gpu * max(cfg.top_k, 1) * cfg.d_model * 2
+    t_comm = 2 * byts / min(zp.attn_class.link_bw, zp.exp_class.link_bw)
+    return cfg.n_layers * (1 + BWD_RATIO) * (t_attn + t_exp + t_comm)
+
+
+def homogeneous_ep_iter_time(cfg, dev, n_gpus: int, global_batch: int,
+                             seq_len: int) -> float:
+    """EP on a homogeneous sub-cluster (basis of EP-Ideal and Fig. 11)."""
+    from repro.core import profiler as P
+    tokens_per_gpu = global_batch * seq_len // n_gpus
+    copies_per_gpu = tokens_per_gpu * max(cfg.top_k, 1)
+    t_attn = P.attention_block_time(cfg, tokens_per_gpu, seq_len, dev)
+    t_exp = P.expert_ffn_time(cfg, copies_per_gpu, dev)
+    byts = tokens_per_gpu * max(cfg.top_k, 1) * cfg.d_model * 2
+    t_comm = 2 * byts / dev.link_bw if n_gpus > 1 else 0.0
+    # Tutel/Lina-style overlap on homogeneous EP: comm hides under compute
+    # where possible.
+    t_layer = t_attn + max(t_exp, t_comm)
+    return cfg.n_layers * (1 + BWD_RATIO) * t_layer
+
+
+def ep_ideal_throughput(cfg, zp, global_batch: int, seq_len: int) -> float:
+    """Paper's EP (Ideal): run each class separately, sum throughputs
+    (perfect balance, zero cross-class comm overhead). tokens/sec."""
+    th = 0.0
+    for dev, count in ((zp.attn_class, zp.M), (zp.exp_class, zp.N)):
+        if count == 0:
+            continue
+        t = homogeneous_ep_iter_time(cfg, dev, count, global_batch, seq_len)
+        th += global_batch * seq_len / t
+    return th
+
+
+def pp_iter_time(cfg, zp, global_batch: int, seq_len: int,
+                 n_microbatches: int = 8) -> float:
+    """Heterogeneity-aware pipeline parallelism (Metis/FlashFlex style):
+    layers split across one attention-class stage and one expert-class
+    stage to balance per-stage time, memory permitting; 1F1B timing."""
+    from repro.core import profiler as P
+    tokens = global_batch * seq_len
+    mb_tokens = tokens // n_microbatches
+
+    def stage_time_per_layer(dev):
+        t_a = P.attention_block_time(cfg, mb_tokens, seq_len, dev)
+        t_e = P.expert_ffn_time(cfg, mb_tokens * max(cfg.top_k, 1), dev)
+        return t_a + t_e
+
+    ta = stage_time_per_layer(zp.attn_class)
+    te = stage_time_per_layer(zp.exp_class)
+    # Optimal fractional split of L layers: attention class takes x layers
+    # s.t. x*ta == (L-x)*te  ->  x = L*te/(ta+te); memory bound: the
+    # expert-class stage must fit its layers.
+    L = cfg.n_layers
+    x = L * te / (ta + te)
+    mem_per_layer = (cfg.n_experts * 3 * cfg.d_model * cfg.d_ff_expert * 12
+                     + mb_tokens * cfg.d_model * 2 * 4)
+    max_layers_exp = max(int(zp.exp_class.mem_bytes * zp.N * 0.9
+                             // max(mem_per_layer, 1)), 1)
+    layers_exp = min(L - x, max_layers_exp)
+    layers_attn = L - layers_exp
+    stage = max(layers_attn * ta / max(zp.M, 1) * 1.0,
+                layers_exp * te / max(zp.N, 1) * 1.0)
+    # 1F1B: (R + S - 1) * stage, fwd+bwd
+    return (n_microbatches + 2 - 1) * stage * (1 + BWD_RATIO)

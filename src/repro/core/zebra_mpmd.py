@@ -1,0 +1,325 @@
+"""Zebra parallelism — MPMD engine (the paper-faithful disaggregation).
+
+Two disjoint device groups run two different programs, exactly as HeterMoE
+deploys on mixed-generation clusters:
+
+    attention group (M devices, "newer"):  embeddings, attention blocks,
+        routers, combines, head/loss, and any Asym-EA-offloaded experts.
+    expert group    (N devices, "older"):  expert FFNs only, sharded
+        expert-parallel.
+
+A host-side scheduler walks Theorem 1's task order over (layer, microbatch);
+JAX's async dispatch turns that issue order into overlapped execution — the
+TPU/JAX equivalent of the paper's CUDA-stream scheduling. Activations cross
+groups as capacity-packed [E, C, d] buffers via jax.device_put (the bipartite
+dispatch/combine all-to-alls; volumes identical to EP, per the paper's
+no-extra-communication argument).
+
+Backward uses stage-granular recompute (activation checkpointing, the
+paper's §6.1 setting): each stage's VJP re-executes its forward inside jit.
+The gate-score "residual branch" (§5 Implementation) is handled by
+accumulating both cotangent paths — through the expert outputs' combine
+weights and through the dispatched tokens — at the attention-output
+boundary before the attention-stage backward runs.
+
+On this CPU container the engine is a *correctness* demonstrator (all
+emulated devices share one core); throughput claims live in the simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import zebra_spmd as zs
+from repro.models import modules, stack
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.modules import RunConfig
+from repro.pytree import split_params
+
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class MPMDPlan:
+    """Expert placement: per layer, how many experts live on the attention
+    group (= offload[l] * N, Asym-EA §4.2). Experts [0, n_att) -> attention
+    group; [n_att, E) -> expert group."""
+
+    n_experts: int
+    offload: tuple  # per-layer experts offloaded per expert device
+    N: int
+
+    def n_attn_experts(self, layer: int) -> int:
+        return self.offload[layer] * self.N
+
+
+class ZebraMPMD:
+    """Disaggregated MoE training over two device groups."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, attn_devices,
+                 exp_devices, num_microbatches: int = 2,
+                 offload: Optional[tuple] = None,
+                 capacity_factor: Optional[float] = None):
+        assert cfg.is_moe, "MPMD zebra engine is for MoE architectures"
+        assert not cfg.tail_specs, "use pattern-aligned layer counts"
+        self.cfg = cfg
+        self.run = run
+        self.R = num_microbatches
+        self.M = len(attn_devices)
+        self.N = len(exp_devices)
+        self.attn_mesh = Mesh(np.array(attn_devices), ("adata",))
+        self.exp_mesh = Mesh(np.array(exp_devices), ("expert",))
+        offload = tuple(offload) if offload else tuple([0] * cfg.n_layers)
+        self.plan = MPMDPlan(cfg.n_experts, offload, self.N)
+        self.cf = capacity_factor or cfg.capacity_factor
+        self.spec = cfg.pattern[0]
+        self._build_stages()
+
+    # ------------------------------------------------------------------
+    # Parameter placement
+    # ------------------------------------------------------------------
+
+    def shard_params(self, params):
+        """Split a fused param tree into (attn_side, exp_side) trees placed
+        on their meshes. Expert weights are split per layer by the plan."""
+        a_sh = NamedSharding(self.attn_mesh, P())
+        e_sh = NamedSharding(self.exp_mesh, P("expert"))
+        cfg = self.cfg
+
+        blocks = params["blocks"]["pos0"]
+        attn_side = {"embed": jax.device_put(params["embed"], a_sh),
+                     "final_norm": jax.device_put(params["final_norm"], a_sh)}
+        if "lm_head" in params:
+            attn_side["lm_head"] = jax.device_put(params["lm_head"], a_sh)
+        attn_layers, exp_layers = [], []
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[l], blocks)
+            n_att = self.plan.n_attn_experts(l)
+            ffn = lp.pop("ffn")
+            a_ffn = {"router": ffn["router"]}
+            for k in ("wi_gate", "wi_up", "wo"):
+                a_ffn[k] = ffn[k][:n_att]
+            e_ffn = {k: ffn[k][n_att:] for k in ("wi_gate", "wi_up", "wo")}
+            lp["ffn"] = a_ffn
+            attn_layers.append(jax.device_put(lp, a_sh))
+            exp_layers.append(jax.device_put(e_ffn, e_sh))
+        attn_side["layers"] = attn_layers
+        return attn_side, exp_layers
+
+    # ------------------------------------------------------------------
+    # Stage programs (jitted once per engine)
+    # ------------------------------------------------------------------
+
+    def _build_stages(self):
+        cfg, run, spec = self.cfg, self.run, self.spec
+        cd = run.policy.compute_dtype
+        E = cfg.n_experts
+
+        def embed(p_embed, tokens, positions):
+            return modules.apply_embedding(p_embed, cfg, run.policy, tokens,
+                                           positions)
+
+        def attn_route(p_layer, x, positions):
+            """Attention block + router + dispatch packing (attention mesh).
+
+            Returns h (residual base), packed remote buffer, local expert
+            buffer, and routing metadata arrays."""
+            h, _ = modules.apply_mixer_part(p_layer, cfg, run, spec, x,
+                                            positions)
+            u = modules.apply_norm(p_layer["norm2"], h, run.policy)
+            B, S, d = u.shape
+            u2 = u.reshape(-1, d)
+            weights, idx, aux = modules.moe_route(
+                p_layer["ffn"]["router"], cfg, run.policy, u2)
+            n_att = p_layer["ffn"]["wi_gate"].shape[0]
+            C = max(_round_up(int(u2.shape[0] * cfg.top_k / E * self.cf), 8),
+                    8)
+            buf, (tok, slot, keep, order) = zs._pack(u2, idx, E, C)
+            return (h, buf[n_att:], buf[:n_att], weights, tok, slot, keep,
+                    order, aux)
+
+        def expert_fwd(p_exp, buf):
+            """Expert-group program: grouped FFN over packed buffers."""
+            return zs._experts_dense(p_exp["wi_gate"], p_exp["wi_up"],
+                                     p_exp["wo"], buf, cd)
+
+        def local_expert_fwd(p_layer, buf_local):
+            f = p_layer["ffn"]
+            if f["wi_gate"].shape[0] == 0:
+                return buf_local
+            return zs._experts_dense(f["wi_gate"], f["wi_up"], f["wo"],
+                                     buf_local, cd)
+
+        def combine(h, out_local, out_remote, weights, tok, slot, keep,
+                    order):
+            B, S, d = h.shape
+            out = jnp.concatenate([out_local, out_remote], axis=0)
+            y2 = zs._unpack(out, (tok, slot, keep, order), weights, B * S)
+            return h + y2.reshape(h.shape).astype(h.dtype)
+
+        def head_loss(p, x, targets):
+            xn = modules.apply_norm(p["final_norm"], x, run.policy)
+            logits = modules.apply_unembedding(
+                p["embed"], p.get("lm_head"), cfg, run.policy, xn)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, targets[..., None],
+                                       axis=-1)[..., 0]
+            return jnp.mean(nll)
+
+        a_jit = functools.partial(jax.jit)
+        self.embed_f = jax.jit(embed)
+        self.attn_route_f = jax.jit(attn_route)
+        self.expert_f = jax.jit(expert_fwd)
+        self.local_expert_f = jax.jit(local_expert_fwd)
+        self.combine_f = jax.jit(combine)
+        self.head_loss_f = jax.jit(head_loss)
+
+        # Backward (stage-recompute VJPs) --------------------------------
+        self.head_bwd = jax.jit(lambda p, x, t: jax.grad(
+            head_loss, argnums=(0, 1))(p, x, t))
+
+        def combine_bwd(h, out_local, out_remote, weights, tok, slot, keep,
+                        order, g):
+            _, vjp = jax.vjp(
+                lambda h_, ol, orm, w: combine(h_, ol, orm, w, tok, slot,
+                                               keep, order),
+                h, out_local, out_remote, weights)
+            return vjp(g)  # (dh, d_out_local, d_out_remote, d_weights)
+
+        self.combine_bwd_f = jax.jit(combine_bwd)
+
+        def expert_bwd(p_exp, buf, g):
+            _, vjp = jax.vjp(lambda p, b: expert_fwd(p, b), p_exp, buf)
+            return vjp(g)  # (d_params, d_buf)
+
+        self.expert_bwd_f = jax.jit(expert_bwd)
+
+        def local_expert_bwd(p_layer, buf, g):
+            _, vjp = jax.vjp(lambda p, b: local_expert_fwd(p, b), p_layer,
+                             buf)
+            return vjp(g)
+
+        self.local_expert_bwd_f = jax.jit(local_expert_bwd)
+
+        def attn_route_bwd(p_layer, x, positions, g_h, g_buf_remote,
+                           g_buf_local, g_weights):
+            """Backward of attn_route. The cotangent of h arrives already
+            accumulated from BOTH branches (expert path via dispatched
+            tokens g_buf*, gate path via g_weights + residual g_h) — the
+            paper's two-branch backward handling."""
+            def fwd(p, x_):
+                h, br, bl, w, *_meta, _aux = attn_route(p, x_, positions)
+                return (h, br, bl, w)
+            _, vjp = jax.vjp(fwd, p_layer, x)
+            return vjp((g_h, g_buf_remote, g_buf_local, g_weights))
+
+        self.attn_route_bwd_f = jax.jit(attn_route_bwd)
+
+        def embed_bwd(p_embed, tokens, positions, g):
+            _, vjp = jax.vjp(lambda p: embed(p, tokens, positions), p_embed)
+            return vjp(g)[0]
+
+        self.embed_bwd_f = jax.jit(embed_bwd)
+
+    # ------------------------------------------------------------------
+    # Forward + backward in Theorem-1 issue order
+    # ------------------------------------------------------------------
+
+    def _to_exp(self, x):
+        return jax.device_put(x, NamedSharding(self.exp_mesh, P("expert")))
+
+    def _to_attn(self, x):
+        return jax.device_put(x, NamedSharding(self.attn_mesh, P()))
+
+    def train_step(self, attn_side, exp_layers, tokens, targets):
+        """One full training iteration. Returns (loss, grads_attn,
+        grads_exp) living on their home meshes."""
+        cfg, R = self.cfg, self.R
+        B = tokens.shape[0]
+        assert B % R == 0
+        toks = tokens.reshape(R, B // R, -1)
+        tgts = targets.reshape(R, B // R, -1)
+        S = toks.shape[-1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                     (B // R, S))
+        L = cfg.n_layers
+
+        # ---- forward: layer-major, microbatch-minor (Theorem 1) ----
+        batch_sh = NamedSharding(self.attn_mesh, P("adata"))
+        x: Dict = {}
+        saved: Dict = {}
+        for j in range(R):
+            tj = jax.device_put(toks[j], batch_sh)
+            x[(0, j)] = self.embed_f(attn_side["embed"], tj, positions)
+        for l in range(L):
+            for j in range(R):
+                out = self.attn_route_f(attn_side["layers"][l], x[(l, j)],
+                                        positions)
+                (h, buf_r, buf_l, w, tok, slot, keep, order, aux) = out
+                buf_dev = self._to_exp(buf_r)           # dispatch a2a
+                o_rem = self.expert_f(exp_layers[l], buf_dev)
+                o_rem = self._to_attn(o_rem)            # combine a2a
+                o_loc = self.local_expert_f(attn_side["layers"][l], buf_l)
+                y = self.combine_f(h, o_loc, o_rem, w, tok, slot, keep,
+                                   order)
+                saved[(l, j)] = (h, buf_r, buf_l, w, tok, slot, keep, order,
+                                 o_loc, o_rem)
+                x[(l + 1, j)] = y
+
+        # ---- head + backward, Theorem-1 reverse order ----
+        grads_a = jax.tree.map(jnp.zeros_like, attn_side)
+        grads_e = [jax.tree.map(jnp.zeros_like, p) for p in exp_layers]
+        losses = []
+        g_x: Dict = {}
+        for j in range(R):
+            head_in = {"final_norm": attn_side["final_norm"],
+                       "embed": attn_side["embed"]}
+            if "lm_head" in attn_side:
+                head_in["lm_head"] = attn_side["lm_head"]
+            losses.append(self.head_loss_f(head_in, x[(L, j)], tgts[j]))
+            gp, gx = self.head_bwd(head_in, x[(L, j)], tgts[j])
+            for k in ("final_norm", "embed", "lm_head"):
+                if k in gp:
+                    grads_a[k] = jax.tree.map(jnp.add, grads_a[k], gp[k])
+            g_x[(L, j)] = gx
+
+        for l in range(L - 1, -1, -1):
+            for j in range(R):
+                (h, buf_r, buf_l, w, tok, slot, keep, order, o_loc,
+                 o_rem) = saved.pop((l, j))
+                dh, d_ol, d_or, dw = self.combine_bwd_f(
+                    h, o_loc, o_rem, w, tok, slot, keep, order, g_x[(l + 1, j)])
+                d_or_dev = self._to_exp(d_or)           # grad dispatch (C^B)
+                gpe, d_buf_r = self.expert_bwd_f(
+                    exp_layers[l], self._to_exp(buf_r), d_or_dev)
+                grads_e[l] = jax.tree.map(jnp.add, grads_e[l], gpe)
+                d_buf_r = self._to_attn(d_buf_r)        # grad combine (D^B)
+                gpl, d_buf_l = self.local_expert_bwd_f(
+                    attn_side["layers"][l], buf_l, d_ol)
+                gpa, dx = self.attn_route_bwd_f(
+                    attn_side["layers"][l], x[(l, j)], positions, dh,
+                    d_buf_r, d_buf_l, dw)
+                gpa = jax.tree.map(jnp.add, gpa, gpl)
+                grads_a["layers"][l] = jax.tree.map(
+                    jnp.add, grads_a["layers"][l], gpa)
+                g_x[(l, j)] = dx
+
+        for j in range(R):
+            ge = self.embed_bwd_f(attn_side["embed"], toks[j], positions,
+                                  g_x[(0, j)])
+            grads_a["embed"] = jax.tree.map(jnp.add, grads_a["embed"], ge)
+
+        loss = sum(losses) / R
+        scale = 1.0 / R
+        grads_a = jax.tree.map(lambda g: g * scale, grads_a)
+        grads_e = [jax.tree.map(lambda g: g * scale, g) for g in grads_e]
+        return loss, grads_a, grads_e

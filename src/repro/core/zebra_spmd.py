@@ -1,0 +1,265 @@
+"""Zebra parallelism — single-program (SPMD) engine.
+
+The paper's ZP overlaps (a) attention compute of microbatch k with expert
+compute of microbatch k-1 and (b) compute with dispatch/combine all-to-alls,
+using CUDA streams. The TPU/XLA adaptation: the MoE layer is executed as a
+``lax.scan`` software pipeline whose step k computes
+
+    attention(mb k)     ||     dispatch+experts+combine(mb k-1)
+
+with no data dependence between the two halves — XLA's async scheduler then
+overlaps them and the collectives, which is the TPU-native equivalent of
+multi-stream scheduling (DESIGN.md §2). Autodiff of the scan reverses the
+pipeline, reproducing the paper's backward zigzag for free.
+
+Two expert-parallel dispatch modes (ZebraConfig.mode):
+
+  * "alltoall"   — paper-faithful EP: token batch sharded over the expert
+    ("model") axis too; tokens are capacity-packed per expert and exchanged
+    with ``lax.all_to_all`` (dispatch), computed on their expert shard, and
+    exchanged back (combine). Microbatching requires global_batch >=
+    R * n_batch_shards.
+  * "replicated" — TPU-native hybrid (TP attention + EP experts): batch is
+    sharded over "data" only, so activations are replicated across the
+    expert axis; each expert shard *selects* its own tokens locally (the
+    dispatch all-to-all becomes free) and partial outputs are combined with
+    a psum. Enables zebra pipelining at full-pod scale where the per-chip
+    batch is 1 sequence.
+
+Both modes are numerically equivalent to models/modules.apply_moe up to
+capacity drops (tests use capacity_factor >= n_experts/top_k for equality).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import modules
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.modules import RunConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ZebraConfig:
+    num_microbatches: int = 4
+    mode: str = "replicated"  # replicated | alltoall
+    ep_axis: str = "model"
+    batch_axes: tuple = ("data",)  # axes the token batch is sharded over
+    capacity_factor: float = 1.25
+    pipeline: bool = True  # False -> sequential EP (paper's "EP"/DistEP)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Local capacity packing (shared by both modes)
+# ---------------------------------------------------------------------------
+
+def _pack(x, idx, E: int, C: int):
+    """Pack tokens into fixed [E, C, d] buffers by routed expert.
+
+    x: [T, d]; idx: [T, k]. Returns (buf [E,C,d], meta). Tokens beyond
+    capacity are dropped (residual passthrough, standard GShard semantics).
+
+    All d-wide data movement is GATHERS driven by cheap int32 index maps
+    (scatters of [*, d] values are slow on TPU and are charged ~2x the
+    traffic in the HLO byte model).
+    """
+    T, d = x.shape
+    k = idx.shape[1]
+    flat = idx.reshape(-1)
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = jnp.take(flat, order)
+    counts = jnp.bincount(flat, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < C
+    slot = sorted_e * C + jnp.where(keep, pos_in_e, 0)
+    tok = order // k
+    # slot -> source-row map (cheap int32 scatter; dropped entries write to
+    # a trash slot so they can never shadow a kept slot). Row T of the
+    # padded source is the zero row.
+    slot_or_trash = jnp.where(keep, slot, E * C)
+    idx_map = jnp.full((E * C + 1,), T, jnp.int32).at[slot_or_trash].set(
+        tok.astype(jnp.int32))[:E * C]
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    buf = jnp.take(x_pad, idx_map, axis=0)  # [E*C, d] gather
+    return buf.reshape(E, C, d), (tok, slot, keep, order)
+
+
+def _unpack(buf, meta, weights, T: int):
+    """Weighted combine back to [T, d] — inverse-permutation gather +
+    reshape-sum over the k copies (no d-wide scatter)."""
+    tok, slot, keep, order = meta
+    d = buf.shape[-1]
+    k = order.shape[0] // T
+    vals = jnp.take(buf.reshape(-1, d), slot, axis=0)  # [T*k, d] sorted
+    w = jnp.take(weights.reshape(-1), order)
+    vals = vals * jnp.where(keep, w, 0.0).astype(vals.dtype)[:, None]
+    inv = jnp.argsort(order)  # inverse permutation -> token-major order
+    return jnp.take(vals, inv, axis=0).reshape(T, k, d).sum(axis=1)
+
+
+def _experts_dense(wi_gate, wi_up, wo, buf, cd):
+    """Per-expert FFN over packed buffers. buf: [E_loc, C, d]."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wi_gate.astype(cd)))
+    u = jnp.einsum("ecd,edf->ecf", buf, wi_up.astype(cd))
+    return jnp.einsum("ecf,efd->ecd", g * u, wo.astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel MoE FFN (shard_map)
+# ---------------------------------------------------------------------------
+
+def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
+                zcfg: ZebraConfig) -> Callable:
+    """Returns moe_fn(ffn_params, x2d [T,d]) -> (y2d, aux), sharded."""
+    E = cfg.n_experts
+    k = cfg.top_k
+    ep = zcfg.ep_axis
+    n_ep = mesh.shape[ep]
+    assert E % n_ep == 0, f"experts {E} must divide over {ep}={n_ep}"
+    E_loc = E // n_ep
+    cd = run.policy.compute_dtype
+
+    ba = tuple(zcfg.batch_axes)
+    if zcfg.mode == "alltoall" and ep not in ba:
+        ba = ba + (ep,)
+    batch_spec = P(ba, None)
+    ffn_specs = {
+        "router": P(None, None),
+        "wi_gate": P(ep, None, None),
+        "wi_up": P(ep, None, None),
+        "wo": P(ep, None, None),
+    }
+
+    def local_route(router_w, x):
+        weights, idx, aux = modules.moe_route(router_w, cfg, run.policy, x)
+        # aux losses are means over the (sharded) token dim -> pmean.
+        aux = {k_: jax.lax.pmean(v, ba) for k_, v in aux.items()}
+        return weights, idx, aux
+
+    if zcfg.mode == "replicated":
+        def fn(ffn, x):  # x: [T_loc, d] (replicated over ep axis)
+            T = x.shape[0]
+            weights, idx, aux = local_route(ffn["router"], x)
+            my = jax.lax.axis_index(ep)
+            e_off = my * E_loc
+            local = (idx >= e_off) & (idx < e_off + E_loc)
+            idx_loc = jnp.where(local, idx - e_off, E_loc)  # E_loc = drop
+            C = max(_round_up(int(T * k / E * zcfg.capacity_factor), 8), 8)
+            buf, meta = _pack(x, idx_loc, E_loc + 1, C)
+            out = _experts_dense(ffn["wi_gate"], ffn["wi_up"], ffn["wo"],
+                                 buf[:E_loc], cd)
+            out = jnp.concatenate(
+                [out, jnp.zeros((1, C, x.shape[1]), out.dtype)], axis=0)
+            y = _unpack(out, meta, weights, T)
+            y = jax.lax.psum(y, ep)  # combine partial expert outputs
+            return y, aux
+
+    else:  # alltoall
+        def fn(ffn, x):  # x: [T_loc, d], batch sharded over ep axis as well
+            T = x.shape[0]
+            weights, idx, aux = local_route(ffn["router"], x)
+            C = max(_round_up(int(T * k / E * zcfg.capacity_factor), 8), 8)
+            buf, meta = _pack(x, idx, E, C)  # [E, C, d]
+            buf = buf.reshape(n_ep, E_loc, C, x.shape[1])
+            # Dispatch: exchange expert-major buffers across the EP axis.
+            recv = jax.lax.all_to_all(buf, ep, split_axis=0, concat_axis=0,
+                                      tiled=False)
+            recv = jnp.swapaxes(recv, 0, 1).reshape(E_loc, n_ep * C,
+                                                    x.shape[1])
+            out = _experts_dense(ffn["wi_gate"], ffn["wi_up"], ffn["wo"],
+                                 recv, cd)
+            out = jnp.swapaxes(out.reshape(E_loc, n_ep, C, x.shape[1]), 0, 1)
+            # Combine: reverse all-to-all.
+            back = jax.lax.all_to_all(out, ep, split_axis=0, concat_axis=0,
+                                      tiled=False)
+            y = _unpack(back.reshape(E, C, -1), meta, weights, T)
+            return y, aux
+
+    in_specs = (ffn_specs, batch_spec)
+    out_specs = (batch_spec, P())
+
+    def moe_fn(ffn_params, x2d):
+        sm = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        return sm(ffn_params, x2d)
+
+    return moe_fn
+
+
+# ---------------------------------------------------------------------------
+# Zebra-pipelined MoE layer (the layer_override for models/stack.py)
+# ---------------------------------------------------------------------------
+
+def make_layer_override(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
+                        zcfg: ZebraConfig) -> Callable:
+    """Build the stack-level layer override implementing zebra parallelism."""
+    moe_fn = make_ep_moe(mesh, cfg, run, zcfg)
+
+    def override(layer_params, spec: LayerSpec, x, positions):
+        B, S, d = x.shape
+        R = zcfg.num_microbatches if zcfg.pipeline else 1
+        while R > 1 and B % R:
+            R -= 1
+
+        def attn_part(mb_x, mb_pos):
+            h, _ = modules.apply_mixer_part(layer_params, cfg, run, spec,
+                                            mb_x, mb_pos)
+            u = modules.apply_norm(layer_params["norm2"], h, run.policy)
+            return h, u
+
+        def expert_part(h, u):
+            y2, aux = moe_fn(layer_params["ffn"], u.reshape(-1, d))
+            return h + y2.reshape(h.shape).astype(h.dtype), aux
+
+        if R == 1:
+            h, u = attn_part(x, positions)
+            y, aux = expert_part(h, u)
+            return y, aux
+
+        xs = x.reshape(R, B // R, S, d)
+        ps = positions.reshape(R, B // R, S)
+
+        h0, u0 = attn_part(xs[0], ps[0])
+
+        def body(carry, inp):
+            h_prev, u_prev = carry
+            mb_x, mb_pos = inp
+            # These two halves are data-independent: XLA overlaps the expert
+            # compute + collectives of mb k-1 with attention of mb k.
+            y_prev, aux = expert_part(h_prev, u_prev)
+            h_k, u_k = attn_part(mb_x, mb_pos)
+            return (h_k, u_k), (y_prev, aux)
+
+        if cfg.unroll:
+            carry = (h0, u0)
+            ys_l, auxs_l = [], []
+            for kk in range(1, R):
+                carry, (y_prev, a) = body(carry, (xs[kk], ps[kk]))
+                ys_l.append(y_prev)
+                auxs_l.append(a)
+            ys = jnp.stack(ys_l)  # R >= 2 here
+            auxs = jax.tree.map(lambda *vs: jnp.stack(vs), *auxs_l)
+            h_l, u_l = carry
+        else:
+            (h_l, u_l), (ys, auxs) = jax.lax.scan(body, (h0, u0),
+                                                  (xs[1:], ps[1:]))
+        y_last, aux_last = expert_part(h_l, u_l)
+        y = jnp.concatenate([ys, y_last[None]], axis=0).reshape(B, S, d)
+        # aux losses are per-token means: average them over microbatches.
+        aux = jax.tree.map(lambda a, b: (jnp.sum(a, axis=0) + b) / R, auxs,
+                           aux_last)
+        return y, aux
+
+    return override

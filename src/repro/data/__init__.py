@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, DataLoader, MemmapSource,
+                                 SyntheticSource, write_token_bin)
+
+__all__ = ["DataConfig", "DataLoader", "MemmapSource", "SyntheticSource",
+           "write_token_bin"]

@@ -1,0 +1,109 @@
+"""Data pipeline: deterministic, shardable, resumable.
+
+Two sources behind one interface:
+  * SyntheticSource — PRNG tokens keyed by (seed, step); zero I/O, fully
+    deterministic, used by smoke tests and dry-runs.
+  * MemmapSource — flat token .bin on disk (np.uint16/uint32 memmap),
+    sequence-chunked; deterministic mapping (step, host) -> file offsets so
+    restarting at step k reproduces the exact stream (checkpoint/resume).
+
+Batches are {"tokens": [B, S], "targets": [B, S]} with targets = next-token
+shift. Multi-host: each host materializes only its batch shard
+(host_index/host_count), matching jax.make_array_from_process_local_data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    path: Optional[str] = None  # memmap .bin (None -> synthetic)
+    dtype: str = "uint16"
+
+
+class SyntheticSource:
+    def __init__(self, cfg: DataConfig, host_index: int = 0,
+                 host_count: int = 1):
+        self.cfg = cfg
+        self.host_index = host_index
+        self.host_count = host_count
+        assert cfg.global_batch % host_count == 0
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        b_loc = cfg.global_batch // self.host_count
+        key = jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(cfg.seed), step), self.host_index)
+        toks = jax.random.randint(key, (b_loc, cfg.seq_len + 1), 0,
+                                  cfg.vocab_size, jnp.int32)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+class MemmapSource:
+    def __init__(self, cfg: DataConfig, host_index: int = 0,
+                 host_count: int = 1):
+        assert cfg.path is not None
+        self.cfg = cfg
+        self.host_index = host_index
+        self.host_count = host_count
+        self.data = np.memmap(cfg.path, dtype=np.dtype(cfg.dtype), mode="r")
+        self.n_seqs = (len(self.data) - 1) // cfg.seq_len
+        if self.n_seqs < 1:
+            raise ValueError("dataset smaller than one sequence")
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        b_loc = cfg.global_batch // self.host_count
+        base = step * cfg.global_batch + self.host_index * b_loc
+        rows = [(base + i) % self.n_seqs for i in range(b_loc)]
+        toks = np.stack([
+            self.data[r * cfg.seq_len:(r + 1) * cfg.seq_len + 1]
+            for r in rows]).astype(np.int32)
+        toks = np.minimum(toks, cfg.vocab_size - 1)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "targets": jnp.asarray(toks[:, 1:])}
+
+
+class DataLoader:
+    """Step-indexed loader with checkpointable position."""
+
+    def __init__(self, cfg: DataConfig, host_index: int = 0,
+                 host_count: int = 1, start_step: int = 0):
+        src_cls = MemmapSource if cfg.path else SyntheticSource
+        self.source = src_cls(cfg, host_index, host_count)
+        self.step = start_step
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = self.source.batch_at(self.step)
+        self.step += 1
+        return b
+
+    def state_dict(self) -> dict:
+        return {"step": self.step}
+
+    def load_state_dict(self, st: dict) -> None:
+        self.step = int(st["step"])
+
+
+def write_token_bin(path: str, n_tokens: int, vocab_size: int,
+                    seed: int = 0, dtype: str = "uint16") -> str:
+    """Generate a token .bin for examples/tests."""
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, min(vocab_size, np.iinfo(np.dtype(dtype)).max),
+                       size=(n_tokens,), dtype=np.dtype(dtype))
+    arr.tofile(path)
+    return path

@@ -1,0 +1,6 @@
+from repro.ft.elastic import ElasticController, ElasticEvent
+from repro.ft.monitor import (HeartbeatConfig, HeartbeatMonitor,
+                              StragglerDetector)
+
+__all__ = ["ElasticController", "ElasticEvent", "HeartbeatConfig",
+           "HeartbeatMonitor", "StragglerDetector"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (flash attention, grouped matmul, SSD scan).
+
+Each kernel has a pure-jnp oracle in :mod:`repro.kernels.ref` and a jit'd
+public wrapper in :mod:`repro.kernels.ops`. On non-TPU backends the wrappers
+run the kernel bodies in interpret mode (tests) or fall back to references
+(production CPU path).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,231 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities: layout transposes, tile padding, GQA grouping, custom_vjp
+stitching, and backend selection (real Mosaic lowering on TPU, interpret
+mode everywhere else — same kernel body, Python-executed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import gmm as gmm_kernel
+from repro.kernels import ref
+from repro.kernels import ssd as ssd_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, multiple):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal, window, scale, softcap, block_q, block_k, interpret,
+                q_len, kv_len):
+    """Build a custom_vjp flash fn for one static config (cached)."""
+
+    kw = dict(scale=scale, causal=causal, window=window,
+              block_q=block_q, block_k=block_k, interpret=interpret,
+              q_len=q_len, kv_len=kv_len)
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        o, _ = fa.flash_forward(q, k, v, softcap=softcap, **kw)
+        return o
+
+    def fwd(q, k, v):
+        o, lse = fa.flash_forward(q, k, v, softcap=softcap, **kw)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        if softcap > 0:
+            raise NotImplementedError(
+                "flash backward with softcap: use attn_impl='ref'")
+        dq, dk, dv = fa.flash_backward(q, k, v, o, lse, do, **kw)
+        return dq, dk, dv
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    scale: float | None = None, softcap: float = 0.0,
+                    block_q: int = fa.DEFAULT_BLOCK_Q,
+                    block_k: int = fa.DEFAULT_BLOCK_K,
+                    interpret: bool | None = None):
+    """q: [B,S,H,hd]; k/v: [B,T,KH,hd] -> [B,S,H,hd].
+
+    Structural masking only (causal / sliding window / padding). For
+    arbitrary masks (ring caches, packed segments) use the reference path.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    interpret = _interpret_default() if interpret is None else interpret
+    block_q = min(block_q, _round_up(S, 128))
+    block_k = min(block_k, _round_up(T, 128))
+
+    # [B,S,H,hd] -> [B,H,S,hd], pad sequence dims to block multiples.
+    qt = _pad_to(jnp.swapaxes(q, 1, 2), 2, block_q)
+    kt = _pad_to(jnp.swapaxes(k, 1, 2), 2, block_k)
+    vt = _pad_to(jnp.swapaxes(v, 1, 2), 2, block_k)
+
+    flash = _make_flash(causal, window, float(scale), float(softcap),
+                        block_q, block_k, interpret, S, T)
+    o = flash(qt, kt, vt)
+    return jnp.swapaxes(o[:, :, :S], 1, 2)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul (MoE experts)
+# ---------------------------------------------------------------------------
+
+def _pack_meta(group_sizes, m: int, n_groups: int, block_m: int):
+    """Destination row for each sorted row + group id per m-tile.
+
+    Static padded size: every group padded up to a block_m multiple.
+    """
+    padded = ((group_sizes + block_m - 1) // block_m) * block_m
+    p_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(m)
+    gid = jnp.clip(jnp.sum(row[:, None] >= ends[None, :], axis=-1),
+                   0, n_groups - 1)
+    dest = p_starts[gid] + (row - starts[gid])
+
+    mp = _round_up(m, block_m) + n_groups * block_m  # static upper bound
+    n_tiles = mp // block_m
+    tile_ends = jnp.cumsum(padded // block_m)
+    tile = jnp.arange(n_tiles)
+    tile_group = jnp.clip(
+        jnp.sum(tile[:, None] >= tile_ends[None, :], axis=-1),
+        0, n_groups - 1).astype(jnp.int32)
+    return dest, tile_group, mp
+
+
+@functools.lru_cache(maxsize=None)
+def _make_gmm_packed(block_m, block_k, block_n, interpret, n_groups,
+                     out_dtype_name):
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def gmm_packed(lhs_p, rhs, tile_group):
+        return gmm_kernel.gmm_tiled(lhs_p, rhs, tile_group, block_m=block_m,
+                                    block_k=block_k, block_n=block_n,
+                                    interpret=interpret, out_dtype=out_dtype)
+
+    def fwd(lhs_p, rhs, tile_group):
+        return gmm_packed(lhs_p, rhs, tile_group), (lhs_p, rhs, tile_group)
+
+    def bwd(res, dout):
+        lhs_p, rhs, tile_group = res
+        dout = dout.astype(jnp.float32)
+        dlhs = gmm_kernel.gmm_tiled(
+            dout, jnp.swapaxes(rhs, 1, 2).astype(jnp.float32), tile_group,
+            block_m=block_m, block_k=block_n, block_n=block_k,
+            interpret=interpret, out_dtype=lhs_p.dtype)
+        drhs = gmm_kernel.gmm_dw_tiled(
+            lhs_p.astype(jnp.float32), dout, tile_group, n_groups,
+            block_m=block_m, block_k=block_k, block_n=block_n,
+            interpret=interpret).astype(rhs.dtype)
+        dtile = np.zeros(tile_group.shape, dtype=jax.dtypes.float0)
+        return dlhs, drhs, dtile
+
+    gmm_packed.defvjp(fwd, bwd)
+    return gmm_packed
+
+
+def gmm(lhs, rhs, group_sizes, *, block_m: int = 128, block_k: int = 128,
+        block_n: int = 128, interpret: bool | None = None):
+    """Grouped matmul: lhs [M,K] sorted by group; rhs [G,K,N]; sizes [G].
+
+    Pallas-backed mirror of jax.lax.ragged_dot / ref.gmm.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    M, K = lhs.shape
+    G = rhs.shape[0]
+    dest, tile_group, Mp = _pack_meta(group_sizes.astype(jnp.int32), M, G,
+                                      block_m)
+    lhs_p = jnp.zeros((Mp, K), lhs.dtype).at[dest].set(lhs)
+    fn = _make_gmm_packed(block_m, block_k, block_n, interpret, G,
+                          jnp.dtype(lhs.dtype).name)
+    out_p = fn(lhs_p, rhs, tile_group)
+    return jnp.take(out_p, dest, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2)
+# ---------------------------------------------------------------------------
+
+def ssd(x, dt, A, B, C, *, chunk: int = 128, use_kernel: bool = False,
+        interpret: bool | None = None):
+    """mamba2 SSD scan. x: [b,T,h,hd]; dt: [b,T,h]; A: [h]; B/C: [b,T,ns].
+
+    Returns (y [b,T,h,hd], final_state [b,h,hd,ns] f32).
+    use_kernel=False -> chunked jnp reference (autodiff-native).
+    use_kernel=True  -> Pallas forward, reference-recompute backward.
+    """
+    if not use_kernel:
+        return ref.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssd_kernel_call(x, dt, A, B, C, chunk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_kernel_call(x, dt, A, B, C, chunk, interpret):
+    b, T, h, hd = x.shape
+    ns = B.shape[-1]
+    Q = min(chunk, _round_up(T, 128))
+    la = (dt.astype(jnp.float32) * A[None, None, :]).swapaxes(1, 2)  # [b,h,T]
+    xbar = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    xbar = jnp.moveaxis(xbar, 2, 1)  # [b,h,T,hd]
+    # pad T to chunk multiple; la=0, xbar=0 => padding is a no-op in the scan
+    lap = _pad_to(la.reshape(b * h, T), 1, Q)
+    xbp = _pad_to(xbar.reshape(b * h, T, hd), 1, Q)
+    Bp = _pad_to(B.astype(jnp.float32), 1, Q)
+    Cp = _pad_to(C.astype(jnp.float32), 1, Q)
+    y, state = ssd_kernel.ssd_pallas(xbp, lap, Bp, Cp, h, chunk=Q,
+                                     interpret=interpret)
+    y = y[:, :T].reshape(b, h, T, hd).swapaxes(1, 2).astype(x.dtype)
+    return y, state.reshape(b, h, hd, ns)
+
+
+def _ssd_fwd(x, dt, A, B, C, chunk, interpret):
+    out = _ssd_kernel_call(x, dt, A, B, C, chunk, interpret)
+    return out, (x, dt, A, B, C)
+
+
+def _ssd_bwd(chunk, interpret, res, cts):
+    x, dt, A, B, C = res
+    # Backward = autodiff of the chunked reference (recompute; stage-level
+    # remat — matches the paper's activation-checkpointing training setup).
+    _, vjp = jax.vjp(lambda *a: ref.ssd_chunked(*a, chunk=chunk),
+                     x, dt, A, B, C)
+    return vjp(cts)
+
+
+_ssd_kernel_call.defvjp(_ssd_fwd, _ssd_bwd)

@@ -1,0 +1,182 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret mode
+on CPU, real lowering on TPU). They are also the execution path used on
+backends without Pallas support (this CPU container), so they must be
+jit/grad-friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_BIG_NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Attention oracle
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, mask=None, scale=None, softcap: float = 0.0):
+    """GQA attention. q: [B,S,H,hd]; k/v: [B,T,KH,hd]; mask: [S,T] or [B,S,T].
+
+    Returns [B,S,H,hd] in q.dtype; softmax in f32.
+    """
+    B, S, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = hd ** -0.5 if scale is None else scale
+    qf = q.reshape(B, S, KH, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qf, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        logits = jnp.where(m[:, None, None, :, :], logits, _BIG_NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(q.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_window_mask(q_len: int, kv_len: int, causal: bool, window: int,
+                       q_offset: int = 0):
+    """Structural mask used by the flash kernel path."""
+    qp = jnp.arange(q_len) + q_offset
+    kp = jnp.arange(kv_len)
+    m = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        m &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        m &= (qp[:, None] - kp[None, :]) < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul (MoE expert GEMM) oracle
+# ---------------------------------------------------------------------------
+
+def gmm(lhs, rhs, group_sizes, preferred_element_type=None):
+    """lhs: [M,K] rows sorted by group; rhs: [G,K,N]; group_sizes: [G] int32.
+
+    out[m] = lhs[m] @ rhs[g(m)]   where g(m) is the group row m belongs to.
+    """
+    M = lhs.shape[0]
+    G = rhs.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(M)
+    # group id per row: number of groups fully before this row
+    gid = jnp.sum(row[:, None] >= ends[None, :], axis=-1)
+    gid = jnp.clip(gid, 0, G - 1)
+    out_dtype = preferred_element_type or lhs.dtype
+    rhs_per_row = jnp.take(rhs, gid, axis=0)  # [M,K,N]
+    out = jnp.einsum("mk,mkn->mn", lhs, rhs_per_row,
+                     preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2 state-space duality) oracles
+# ---------------------------------------------------------------------------
+
+def ssd_naive(x, dt, A, B, C, initial_state=None):
+    """Sequential ground truth. All f32 internally.
+
+    x: [b, T, h, d]; dt: [b, T, h]; A: [h]; B,C: [b, T, n].
+    Returns (y [b,T,h,d], final_state [b,h,d,n]).
+    """
+    b, T, h, d = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    a = jnp.exp(dtf * A[None, None, :])  # [b,T,h]
+    xbar = xf * dtf[..., None]  # [b,T,h,d]
+    S0 = (jnp.zeros((b, h, d, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, inp):
+        a_t, xb_t, B_t, C_t = inp  # [b,h], [b,h,d], [b,n], [b,n]
+        S = S * a_t[..., None, None] + xb_t[..., None] * B_t[:, None, None, :]
+        y_t = jnp.einsum("bhdn,bn->bhd", S, C_t)
+        return S, y_t
+
+    inputs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(xbar, 1, 0),
+              jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    S_final, ys = jax.lax.scan(step, S0, inputs)
+    y = jnp.moveaxis(ys, 0, 1)  # [b,T,h,d]
+    return y.astype(x.dtype), S_final
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = 128, initial_state=None):
+    """Chunked (dual-form) SSD — the jnp mirror of the Pallas kernel.
+
+    Same signature/returns as ssd_naive. Matmul-dominant: suitable for
+    training on backends without Pallas.
+    """
+    b, T, h, d = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, Q, h, d)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, Q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, Q, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, Q, n)
+
+    la = dtf * A[None, None, None, :]  # [b,nc,Q,h] log-decay
+    cum = jnp.cumsum(la, axis=2)  # inclusive cumsum within chunk
+    total = cum[:, :, -1, :]  # [b,nc,h]
+    xbar = xf * dtf[..., None]
+
+    # Intra-chunk: masked decay matrix L[i,j] = exp(cum_i - cum_j), j <= i.
+    # The exponent is clamped BEFORE exp: for masked j > i it is positive
+    # and can overflow; where() would then leak inf*0 = NaN into the vjp.
+    G = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)  # [b,nc,Q,Q]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,Q,Q,h]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(tri, diff, -60.0)) * tri
+    M = G[..., None] * L  # [b,nc,Q,Q,h]
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", M, xbar)
+
+    # Per-chunk state contribution and inter-chunk recurrence.
+    w = jnp.exp(total[:, :, None, :] - cum)  # [b,nc,Q,h]
+    S_local = jnp.einsum("bcjn,bcjh,bcjhd->bchdn", Bf, w, xbar)
+    S0 = (jnp.zeros((b, h, d, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def chunk_step(S, inp):
+        S_loc, tot = inp  # [b,h,d,n], [b,h]
+        S_prev = S
+        S = S * jnp.exp(tot)[..., None, None] + S_loc
+        return S, S_prev
+
+    S_final, S_prevs = jax.lax.scan(
+        chunk_step, S0,
+        (jnp.moveaxis(S_local, 1, 0), jnp.moveaxis(total, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # [b,nc,h,d,n] state entering chunk
+    y_inter = jnp.einsum("bcin,bchdn,bcih->bcihd", Cf, S_prevs, jnp.exp(cum))
+
+    y = (y_intra + y_inter).reshape(b, Tp, h, d)[:, :T]
+    return y.astype(x.dtype), S_final
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """Single-token (or short-S) sequential decode update.
+
+    x: [b, S, h, d]; state: [b, h, d, n] f32. Returns (y, new_state).
+    """
+    y, new_state = ssd_naive(x, dt, A, B, C, initial_state=state)
+    return y, new_state

@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: jit lowering
+with ShapeDtypeStruct stand-ins, SPMD partitioning over the production mesh
+(16x16 single pod / 2x16x16 multi-pod), compiled memory analysis (fits?),
+cost analysis (FLOPs/bytes) and collective-traffic parsing for the roofline
+(EXPERIMENTS.md §Dry-run / §Roofline).
+
+Cost methodology: XLA's HloCostAnalysis counts while-loop bodies ONCE, so a
+scanned L-layer stack under-reports FLOPs/bytes/collectives. Each cell is
+therefore compiled twice more with the layer stack UNROLLED at 1 and 2
+pattern-repeats; per-repeat costs are the difference (exact — every repeat
+lowers to the same HLO) and totals are extrapolated to the full depth. The
+memory analysis and the compile-must-succeed proof always come from the
+full scanned production program.
+
+Usage:
+    python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun.csv
+"""
+
+import argparse  # noqa: E402
+import csv  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.inputs import input_specs  # noqa: E402
+from repro.core.zebra_spmd import ZebraConfig  # noqa: E402
+from repro.launch.hlo_analysis import Roofline, collective_bytes  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import registry  # noqa: E402
+from repro.models.config import SHAPES  # noqa: E402
+from repro.models.modules import Policy, RunConfig  # noqa: E402
+from repro.serve.engine import make_serve_program  # noqa: E402
+from repro.train import optimizer as opt  # noqa: E402
+from repro.train.step import make_train_program  # noqa: E402
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytical 'useful' FLOPs per step: 6*N_active*tokens (train),
+    2*N_active*tokens (prefill/decode)."""
+    n = cfg.active_param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * shape.tokens
+
+
+def _compile_variant(cfg, shape, mesh, run, zcfg, constrain_grads=False):
+    """Lower + compile one config variant; returns (compiled, lower_s,
+    compile_s)."""
+    t0 = time.time()
+    if shape.kind == "train":
+        z = zcfg if cfg.is_moe else None
+        program = make_train_program(cfg, mesh, run, shape, zcfg=z,
+                                     donate=True,
+                                     constrain_grads=constrain_grads)
+        import functools
+        oshapes = jax.eval_shape(
+            functools.partial(opt.init_opt_state,
+                              master_weights=program.master_weights),
+            program.param_shapes)
+        batch = input_specs(cfg, shape)
+        lowered = program.train_step.lower(program.param_shapes, oshapes,
+                                           batch)
+    else:
+        sp = make_serve_program(cfg, mesh, run, shape)
+        specs = input_specs(cfg, shape)
+        fronts = {k: v for k, v in specs.items() if k != "tokens"}
+        from repro.train.step import abstract_params
+        pshapes, _ = abstract_params(cfg)
+        if shape.kind == "prefill":
+            lowered = sp.prefill_step.lower(pshapes, sp.state_shapes,
+                                            specs["tokens"], fronts)
+        else:
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = sp.decode_step.lower(pshapes, sp.state_shapes,
+                                           specs["tokens"], idx, fronts)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": {k: float(v) for k, v in coll.items()},
+    }
+
+
+def _unrolled_variant(cfg, repeats: int):
+    P = len(cfg.pattern)
+    tail = len(cfg.tail_specs)
+    return dataclasses.replace(cfg, n_layers=repeats * P + tail, unroll=True)
+
+
+def measured_costs(cfg, shape, mesh, run, zcfg, constrain_grads=False):
+    """Exact per-device costs via 1/2-repeat unrolled extrapolation."""
+    reps_full = cfg.n_pattern_repeats
+    if reps_full <= 2:
+        c = _costs(_compile_variant(dataclasses.replace(cfg, unroll=True),
+                                    shape, mesh, run, zcfg,
+                                    constrain_grads)[0])
+        return c
+    c1 = _costs(_compile_variant(_unrolled_variant(cfg, 1), shape, mesh,
+                                 run, zcfg, constrain_grads)[0])
+    c2 = _costs(_compile_variant(_unrolled_variant(cfg, 2), shape, mesh,
+                                 run, zcfg, constrain_grads)[0])
+
+    def extrap(a, b):
+        return a + max(b - a, 0.0) * (reps_full - 1)
+
+    coll_keys = set(c1["coll"]) | set(c2["coll"])
+    return {
+        "flops": extrap(c1["flops"], c2["flops"]),
+        "bytes": extrap(c1["bytes"], c2["bytes"]),
+        "coll": {k: extrap(c1["coll"].get(k, 0.0), c2["coll"].get(k, 0.0))
+                 for k in coll_keys},
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               zebra_mode: str = "alltoall", microbatches: int = 4,
+               remat: str = "full", costs: bool = True, zcfg=None,
+               param_dtype="float32", chunk_q: int = 512,
+               constrain_grads: bool = False, embed_mode: str = "sharded",
+               capacity_factor: float = 1.25):
+    """Lower + compile one cell; returns the full record dict."""
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped",
+                "reason": "full attention at 524k is O(s^2) - per brief"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    run = RunConfig(policy=Policy(param_dtype=jnp.dtype(param_dtype)),
+                    attn_impl="chunked", moe_impl="gather",
+                    remat=remat, chunk_q=chunk_q, embed_mode=embed_mode)
+    zcfg = zcfg or ZebraConfig(mode=zebra_mode, num_microbatches=microbatches,
+                               capacity_factor=capacity_factor)
+
+    compiled, t_lower, t_compile = _compile_variant(cfg, shape, mesh, run,
+                                                    zcfg, constrain_grads)
+    mem = compiled.memory_analysis()
+    c = measured_costs(cfg, shape, mesh, run, zcfg, constrain_grads) \
+        if costs else _costs(compiled)
+
+    n_dev = mesh.devices.size
+    rf = Roofline(
+        flops_per_device=c["flops"],
+        hbm_bytes_per_device=c["bytes"],
+        collective_bytes_per_device=c["coll"]["total"],
+        n_devices=n_dev,
+        model_flops=model_flops(cfg, shape),
+    )
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "n_devices": n_dev,
+        "flops_per_device": c["flops"],
+        "hbm_bytes_per_device": c["bytes"],
+        "collective_bytes_per_device": c["coll"]["total"],
+        "ring_collective_bytes_per_device": c["coll"].get("ring_total", 0.0),
+        "t_collective_ring_s": round(c["coll"].get("ring_total", 0.0)
+                                     / (50e9 * 3), 6),
+        "coll_breakdown": {k: int(v) for k, v in c["coll"].items()
+                           if k not in ("total", "ring_total") and v},
+        "arg_bytes_per_device": int(mem.argument_size_in_bytes),
+        "temp_bytes_per_device": int(mem.temp_size_in_bytes),
+        "output_bytes_per_device": int(mem.output_size_in_bytes),
+        "total_bytes_per_device": int(per_dev_bytes),
+        "fits_16gb": bool(mem.temp_size_in_bytes
+                          + mem.argument_size_in_bytes < 16e9),
+        "model_flops": model_flops(cfg, shape),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in rf.row().items()},
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--zebra-mode", default="alltoall",
+                    choices=["alltoall", "replicated"])
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--no-costs", action="store_true",
+                    help="skip the unrolled cost extrapolation compiles")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs import ASSIGNED
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records = []
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                t0 = time.time()
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=multi,
+                                     zebra_mode=args.zebra_mode,
+                                     microbatches=args.microbatches,
+                                     remat=args.remat,
+                                     costs=not args.no_costs)
+                except Exception as e:  # a failure here is a system bug
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": f"FAIL: {type(e).__name__}: {e}"}
+                rec["wall_s"] = round(time.time() - t0, 1)
+                records.append(rec)
+                print(json.dumps(rec), flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        keys = sorted({k for r in records for k in r})
+        with open(args.out, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            for r in records:
+                w.writerow({k: (json.dumps(v) if isinstance(v, dict) else v)
+                            for k, v in r.items()})
+    n_ok = sum(r.get("status") == "ok" for r in records)
+    n_skip = sum(r.get("status") == "skipped" for r in records)
+    print(f"\n[dryrun] ok={n_ok} skipped={n_skip} "
+          f"failed={len(records) - n_ok - n_skip}", file=sys.stderr)
+    return 0 if n_ok + n_skip == len(records) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,181 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but not collective
+traffic; we parse the (per-device, post-partitioning) HLO text and sum the
+operand sizes of every collective op, bucketed by kind.
+
+Compiled HLO prints operands as %names (untyped), so per-op operand bytes
+are recovered from the RESULT shape + the replica-group size:
+    all-gather:      operand = result / group_size
+    reduce-scatter:  operand = result * group_size
+    all-reduce / all-to-all / collective-permute: operand = result
+Async pairs (-start/-done) are counted once via the -start op, whose tuple
+result's first element is the operand.
+
+NOTE (cost-analysis caveat, see launch/dryrun.py): XLA's HloCostAnalysis
+counts while-loop bodies ONCE, so FLOPs/bytes of scanned layer stacks are
+under-counted; the dry-run measures an unrolled 1-repeat and 2-repeat
+variant and extrapolates linearly — exact, since every repeat lowers to the
+same body.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+from repro.core import hardware as HW
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit list form {{0,1,2,3},{...}} -> size of first group
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective traffic by op kind.
+
+    Two aggregates:
+      total      — sum of operand sizes (the brief's metric).
+      ring_total — ring-algorithm wire bytes per device:
+                   all-reduce 2·X·(g-1)/g, all-gather/reduce-scatter
+                   X·(g-1)/g on the FULL tensor X, all-to-all X·(g-1)/g,
+                   collective-permute X.
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    ring = {k: 0.0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if re.search(r"(all-gather|all-reduce|all-to-all|reduce-scatter|"
+                     r"collective-permute)-done\(", line):
+            continue
+        kind = m.group(2)
+        result_part = m.group(1)
+        shapes = _SHAPE_RE.findall(result_part)
+        if not shapes:
+            continue
+        g = _group_size(line)
+        if m.group(3):  # async -start: tuple (operand, result, ...)
+            op_bytes = _shape_bytes(*shapes[0])
+            full = op_bytes * g if kind == "all-gather" else op_bytes
+        else:
+            res_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+            if kind == "all-gather":
+                op_bytes = res_bytes // g
+                full = res_bytes
+            elif kind == "reduce-scatter":
+                op_bytes = res_bytes * g
+                full = op_bytes
+            else:
+                op_bytes = res_bytes
+                full = res_bytes
+        out[kind] += op_bytes
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            ring[kind] += 2.0 * full * frac
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            ring[kind] += full * frac
+        else:  # collective-permute
+            ring[kind] += full
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    out["ring_total"] = int(sum(ring[k] for k in COLLECTIVE_OPS))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled (arch x shape x mesh) cell."""
+
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+    model_flops: float  # 6*N_active*D analytical
+
+    peak_flops: float = HW.ROOFLINE_PEAK_FLOPS
+    hbm_bw: float = HW.ROOFLINE_HBM_BW
+    ici_bw: float = HW.ROOFLINE_ICI_BW
+    ici_links: int = 3  # v5e 2D torus: ~3 usable link-pairs per chip
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / (self.ici_bw *
+                                                   self.ici_links)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Perfect-overlap model: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is 'useful'
+        (catches remat / capacity-padding / dispatch waste)."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline lower bound."""
+        denom = (self.step_time_lower_bound * self.n_devices
+                 * self.peak_flops)
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+            "useful_flops_frac": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+        }

@@ -1,0 +1,78 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
+        --smoke --batch 4 --prompt-len 64 --gen 32 --mesh 1x2
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_mesh
+from repro.models import registry
+from repro.models.config import ShapeConfig
+from repro.models.modules import Policy, RunConfig
+from repro.pytree import split_params
+from repro.serve.engine import BatchedServer, make_serve_program
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh", default="1x1")
+    args = ap.parse_args(argv)
+
+    cfg = registry.get_config(args.arch)
+    if args.smoke:
+        cfg = registry.smoke_config(cfg)
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((d, m), ("data", "model"))
+    run = RunConfig(policy=Policy(), attn_impl="ref", moe_impl="gather")
+    max_len = args.prompt_len + args.gen
+    shape = ShapeConfig("cli", "decode", max_len, args.batch)
+    program = make_serve_program(cfg, mesh, run, shape, max_len=max_len)
+
+    key = jax.random.PRNGKey(0)
+    from repro.models import stack
+    with mesh:
+        params = jax.jit(
+            lambda: split_params(stack.init_model(key, cfg))[0],
+            out_shardings=program.param_shardings)()
+    server = BatchedServer(program, params, args.batch, max_len)
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    fronts = {}
+    if cfg.is_encdec:
+        fronts["encoder_embeds"] = jnp.zeros(
+            (args.batch, cfg.encoder_seq, cfg.d_model),
+            run.policy.compute_dtype)
+    if cfg.vision_seq > 0:
+        fronts["vision_embeds"] = jnp.zeros(
+            (args.batch, cfg.vision_seq, cfg.vision_dim or cfg.d_model),
+            run.policy.compute_dtype)
+
+    t0 = time.time()
+    server.submit_prefill(prompts, fronts)
+    out = [server.tokens]
+    for _ in range(args.gen - 1):
+        out.append(server.step(fronts))
+    toks = jnp.concatenate(out, axis=1)
+    dt = time.time() - t0
+    print(f"[serve] arch={cfg.name} generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(toks[:, :16])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models import registry
+
+__all__ = ["LayerSpec", "ModelConfig", "registry"]

@@ -1,0 +1,288 @@
+"""Generic model assembly: embedding -> scanned block stack -> head.
+
+The layer stack is `pattern` (a tuple of LayerSpecs) repeated
+``n_pattern_repeats`` times via lax.scan over stacked params (keeps HLO size
+O(len(pattern)) — essential for 100-layer dry-runs), plus an unrolled tail.
+Covers decoder-only LMs, mamba2, recurrentgemma, whisper (enc-dec) and
+llama-3.2-vision through one code path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.modules import Policy, RunConfig
+from repro.pytree import Param, fan_in_init, merge_params, split_params
+
+# aux-loss keys kept static so scan carries have a fixed tree structure
+AUX_KEYS = ("moe_aux_loss", "moe_z_loss")
+
+
+def _zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _acc_aux(acc, aux):
+    return {k: acc[k] + jnp.asarray(aux.get(k, 0.0), jnp.float32)
+            for k in AUX_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block_stack(key, cfg: ModelConfig, pattern, n_repeats: int):
+    """Params for `pattern` scanned n_repeats times: one stacked tree per
+    pattern position, leading dim = n_repeats, logical axis 'layers'."""
+    out = {}
+    for pos, spec in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, pos), n_repeats)
+        template = modules.init_layer(keys[0], cfg, spec)
+        _, axes = split_params(template)
+
+        def init_values(k, _spec=spec):
+            return split_params(modules.init_layer(k, cfg, _spec))[0]
+
+        values = jax.vmap(init_values)(keys)
+        from repro.pytree import prepend_axis
+        out[f"pos{pos}"] = merge_params(values, prepend_axis(axes, "layers"))
+    return out
+
+
+def init_model(key, cfg: ModelConfig):
+    """Returns a tree of Param (use pytree.split_params before jit)."""
+    ks = jax.random.split(key, 8)
+    params = {"embed": modules.init_embedding(ks[0], cfg)}
+
+    if cfg.n_pattern_repeats > 0:
+        params["blocks"] = _init_block_stack(ks[1], cfg, cfg.pattern,
+                                             cfg.n_pattern_repeats)
+    for i, spec in enumerate(cfg.tail_specs):
+        params[f"tail{i}"] = modules.init_layer(
+            jax.random.fold_in(ks[2], i), cfg, spec)
+
+    params["final_norm"] = modules.init_norm(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = Param(
+            fan_in_init(ks[3], (cfg.vocab_size, cfg.d_model), jnp.float32,
+                        fan_in=cfg.d_model), ("vocab", "embed"))
+
+    if cfg.is_encdec:
+        enc_spec = LayerSpec(mixer="attn", ffn="dense", causal=False)
+        params["encoder"] = {
+            "blocks": _init_block_stack(ks[4], cfg, (enc_spec,),
+                                        cfg.n_encoder_layers),
+            "final_norm": modules.init_norm(cfg),
+        }
+    if cfg.vision_seq > 0:
+        vdim = cfg.vision_dim or cfg.d_model
+        params["vision_proj"] = Param(
+            fan_in_init(ks[5], (vdim, cfg.d_model), jnp.float32, fan_in=vdim),
+            (None, "embed"))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
+                 x, positions, states=None, tail_states=None,
+                 encoder_out=None, encoder_positions=None, cache_index=None,
+                 layer_override: Optional[Callable] = None,
+                 moe_override: Optional[Callable] = None):
+    """Run the scanned pattern stack + tail. Returns (x, new_states, aux)."""
+    aux = _zero_aux()
+    decode = states is not None
+
+    def one_block(x, block_params, block_states):
+        """Apply all pattern positions once. Returns (x, new_states, aux)."""
+        new_states = {}
+        a = _zero_aux()
+        # sequence-parallel layer boundary (no-op unless act rule 'seq' set)
+        x = run.constrain(x, ("batch", "seq", None))
+        for pos, spec in enumerate(pattern):
+            p = block_params[f"pos{pos}"]
+            st = block_states.get(f"pos{pos}") if block_states else None
+            if (layer_override is not None and spec.ffn == "moe"
+                    and not decode):
+                y, laux = layer_override(p, spec, x, positions)
+                ns = None
+            else:
+                y, ns, laux = modules.apply_layer(
+                    p, cfg, run, spec, x, positions, state=st,
+                    encoder_out=encoder_out,
+                    encoder_positions=encoder_positions,
+                    cache_index=cache_index, moe_override=moe_override)
+            x = y
+            a = _acc_aux(a, laux)
+            if decode:
+                new_states[f"pos{pos}"] = ns
+        return x, new_states, a
+
+    if blocks is not None:
+        def scan_body(carry, xs):
+            x, aux_acc = carry
+            bp, bs = xs
+            x, ns, a = one_block(x, bp, bs)
+            return (x, _acc_aux(aux_acc, a)), ns
+
+        if run.remat != "none" and not decode:
+            policy = None
+            if run.remat == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            scan_body = jax.checkpoint(scan_body, policy=policy,
+                                       prevent_cse=False)
+
+        block_states = states.get("blocks") if decode else None
+        if cfg.unroll:
+            new_bs = []
+            carry = (x, aux)
+            n_rep = cfg.n_pattern_repeats
+            for i in range(n_rep):
+                bp = jax.tree.map(lambda v: v[i], blocks)
+                bs = (jax.tree.map(lambda v: v[i], block_states)
+                      if block_states is not None else None)
+                carry, ns = scan_body(carry, (bp, bs))
+                new_bs.append(ns)
+            (x, aux) = carry
+            new_block_states = (jax.tree.map(
+                lambda *vs: jnp.stack(vs), *new_bs) if decode else None)
+        else:
+            (x, aux), new_block_states = jax.lax.scan(
+                scan_body, (x, aux), (blocks, block_states))
+    else:
+        new_block_states = None
+
+    new_tail_states = []
+    for i, (spec, tp) in enumerate(tails):
+        st = tail_states[i] if tail_states else None
+        x, ns, a = one_block_single(tp, cfg, run, spec, x, positions, st,
+                                    encoder_out, encoder_positions,
+                                    cache_index, layer_override, decode,
+                                    moe_override)
+        aux = _acc_aux(aux, a)
+        new_tail_states.append(ns)
+
+    new_states = None
+    if decode:
+        new_states = {"blocks": new_block_states, "tails": new_tail_states}
+    return x, new_states, aux
+
+
+def one_block_single(p, cfg, run, spec, x, positions, st, encoder_out,
+                     encoder_positions, cache_index, layer_override, decode,
+                     moe_override=None):
+    if layer_override is not None and spec.ffn == "moe" and not decode:
+        y, laux = layer_override(p, spec, x, positions)
+        return y, None, laux
+    return modules.apply_layer(p, cfg, run, spec, x, positions, state=st,
+                               encoder_out=encoder_out,
+                               encoder_positions=encoder_positions,
+                               cache_index=cache_index,
+                               moe_override=moe_override)
+
+
+def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
+                positions=None, *, decode_state=None, cache_index=None,
+                encoder_embeds=None, vision_embeds=None,
+                layer_override: Optional[Callable] = None,
+                moe_override: Optional[Callable] = None,
+                return_hidden: bool = False):
+    """Forward pass.
+
+    tokens: [B, S] int32.
+    positions: [B, S] (defaults to arange / cache_index).
+    decode_state: state tree from init_decode_state (enables KV caching).
+    encoder_embeds: [B, T_enc, d] stub audio-frontend output (whisper).
+    vision_embeds: [B, vision_seq, vision_dim] stub patch embeddings (VLM).
+
+    Returns (logits [B,S,vocab], new_decode_state, aux).
+    """
+    B, S = tokens.shape
+    pol = run.policy
+    if positions is None:
+        if cache_index is not None:
+            positions = jnp.full((B, S), 0, jnp.int32) + cache_index \
+                + jnp.arange(S, dtype=jnp.int32)[None, :]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                         (B, S))
+
+    # Cross-attention memory.
+    encoder_out = None
+    encoder_positions = None
+    if cfg.is_encdec:
+        assert encoder_embeds is not None, "whisper needs encoder_embeds"
+        T_enc = encoder_embeds.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(T_enc, dtype=jnp.int32),
+                                   (B, T_enc))
+        enc_x = encoder_embeds.astype(pol.compute_dtype)
+        if "pos" in params["embed"]:
+            pe = jnp.take(params["embed"]["pos"], enc_pos[0], axis=0)
+            enc_x = enc_x + pe.astype(pol.compute_dtype)[None]
+        enc = params["encoder"]
+        enc_x, _, _ = _apply_stack(
+            enc["blocks"], [], cfg, run,
+            (LayerSpec(mixer="attn", ffn="dense", causal=False),),
+            enc_x, enc_pos)
+        encoder_out = modules.apply_norm(enc["final_norm"], enc_x, pol)
+        encoder_positions = enc_pos
+    elif cfg.vision_seq > 0:
+        assert vision_embeds is not None, "VLM needs vision_embeds"
+        encoder_out = (vision_embeds.astype(pol.compute_dtype)
+                       @ params["vision_proj"].astype(pol.compute_dtype))
+        Tv = encoder_out.shape[1]
+        encoder_positions = jnp.broadcast_to(
+            jnp.arange(Tv, dtype=jnp.int32), (B, Tv))
+
+    x = modules.apply_embedding(params["embed"], cfg, pol, tokens,
+                                positions, run=run)
+
+    tails = [(spec, params[f"tail{i}"])
+             for i, spec in enumerate(cfg.tail_specs)]
+    tail_states = decode_state["tails"] if decode_state is not None else None
+    x, new_state, aux = _apply_stack(
+        params.get("blocks"), tails, cfg, run, cfg.pattern, x, positions,
+        states=decode_state, tail_states=tail_states,
+        encoder_out=encoder_out, encoder_positions=encoder_positions,
+        cache_index=cache_index, layer_override=layer_override,
+        moe_override=moe_override)
+
+    x = modules.apply_norm(params["final_norm"], x, pol)
+    if return_hidden:
+        return x, new_state, aux
+    head = params.get("lm_head")
+    logits = modules.apply_unembedding(params["embed"], head, cfg, pol, x)
+    logits = run.constrain(logits, ("batch", None, "vocab"))
+    return logits, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Stacked per-layer decode state matching the scan layout."""
+    def stacked(spec):
+        one = modules.init_layer_state(cfg, spec, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_pattern_repeats,) + x.shape),
+            one)
+
+    state = {}
+    if cfg.n_pattern_repeats > 0:
+        state["blocks"] = {f"pos{p}": stacked(spec)
+                           for p, spec in enumerate(cfg.pattern)}
+    else:
+        state["blocks"] = None
+    state["tails"] = [modules.init_layer_state(cfg, spec, batch, max_len,
+                                               dtype)
+                      for spec in cfg.tail_specs]
+    return state

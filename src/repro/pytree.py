@@ -1,0 +1,126 @@
+"""Small pytree / dtype utilities shared across the framework.
+
+Params are plain nested dicts of jnp arrays. During init we build trees of
+`Param(value, axes)` so the value tree and the logical-sharding-axes tree are
+produced by a single code path (no drift between init and partition specs).
+The two trees are split apart before entering jit boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Param:
+    """A parameter leaf paired with its logical sharding axes.
+
+    ``axes`` is a tuple of logical axis names (or None), one per dim, e.g.
+    ``('embed', 'q_heads')``.  ``sharding/rules.py`` maps logical names to
+    mesh axes.
+    """
+
+    value: Any  # jnp array or ShapeDtypeStruct
+    axes: tuple
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def split_params(tree):
+    """Split a tree of Param into (value_tree, axes_tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def merge_params(values, axes):
+    """Inverse of split_params (flatten-order based; same dict structure)."""
+    flat_v, treedef = jax.tree.flatten(values)
+    flat_a = jax.tree.leaves(axes, is_leaf=is_axes)
+    assert len(flat_v) == len(flat_a), (len(flat_v), len(flat_a))
+    return jax.tree.unflatten(treedef, [Param(v, a) for v, a in zip(flat_v, flat_a)])
+
+
+def axes_map(fn: Callable, axes_tree):
+    """Map over an axes tree whose leaves are tuples of axis names."""
+    return jax.tree.map(fn, axes_tree, is_leaf=is_axes)
+
+
+def prepend_axis(axes_tree, name=None):
+    """Prepend a leading logical axis (e.g. stacked-layer dim) to every leaf."""
+    return axes_map(lambda a: (name,) + tuple(a), axes_tree)
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "size")
+    )
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def cast_tree(tree, dtype):
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_cast, tree)
+
+
+def tree_map_with_path_names(fn: Callable, tree, *rest, is_leaf=None):
+    """tree.map with '/'-joined string path as first arg."""
+    def _name(path):
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, *x: fn(_name(p), *x), tree, *rest, is_leaf=is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (pure JAX, no flax).
+# ---------------------------------------------------------------------------
+
+def trunc_normal_init(key, shape, dtype, stddev: float):
+    # 2-sigma truncation, variance-corrected like flax's truncated_normal.
+    unscaled = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (unscaled * stddev / 0.87962566103423978).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype, fan_in: int | None = None, scale: float = 1.0):
+    """LeCun-normal-style init: stddev = scale / sqrt(fan_in)."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) >= 1 else 1
+    return trunc_normal_init(key, shape, dtype, scale / math.sqrt(max(fan_in, 1)))
+
+
+def zeros_init(key, shape, dtype, **_):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype, **_):
+    del key
+    return jnp.ones(shape, dtype)

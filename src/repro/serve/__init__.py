@@ -1,0 +1,3 @@
+from repro.serve.engine import BatchedServer, ServeProgram, make_serve_program
+
+__all__ = ["BatchedServer", "ServeProgram", "make_serve_program"]

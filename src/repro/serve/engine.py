@@ -1,0 +1,174 @@
+"""Serving: prefill / decode steps with sharded KV caches + batch engine."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import stack
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.modules import RunConfig
+from repro.sharding.rules import ShardingRules, rules_for
+from repro.train.step import abstract_params, fit_batch_axes
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
+                       batch: int, max_len: int, dtype=jnp.bfloat16):
+    """PartitionSpecs for the decode-state tree (by leaf role).
+
+    KV caches shard the *sequence* dim over "model" (flash-decoding style:
+    kv-head counts rarely divide the TP axis, sequence always does at these
+    lengths) plus batch over "data"; recurrent states shard their channel /
+    head dims over "model"."""
+    from repro.sharding.rules import fit_spec
+    baxes = fit_batch_axes(batch, mesh, rules.batch_axes)
+    b = baxes if baxes else None
+    mdl = "model"
+
+    def spec_for(name: str, leaf) -> P:
+        stacked = leaf.ndim and leaf.shape[0] == cfg.n_pattern_repeats \
+            and cfg.n_pattern_repeats > 1
+        lead = (None,) if stacked else ()
+        tail = name.rsplit("/", 1)[-1]
+        body = {
+            "k": (*lead, b, mdl, None, None),
+            "v": (*lead, b, mdl, None, None),
+            "pos": (*lead, b, mdl),
+            "conv": (*lead, b, None, mdl),
+            "lru": (*lead, b, mdl),
+            "ssm": (*lead, b, mdl, None, None),
+        }.get(tail)
+        if body is None:
+            body = (*lead, *([None] * (leaf.ndim - len(lead))))
+        return fit_spec(leaf.shape, mesh, body)
+
+    state_shapes = jax.eval_shape(
+        lambda: stack.init_decode_state(cfg, batch, max_len, dtype))
+    from repro.pytree import tree_map_with_path_names
+    return state_shapes, tree_map_with_path_names(spec_for, state_shapes)
+
+
+@dataclasses.dataclass
+class ServeProgram:
+    cfg: ModelConfig
+    run: RunConfig
+    mesh: Mesh
+    prefill_step: Callable  # (params, tokens, state, **fronts) -> (state, logits)
+    decode_step: Callable   # (params, state, tok, idx, **fronts) -> (state, tok)
+    state_shapes: object
+    state_shardings: object
+    param_shardings: object
+    batch_sharding: object
+
+
+def make_serve_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig,
+                       shape: ShapeConfig,
+                       max_len: Optional[int] = None) -> ServeProgram:
+    rules = rules_for(cfg, mesh, variant="serve")
+    max_len = max_len or shape.seq_len
+    B = shape.global_batch
+    from repro.sharding.rules import fitted_shardings
+    pshapes, paxes = abstract_params(cfg)
+    psh = fitted_shardings(pshapes, paxes, rules, mesh)
+    state_shapes, sspecs = decode_state_specs(cfg, mesh, rules, B, max_len,
+                                              run.policy.compute_dtype)
+    ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    baxes = fit_batch_axes(B, mesh, rules.batch_axes)
+    bsh = NamedSharding(mesh, P(baxes if baxes else None))
+    from repro.sharding.rules import make_constrainer
+    act_rules = dataclasses.replace(rules, batch_axes=baxes)
+    run = dataclasses.replace(run, constrain=make_constrainer(act_rules, mesh))
+
+    front_sh = {}
+    if cfg.is_encdec:
+        front_sh["encoder_embeds"] = NamedSharding(
+            mesh, P(baxes if baxes else None, None, None))
+    if cfg.vision_seq > 0:
+        front_sh["vision_embeds"] = NamedSharding(
+            mesh, P(baxes if baxes else None, None, None))
+
+    # MoE FFNs always go through the sharded EP path in serving (the gather
+    # path would let GSPMD replicate expert weights across the pod).
+    moe_override = None
+    if cfg.is_moe:
+        from repro.core.zebra_spmd import ZebraConfig, make_ep_moe
+        zc = ZebraConfig(mode="replicated", batch_axes=baxes or ("data",),
+                         capacity_factor=cfg.capacity_factor * 2)
+        moe_fn = make_ep_moe(mesh, cfg, run, zc)
+
+        def moe_override(ffn_params, u):
+            y2, aux = moe_fn(ffn_params, u.reshape(-1, u.shape[-1]))
+            return y2.reshape(u.shape).astype(u.dtype), aux
+
+    def prefill(params, state, tokens, fronts):
+        """Full-sequence prefill writing the KV caches; returns last logits.
+        Only the final position is unembedded ([B,S,V] f32 logits would be
+        tens of GB at 32k)."""
+        from repro.models import modules
+        hidden, state, _ = stack.apply_model(
+            params, cfg, run, tokens, decode_state=state,
+            cache_index=jnp.zeros((), jnp.int32), moe_override=moe_override,
+            return_hidden=True, **fronts)
+        last = modules.apply_unembedding(
+            params["embed"], params.get("lm_head"), cfg, run.policy,
+            hidden[:, -1])
+        return state, last
+
+    def decode(params, state, tok, cache_index, fronts):
+        """One decode step: tok [B,1] -> greedy next token [B,1]."""
+        logits, state, _ = stack.apply_model(
+            params, cfg, run, tok, decode_state=state,
+            cache_index=cache_index, moe_override=moe_override, **fronts)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return state, nxt[:, None]
+
+    jit_prefill = jax.jit(prefill, in_shardings=(psh, ssh, bsh, front_sh),
+                          out_shardings=(ssh, None), donate_argnums=(1,))
+    jit_decode = jax.jit(decode, in_shardings=(psh, ssh, bsh, None, front_sh),
+                         out_shardings=(ssh, None), donate_argnums=(1,))
+
+    return ServeProgram(cfg=cfg, run=run, mesh=mesh,
+                        prefill_step=jit_prefill, decode_step=jit_decode,
+                        state_shapes=state_shapes, state_shardings=ssh,
+                        param_shardings=psh, batch_sharding=bsh)
+
+
+class BatchedServer:
+    """Minimal continuous-batching loop over fixed slots (example driver)."""
+
+    def __init__(self, program: ServeProgram, params, batch: int,
+                 max_len: int):
+        self.p = program
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        cfg, run = program.cfg, program.run
+        with program.mesh:
+            self.state = jax.jit(
+                lambda: stack.init_decode_state(cfg, batch, max_len,
+                                                run.policy.compute_dtype),
+                out_shardings=program.state_shardings)()
+        self.cache_index = jnp.zeros((), jnp.int32)
+        self.tokens = jnp.zeros((batch, 1), jnp.int32)
+
+    def submit_prefill(self, tokens, fronts=None):
+        with self.p.mesh:
+            self.state, last = self.p.prefill_step(self.params, self.state,
+                                                   tokens, fronts or {})
+        self.cache_index = jnp.asarray(tokens.shape[1], jnp.int32)
+        self.tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+        return self.tokens
+
+    def step(self, fronts=None):
+        with self.p.mesh:
+            self.state, self.tokens = self.p.decode_step(
+                self.params, self.state, self.tokens, self.cache_index,
+                fronts or {})
+        self.cache_index = self.cache_index + 1
+        return self.tokens

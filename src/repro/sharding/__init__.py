@@ -1,0 +1,5 @@
+from repro.sharding.rules import (ShardingRules, rules_for, specs_for,
+                                  shardings_for, batch_spec, constraint)
+
+__all__ = ["ShardingRules", "rules_for", "specs_for", "shardings_for",
+           "batch_spec", "constraint"]

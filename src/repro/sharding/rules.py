@@ -1,0 +1,204 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Params carry logical axis names (see repro.pytree.Param); these rules map
+them onto the production mesh axes ("pod", "data", "model"). Weight rules
+and activation rules are separate: weights can be 2D-sharded (FSDP-style,
+gathered at use) regardless of how the computation itself is parallelized.
+
+Variants:
+  * dense / ssm / hybrid / audio / vlm — "fsdp" (default): token batch over
+    ALL mesh axes, weights 2D-sharded over (data x model), activations pure
+    data-parallel. No TP -> no head-divisibility padding, no per-layer
+    psums; per-layer weight all-gathers ride ICI. "tp" variant keeps
+    Megatron-style tensor parallelism over "model" for comparison (§Perf).
+  * moe — "ep" (paper-faithful): experts along "model" (the paper's EP/ZP
+    substrate), batch over (data x model), attention data-parallel with
+    FSDP weights. "hybrid": TP attention + EP experts, batch over data only
+    (enables zebra microbatching at full-pod scale, see zebra_spmd).
+
+"pod" is pure data parallelism (DCN-friendly gradient reduction); experts
+deliberately stay within a pod so dispatch/combine all-to-alls ride ICI,
+mirroring the paper's assumption that ZP-group links are fast.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.pytree import axes_map
+
+# Weights: 2D FSDP sharding for every big matrix.
+_W_FSDP = {
+    "vocab": "model", "embed": "data",
+    "q_heads": "model", "kv_heads": "model",
+    "mlp": "model", "mlp_out": "data",
+    "expert": "model", "layers": None,
+}
+# Activations: pure data parallel.
+_A_DP = {"q_heads": None, "kv_heads": None, "mlp": None, "vocab": None,
+         "seq": None}
+# Activations: Megatron-style TP over "model" (+ sequence-parallel layer
+# boundaries on the same axis).
+_A_TP = {"q_heads": "model", "kv_heads": "model", "mlp": "model",
+         "vocab": "model", "seq": "model"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Weight + activation logical-axis maps and batch axes."""
+
+    rules: Mapping[str, object]          # weight axes
+    act_rules: Mapping[str, object]      # activation axes
+    batch_axes: tuple                    # token batch dim mesh axes
+
+    def mesh_axes(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+    def act_axes(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "batch":
+            return self.batch_axes
+        return self.act_rules.get(logical, None)
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        return P(*[self.mesh_axes(a) for a in axes])
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh,
+              variant: str = "default") -> ShardingRules:
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    data_axes = ("pod", "data") if has_pod else ("data",)
+    all_axes = data_axes + ("model",)
+
+    if variant == "serve":
+        # Inference: batch rarely covers the whole pod, so "model" carries
+        # TP/SP for activations; weights stay 2D-FSDP-sharded.
+        w = dict(_W_FSDP)
+        if cfg.is_moe:
+            w["mlp"] = None
+        return ShardingRules(rules=w, act_rules=dict(_A_TP),
+                             batch_axes=data_axes)
+
+    if cfg.is_moe:
+        # expert dim takes "model"; expert matrices keep "embed"->data only
+        # (a dim may not repeat a mesh axis within one spec).
+        w = dict(_W_FSDP, mlp=None)
+        if variant in ("default", "ep"):
+            # Paper-faithful EP: batch spans the expert axis; attention DP.
+            return ShardingRules(rules=w, act_rules=dict(_A_DP),
+                                 batch_axes=all_axes)
+        # hybrid: TP attention + EP experts; batch over data only.
+        w = dict(w, embed=None)
+        return ShardingRules(rules=w, act_rules=dict(_A_TP),
+                             batch_axes=data_axes)
+
+    if variant == "tp":
+        w = dict(_W_FSDP, embed=None, mlp_out=None)
+        return ShardingRules(rules=w, act_rules=dict(_A_TP),
+                             batch_axes=data_axes)
+    # default: FSDP
+    return ShardingRules(rules=dict(_W_FSDP), act_rules=dict(_A_DP),
+                         batch_axes=all_axes)
+
+
+def specs_for(axes_tree, rules: ShardingRules):
+    """Axes tree (tuples of logical names) -> PartitionSpec tree."""
+    return axes_map(rules.spec, axes_tree)
+
+
+def _fit_axis(dim: int, ax, mesh: Mesh):
+    """Longest prefix of mesh axes whose product divides `dim` (jit arg
+    shardings must divide exactly; odd vocabularies etc. fall back to fewer
+    axes or replication)."""
+    if ax is None:
+        return None
+    axs = ax if isinstance(ax, tuple) else (ax,)
+    keep = []
+    prod = 1
+    for a in axs:
+        if dim % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+        else:
+            break
+    if not keep:
+        return None
+    return tuple(keep) if len(keep) > 1 else keep[0]
+
+
+def fit_spec(shape, mesh: Mesh, parts) -> P:
+    """Drop non-dividing mesh axes from a proposed spec, per dim."""
+    fitted = [_fit_axis(d, a, mesh) for d, a in zip(shape, parts)]
+    return P(*fitted)
+
+
+def fitted_shardings(shapes_tree, axes_tree, rules: ShardingRules,
+                     mesh: Mesh):
+    """NamedSharding tree for jit in_shardings: logical axes -> mesh axes,
+    with per-dim divisibility fitting against the actual shapes."""
+    flat_s, treedef = jax.tree.flatten(shapes_tree)
+    flat_a = jax.tree.leaves(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+        and all(e is None or isinstance(e, str) for e in x))
+    out = []
+    for s, a in zip(flat_s, flat_a):
+        parts = [rules.mesh_axes(x) for x in a]
+        out.append(NamedSharding(mesh, fit_spec(s.shape, mesh, parts)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shardings_for(axes_tree, rules: ShardingRules, mesh: Mesh):
+    return axes_map(lambda a: NamedSharding(mesh, rules.spec(a)), axes_tree)
+
+
+def batch_spec(rules: ShardingRules, ndim: int, *, seq_axis=None) -> P:
+    """Spec for token-shaped arrays [batch, seq, ...]."""
+    parts = [rules.batch_axes] + [None] * (ndim - 1)
+    if seq_axis is not None and ndim >= 2:
+        parts[1] = seq_axis
+    return P(*parts)
+
+
+def constraint(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def make_constrainer(rules: ShardingRules, mesh: Mesh):
+    """Activation-sharding constrainer injected into RunConfig.
+
+    Pins activation shardings — without this, GSPMD falls back to
+    replication when a dim isn't evenly divisible (e.g. 24 heads over
+    model=16) and S^2-sized attention intermediates get replicated across
+    the TP axis.
+    """
+    def constrain(x, axes):
+        # NB: unlike jit in_shardings, constraints tolerate non-dividing
+        # dims (GSPMD pads) — 56 heads over model=16 stays sharded. Only
+        # dims SMALLER than the axis product are dropped (degenerate).
+        parts = []
+        for dim, a in zip(x.shape, axes):
+            ax = rules.act_axes(a)
+            if ax is not None:
+                axs = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a_ in axs:
+                    n *= mesh.shape[a_]
+                if dim < n:
+                    ax = _fit_axis(dim, ax, mesh)
+            parts.append(ax)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*parts)))
+    return constrain

@@ -1,0 +1,3 @@
+from repro.train import loss, optimizer, step
+
+__all__ = ["loss", "optimizer", "step"]

@@ -1,0 +1,95 @@
+"""Losses: causal-LM cross entropy (+ z-loss) and MoE aux combination."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, targets, z_loss_coef: float = 1e-4,
+                  mask=None):
+    """logits: [..., V] (f32 recommended); targets: [...] int32.
+
+    Returns (loss, metrics). z-loss regularizes logsumexp drift (large-scale
+    training stabilizer).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = jnp.square(lse)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        nll = jnp.sum(nll * mask) / denom
+        zl = jnp.sum(zl * mask) / denom
+    else:
+        nll = jnp.mean(nll)
+        zl = jnp.mean(zl)
+    loss = nll + z_loss_coef * zl
+    return loss, {"nll": nll, "z_loss": zl}
+
+
+def total_loss(logits, targets, aux, z_loss_coef: float = 1e-4, mask=None):
+    """LM loss + MoE auxiliary losses (already coefficient-scaled)."""
+    loss, metrics = cross_entropy(logits, targets, z_loss_coef, mask)
+    loss = loss + aux.get("moe_aux_loss", 0.0) + aux.get("moe_z_loss", 0.0)
+    metrics.update({k: v for k, v in aux.items()})
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def chunked_xent_from_hidden(hidden, table, targets, *, chunk: int = 512,
+                             z_loss_coef: float = 1e-4, accum_dtype=jnp.float32,
+                             unroll: bool = False, constrain=None):
+    """Cross entropy streamed over sequence chunks, never materializing the
+    full [B, S, V] f32 logits (a several-GB temp at 128k vocabularies).
+
+    hidden: [B, S, d]; table: [V, d] (lm head or tied embedding).
+    Backward recomputes each chunk's logits (jax.checkpoint).
+    """
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    valid = jnp.ones((B, S), bool)
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    n = (S + pad) // c
+    hs = jnp.moveaxis(hidden.reshape(B, n, c, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n, c), 1, 0)
+    vs = jnp.moveaxis(valid.reshape(B, n, c), 1, 0)
+    if constrain is not None:
+        # keep the chunk stream batch-sharded (the reshape otherwise lets
+        # GSPMD fall back to a data-only layout through the scan carries)
+        hs = constrain(hs, (None, "batch", None, None))
+        ts = constrain(ts, (None, "batch", None))
+        vs = constrain(vs, (None, "batch", None))
+
+    @jax.checkpoint
+    def block(h, t, v):
+        logits = jnp.einsum("bsd,vd->bsv", h, table,
+                            preferred_element_type=accum_dtype)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return (jnp.sum(jnp.where(v, lse - gold, 0.0)),
+                jnp.sum(jnp.where(v, jnp.square(lse), 0.0)))
+
+    if n == 1:
+        nll, zl = block(hs[0], ts[0], vs[0])
+    elif unroll:
+        parts = [block(hs[i], ts[i], vs[i]) for i in range(n)]
+        nll = sum(p[0] for p in parts)
+        zl = sum(p[1] for p in parts)
+    else:
+        def step(carry, xt):
+            a, b = block(*xt)
+            return (carry[0] + a, carry[1] + b), None
+
+        (nll, zl), _ = jax.lax.scan(
+            step, (jnp.zeros((), accum_dtype), jnp.zeros((), accum_dtype)),
+            (hs, ts, vs))
+    denom = B * S
+    nll = nll / denom
+    zl = zl / denom
+    return nll + z_loss_coef * zl, {"nll": nll, "z_loss": zl}

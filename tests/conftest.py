@@ -1,0 +1,24 @@
+"""Test configuration: 8 emulated host devices for sharding/zebra tests.
+
+(The 512-device override is reserved for launch/dryrun.py per the brief;
+tests use a small fixed pool so meshes up to 2x4 are available.)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((2, 4), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh4():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((2, 2), ("data", "model"))

@@ -1,0 +1,117 @@
+"""Algorithm 1 (Asym-EA) unit + property tests, incl. the paper's Fig. 6."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.asym_ea import (AsymEAPlan, asym_ea_offload,
+                                divisibility_ok)
+
+
+def test_divisibility_rule():
+    assert divisibility_ok(4, 4) and divisibility_ok(4, 8) \
+        and divisibility_ok(8, 4)
+    assert not divisibility_ok(4, 3)
+    with pytest.raises(ValueError):
+        asym_ea_offload(6, 4, 4, 3, 1.0, 1.0, 2.0)
+
+
+def test_fig6_scenario():
+    """Paper Fig. 6: expert GPUs 33% slower, n=6 experts, M=N=1.
+
+    T_gather = T_E - T_A = 1/3. The first layer gathers its bubble; by
+    layer 2 the accumulated bubble exceeds T_squeeze, so layers 2 and 3
+    (0-indexed 1, 2) each offload one expert — exactly the paper's Fig. 6(b)
+    placement ("we put one of the experts of the 2nd and 3rd layer to
+    attention GPUs")."""
+    TA = 1.0
+    TE = 4.0 / 3.0
+    TE_attn = TE * 3.0 / 4.0  # attention GPU computes experts 33% faster
+    plan = asym_ea_offload(6, 6, 1, 1, TA, TE_attn, TE)
+    assert plan.n1 == 1 and plan.n2 == 1
+    assert abs(plan.t_gather - 1.0 / 3.0) < 1e-9
+    # T_squeeze = (TE*N/n)*n2 + (TE_attn*N/n)*n1 = (4/3 + 1)/6 = 7/18
+    assert abs(plan.t_squeeze - 7.0 / 18.0) < 1e-9
+    # Fig. 6(b): no offload at layer 1, one expert at layers 2 and 3.
+    assert plan.offload[:3] == (0, 1, 1)
+    # steady state: leftover bubble (1/3 - 1/18 carried) keeps every later
+    # layer offloading one chunk
+    assert all(o == 1 for o in plan.offload[1:])
+
+
+def test_no_offload_when_attention_slower():
+    plan = asym_ea_offload(8, 4, 2, 2, t_attn=2.0, t_exp_attn=0.5, t_exp=1.0)
+    assert plan.offload == (0, 0, 0, 0)
+
+
+def test_memory_forced_offload():
+    """n_min forces offload even with zero bubbles (expert GPUs too small)."""
+    plan = asym_ea_offload(8, 4, 2, 2, t_attn=2.0, t_exp_attn=0.5,
+                           t_exp=1.0, n_min=3)
+    assert sum(plan.offload) >= 3
+    assert all(o % plan.n2 == 0 for o in plan.offload)
+
+
+def test_n_max_cap():
+    plan = asym_ea_offload(8, 8, 1, 1, t_attn=0.1, t_exp_attn=0.05,
+                           t_exp=1.0, n_max=2)
+    assert sum(plan.offload) <= 2
+
+
+def test_chunk_units_m_gt_n():
+    # M=4, N=2: each attention GPU acquires n1=1; each expert GPU sheds n2=2
+    plan = asym_ea_offload(8, 8, 4, 2, t_attn=0.5, t_exp_attn=0.2, t_exp=1.0)
+    assert plan.n1 == 1 and plan.n2 == 2
+    assert all(o % 2 == 0 for o in plan.offload)
+
+
+def test_chunk_units_n_gt_m():
+    # M=2, N=4: n1 = 2, n2 = 1
+    plan = asym_ea_offload(8, 8, 2, 4, t_attn=0.5, t_exp_attn=0.2, t_exp=1.0)
+    assert plan.n1 == 2 and plan.n2 == 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16, 32]),
+    L=st.integers(1, 24),
+    mn=st.sampled_from([(1, 1), (2, 2), (4, 2), (2, 4), (4, 8), (8, 4)]),
+    t_attn=st.floats(0.05, 4.0),
+    t_exp=st.floats(0.05, 4.0),
+    ratio=st.floats(0.3, 1.0),
+)
+def test_invariants(n, L, mn, t_attn, t_exp, ratio):
+    M, N = mn
+    t_exp_attn = t_exp * ratio
+    plan = asym_ea_offload(n, L, M, N, t_attn, t_exp_attn, t_exp)
+    # offloads are whole chunks
+    assert all(o % plan.n2 == 0 for o in plan.offload)
+    # can never offload more experts than an expert GPU holds
+    assert all(o <= n // N for o in plan.offload)
+    # bubble accounting: total offloaded work never exceeds gatherable bubble
+    if plan.t_gather > 0:
+        chunks = sum(plan.offload) // plan.n2
+        assert chunks * plan.t_squeeze <= L * plan.t_gather + 1e-9
+    else:
+        assert sum(plan.offload) == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t_exp=st.floats(1.0, 4.0),
+    ratio=st.floats(0.3, 1.0),
+    n_max=st.integers(0, 16),
+)
+def test_nmax_respected(t_exp, ratio, n_max):
+    plan = asym_ea_offload(16, 12, 2, 2, 0.2, t_exp * ratio, t_exp,
+                           n_max=n_max)
+    assert sum(plan.offload) <= max(n_max, 0)
+
+
+def test_alpha_beta_exclusive():
+    """Paper: at most one of alpha<1 / beta>1 is active."""
+    p1 = asym_ea_offload(16, 12, 2, 2, 0.2, 0.5, 1.0, n_max=2)
+    assert p1.alpha <= 1.0 and p1.beta == 1.0
+    p2 = asym_ea_offload(16, 12, 2, 2, 0.9, 0.5, 1.0, n_min=10)
+    assert p2.beta >= 1.0 and p2.alpha == 1.0

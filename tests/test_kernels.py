@@ -1,0 +1,182 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps
++ gradient checks + hypothesis on grouping invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype=jnp.float32, k=0):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape, jnp.float32
+                             ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,T,H,KH,hd", [
+    (1, 128, 128, 2, 2, 64),
+    (2, 200, 200, 4, 2, 32),   # padding + GQA
+    (1, 96, 160, 4, 1, 64),    # cross lengths + MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 48)])
+def test_flash_matches_ref(dtype, B, S, T, H, KH, hd, causal, window):
+    if causal and S != T:
+        pytest.skip("causal assumes aligned q/kv ranges")
+    q = rand((B, S, H, hd), dtype, 1)
+    k = rand((B, T, KH, hd), dtype, 2)
+    v = rand((B, T, KH, hd), dtype, 3)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    mask = ref.causal_window_mask(S, T, causal, window)
+    want = ref.attention(q, k, v, mask=mask)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_flash_grads_match_ref():
+    B, S, H, KH, hd = 2, 160, 4, 2, 32
+    q, k, v = rand((B, S, H, hd), k=1), rand((B, S, KH, hd), k=2), \
+        rand((B, S, KH, hd), k=3)
+
+    def f_flash(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, causal=True) ** 2)
+
+    def f_ref(q, k, v):
+        m = ref.causal_window_mask(S, S, True, 0)
+        return jnp.sum(ref.attention(q, k, v, mask=m) ** 2)
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-3)
+
+
+def test_flash_fully_masked_rows_are_zero():
+    # window smaller than the gap -> early rows see nothing but themselves;
+    # padded rows (from block padding) must not produce NaNs.
+    q, k, v = rand((1, 130, 2, 32), k=1), rand((1, 130, 2, 32), k=2), \
+        rand((1, 130, 2, 32), k=3)
+    out = ops.flash_attention(q, k, v, causal=True, window=1)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,G", [(64, 32, 48, 3), (300, 96, 80, 5),
+                                     (128, 256, 128, 2)])
+def test_gmm_matches_ref(dtype, M, K, N, G):
+    lhs = rand((M, K), dtype, 1)
+    rhs = rand((G, K, N), dtype, 2)
+    sizes = jax.random.randint(jax.random.fold_in(KEY, 9), (G,), 0, M)
+    sizes = (sizes * M // jnp.maximum(jnp.sum(sizes), 1)).astype(jnp.int32)
+    sizes = sizes.at[-1].add(M - jnp.sum(sizes))
+    out = ops.gmm(lhs, rhs, sizes)
+    want = ref.gmm(lhs, rhs, sizes)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 60), min_size=2, max_size=6))
+def test_gmm_group_sizes_property(sizes):
+    """Any non-negative group partition (incl. empty groups) matches the
+    oracle and lax.ragged_dot."""
+    G = len(sizes)
+    M = sum(sizes)
+    if M == 0:
+        return
+    lhs = rand((M, 16), k=1)
+    rhs = rand((G, 16, 24), k=2)
+    gs = jnp.asarray(sizes, jnp.int32)
+    out = ops.gmm(lhs, rhs, gs)
+    np.testing.assert_allclose(out, ref.gmm(lhs, rhs, gs), atol=1e-4)
+    np.testing.assert_allclose(out, jax.lax.ragged_dot(lhs, rhs, gs),
+                               atol=1e-4)
+
+
+def test_gmm_grads_match_ref():
+    M, K, N, G = 96, 32, 40, 4
+    lhs, rhs = rand((M, K), k=1), rand((G, K, N), k=2)
+    gs = jnp.array([10, 0, 50, 36], jnp.int32)
+
+    g1 = jax.grad(lambda l, r: jnp.sum(ops.gmm(l, r, gs) ** 2),
+                  argnums=(0, 1))(lhs, rhs)
+    g2 = jax.grad(lambda l, r: jnp.sum(ref.gmm(l, r, gs) ** 2),
+                  argnums=(0, 1))(lhs, rhs)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,T,h,hd,ns,chunk", [
+    (1, 64, 2, 16, 8, 32),
+    (2, 200, 3, 32, 16, 64),   # padding (200 % 64 != 0)
+    (1, 256, 4, 64, 32, 128),
+])
+def test_ssd_kernel_matches_naive(dtype, b, T, h, hd, ns, chunk):
+    x = rand((b, T, h, hd), dtype, 1)
+    dt = jax.nn.softplus(rand((b, T, h), k=2))
+    A = -jnp.exp(rand((h,), k=3))
+    B = rand((b, T, ns), dtype, 4) * 0.5
+    C = rand((b, T, ns), dtype, 5) * 0.5
+    y0, s0 = ref.ssd_naive(x, dt, A, B, C)
+    y1, s1 = ref.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    y2, s2 = ops.ssd(x, dt, A, B, C, chunk=chunk, use_kernel=True)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(y2, np.float32),
+                               np.asarray(y0, np.float32), atol=tol)
+    np.testing.assert_allclose(s1, s0, atol=tol)
+    np.testing.assert_allclose(s2, s0, atol=tol)
+
+
+def test_ssd_decode_steps_match_full():
+    """Sequential decode over a prefix state == one full scan."""
+    b, T, h, hd, ns = 1, 48, 2, 16, 8
+    x = rand((b, T, h, hd), k=1)
+    dt = jax.nn.softplus(rand((b, T, h), k=2))
+    A = -jnp.exp(rand((h,), k=3))
+    B, C = rand((b, T, ns), k=4) * 0.5, rand((b, T, ns), k=5) * 0.5
+    y_full, s_full = ref.ssd_naive(x, dt, A, B, C)
+    split = 32
+    y1, s1 = ref.ssd_naive(x[:, :split], dt[:, :split], A, B[:, :split],
+                           C[:, :split])
+    ys = [y1]
+    s = s1
+    for t in range(split, T):
+        yt, s = ref.ssd_decode_step(x[:, t:t + 1], dt[:, t:t + 1], A,
+                                    B[:, t:t + 1], C[:, t:t + 1], s)
+        ys.append(yt)
+    y_inc = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_inc, y_full, atol=1e-4)
+    np.testing.assert_allclose(s, s_full, atol=1e-4)
+
+
+def test_ssd_kernel_grads():
+    b, T, h, hd, ns = 1, 96, 2, 16, 8
+    x = rand((b, T, h, hd), k=1)
+    dt = jax.nn.softplus(rand((b, T, h), k=2))
+    A = -jnp.exp(rand((h,), k=3))
+    B, C = rand((b, T, ns), k=4) * 0.5, rand((b, T, ns), k=5) * 0.5
+    gk = jax.grad(lambda x: jnp.sum(
+        ops.ssd(x, dt, A, B, C, use_kernel=True)[0] ** 2))(x)
+    gr = jax.grad(lambda x: jnp.sum(ref.ssd_naive(x, dt, A, B, C)[0] ** 2))(x)
+    np.testing.assert_allclose(gk, gr, atol=3e-3)

@@ -1,0 +1,209 @@
+"""Unit tests for the module library (norms, rope, attention, MoE, RG-LRU)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import modules, registry
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.modules import Policy, RunConfig
+from repro.pytree import split_params
+
+KEY = jax.random.PRNGKey(0)
+POL = Policy(compute_dtype=jnp.float32)
+RUN = RunConfig(policy=POL)
+
+
+def small_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=128,
+                pattern=(LayerSpec(),))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_rmsnorm_unit_scale():
+    cfg = small_cfg()
+    p, _ = split_params(modules.init_norm(cfg))
+    x = jax.random.normal(KEY, (3, 5, 64)) * 7.0
+    y = modules.apply_norm(p, x, POL)
+    rms = jnp.sqrt(jnp.mean(y ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(KEY, (1, 8, 2, 32))
+    pos = jnp.arange(8)[None, :]
+    y = modules.apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), atol=1e-4)
+    # dot products depend only on relative offset
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 1, 1, 32))
+    def dot_at(pq, pk):
+        qr = modules.apply_rope(q, jnp.array([[pq]]), 1e4)
+        kr = modules.apply_rope(k, jnp.array([[pk]]), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+
+
+def test_attention_mask_window():
+    m = modules.attention_mask(jnp.arange(6), jnp.arange(6), True, 3)
+    want = np.tril(np.ones((6, 6), bool)) & ~np.tril(np.ones((6, 6), bool), -3)
+    np.testing.assert_array_equal(np.asarray(m), want)
+
+
+def test_gqa_matches_repeated_heads():
+    """GQA with KH groups == MHA with kv heads repeated."""
+    B, S, H, KH, hd = 2, 16, 4, 2, 8
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KH, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KH, hd))
+    mask = modules.attention_mask(jnp.arange(S), jnp.arange(S), True, 0)
+    o1 = modules.ref_attention(q, k, v, mask, hd ** -0.5, 0.0, POL)
+    kr = jnp.repeat(k, H // KH, axis=2)
+    vr = jnp.repeat(v, H // KH, axis=2)
+    o2 = modules.ref_attention(q, kr, vr, mask, hd ** -0.5, 0.0, POL)
+    np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+
+def test_decode_cache_matches_full_forward():
+    """Incremental KV-cache attention == full-sequence attention."""
+    cfg = small_cfg()
+    p, _ = split_params(modules.init_attention(KEY, cfg))
+    B, S = 2, 12
+    x = jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full, _ = modules.apply_attention(p, cfg, RUN, x, pos, causal=True)
+    cache = modules.init_attention_cache(cfg, B, S, 0, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = modules.apply_attention(
+            p, cfg, RUN, x[:, t:t + 1], pos[:, t:t + 1], causal=True,
+            cache=cache, cache_index=jnp.asarray(t))
+        outs.append(o)
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(inc, full, atol=1e-4)
+
+
+def test_ring_prefill_larger_than_window_then_decode():
+    """Prefill with S >> window writes only the surviving keys; subsequent
+    decode matches the full windowed computation (recurrentgemma@32k path)."""
+    cfg = small_cfg(window=4)
+    p, _ = split_params(modules.init_attention(KEY, cfg))
+    B, S, W, extra = 1, 11, 4, 3
+    x = jax.random.normal(KEY, (B, S + extra, cfg.d_model)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S + extra), (B, S + extra))
+    full, _ = modules.apply_attention(p, cfg, RUN, x, pos, causal=True,
+                                      window=W)
+    cache = modules.init_attention_cache(cfg, B, S + extra, W, jnp.float32)
+    o_pre, cache = modules.apply_attention(
+        p, cfg, RUN, x[:, :S], pos[:, :S], causal=True, window=W,
+        cache=cache, cache_index=jnp.asarray(0))
+    np.testing.assert_allclose(o_pre, full[:, :S], atol=1e-5)
+    for t in range(S, S + extra):
+        o, cache = modules.apply_attention(
+            p, cfg, RUN, x[:, t:t + 1], pos[:, t:t + 1], causal=True,
+            window=W, cache=cache, cache_index=jnp.asarray(t))
+        np.testing.assert_allclose(o, full[:, t:t + 1], atol=1e-5)
+
+
+def test_ring_cache_local_attention_matches_full():
+    """Windowed ring-buffer cache == full computation with window mask."""
+    cfg = small_cfg(window=4)
+    p, _ = split_params(modules.init_attention(KEY, cfg))
+    B, S, W = 1, 14, 4
+    x = jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full, _ = modules.apply_attention(p, cfg, RUN, x, pos, causal=True,
+                                      window=W)
+    cache = modules.init_attention_cache(cfg, B, S, W, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = modules.apply_attention(
+            p, cfg, RUN, x[:, t:t + 1], pos[:, t:t + 1], causal=True,
+            window=W, cache=cache, cache_index=jnp.asarray(t))
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, axis=1), full, atol=1e-4)
+
+
+def test_chunked_attention_matches_ref():
+    B, S, H, KH, hd = 1, 300, 4, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KH, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KH, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    for unroll in (False, True):
+        o = modules.chunked_attention(q, k, v, pos, pos, causal=True,
+                                      window=0, scale=hd ** -0.5, softcap=0.0,
+                                      policy=POL, chunk_q=128, unroll=unroll)
+        m = modules.attention_mask(pos, pos, True, 0)
+        want = modules.ref_attention(q, k, v, m, hd ** -0.5, 0.0, POL)
+        np.testing.assert_allclose(o, want, atol=1e-5)
+
+
+def test_moe_dense_equals_gather():
+    cfg = small_cfg(family="moe", n_experts=4, top_k=2,
+                    pattern=(LayerSpec(ffn="moe"),))
+    p, _ = split_params(modules.init_moe(KEY, cfg))
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model)) * 0.5
+    y1, a1 = modules.apply_moe(p, cfg, dataclasses.replace(RUN,
+                                                           moe_impl="dense"), x)
+    y2, a2 = modules.apply_moe(p, cfg, dataclasses.replace(RUN,
+                                                           moe_impl="gather"), x)
+    np.testing.assert_allclose(y1, y2, atol=1e-5)
+    np.testing.assert_allclose(a1["moe_aux_loss"], a2["moe_aux_loss"],
+                               atol=1e-6)
+
+
+def test_moe_gather_with_gmm_kernel():
+    cfg = small_cfg(family="moe", n_experts=4, top_k=2,
+                    pattern=(LayerSpec(ffn="moe"),))
+    p, _ = split_params(modules.init_moe(KEY, cfg))
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model)) * 0.5
+    run_g = dataclasses.replace(RUN, moe_impl="gather")
+    run_k = dataclasses.replace(RUN, moe_impl="gather", use_gmm_kernel=True)
+    y1, _ = modules.apply_moe(p, cfg, run_g, x)
+    y2, _ = modules.apply_moe(p, cfg, run_k, x)
+    np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+
+def test_router_top_k_weights_normalized():
+    cfg = small_cfg(family="moe", n_experts=8, top_k=3,
+                    pattern=(LayerSpec(ffn="moe"),))
+    p, _ = split_params(modules.init_moe(KEY, cfg))
+    x = jax.random.normal(KEY, (16, cfg.d_model))
+    w, idx, aux = modules.moe_route(p["router"], cfg, POL, x)
+    np.testing.assert_allclose(jnp.sum(w, -1), 1.0, atol=1e-6)
+    assert idx.shape == (16, 3)
+    assert int(jnp.max(idx)) < 8
+    # top-k indices are distinct per token
+    assert all(len(set(np.asarray(idx)[i].tolist())) == 3 for i in range(16))
+
+
+def test_rglru_scan_matches_loop():
+    cfg = small_cfg(family="hybrid", lru_width=32)
+    p, _ = split_params(modules.init_rglru(KEY, cfg))
+    x = jax.random.normal(KEY, (1, 10, cfg.d_model)) * 0.5
+    y_full, _ = modules.apply_rglru(p, cfg, RUN, x)
+    # token-by-token with state
+    st = modules.init_rglru_state(cfg, 1, jnp.float32)
+    outs = []
+    for t in range(10):
+        o, st = modules.apply_rglru(p, cfg, RUN, x[:, t:t + 1], st)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), y_full, atol=1e-4)
+
+
+def test_causal_conv1d_state_consistency():
+    W, C = 4, 8
+    conv_w = jax.random.normal(KEY, (W, C))
+    conv_b = jnp.zeros((C,))
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 12, C))
+    full, _ = modules.causal_conv1d(x, conv_w, conv_b)
+    y1, st = modules.causal_conv1d(x[:, :7], conv_w, conv_b)
+    y2, _ = modules.causal_conv1d(x[:, 7:], conv_w, conv_b, state=st)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), full, atol=1e-5)
