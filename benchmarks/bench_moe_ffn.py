@@ -1,0 +1,154 @@
+"""MoE expert-FFN path shootout — tracks the single-pack fused pipeline.
+
+Compares, at a Mixtral (paper Table 2) layer shape, the four ways this
+repo can run the grouped GLU expert FFN over expert-sorted rows:
+
+  dense       every token through every expert (apply_moe's exact mode,
+              O(E) compute) — the correctness baseline
+  ragged      3x lax.ragged_dot (the pre-fused gather-mode path)
+  gmm_percall 3x ops.gmm — Pallas grouped GEMM that re-packs inside every
+              call (interpret-mode Python execution off-TPU, so off-TPU
+              it is timing the interpreter, not the pipeline; opt-in)
+  fused       ops.moe_ffn — pack once, GLU-fused grouped GEMM, packed
+              VJP (Pallas on TPU, XLA tile-gather fallback elsewhere)
+
+Emits BENCH_moe_ffn.json (repo root by default) so the speedup is tracked
+across PRs. The regression gate compares fused vs ragged (both pure-XLA
+off TPU); interpret-mode timings are excluded from the gate.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_moe_ffn.py [--paper]
+        [--tokens N] [--iters K] [--with-interpret] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+GATE_SPEEDUP = 1.3
+
+
+def timed(fn, args, iters):
+    out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.map(lambda a: a.block_until_ready(), out)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def routed_group_sizes(key, M, E):
+    """Realistic mildly-imbalanced router assignment summing to M."""
+    logits = jax.random.normal(key, (E,)) * 0.3
+    p = jax.nn.softmax(logits)
+    sizes = jnp.floor(p * M).astype(jnp.int32)
+    sizes = sizes.at[0].add(M - jnp.sum(sizes))
+    return sizes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full mixtral-w1 layer shape (slow off-TPU)")
+    ap.add_argument("--tokens", type=int, default=2048,
+                    help="tokens per step (rows = tokens * top_k)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--with-interpret", action="store_true",
+                    help="also time the per-call Pallas gmm path off-TPU")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    top_k, E = 2, 12  # mixtral-w1 routing
+    if args.paper:
+        d, f = 2048, 7168  # mixtral-w1 (Table 2)
+        shape_name = "mixtral-w1"
+    else:
+        d, f = 512, 1792  # mixtral-w1 / 4 — same ratios, CI-sized
+        shape_name = "mixtral-w1/4"
+    M = args.tokens * top_k
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    xs = jax.random.normal(ks[0], (M, d), jnp.float32) * 0.5
+    wg = jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.02
+    wu = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.02
+    wo = jax.random.normal(ks[3], (E, f, d), jnp.float32) * 0.02
+    gs = routed_group_sizes(ks[4], M, E)
+    on_tpu = jax.default_backend() == "tpu"
+
+    def dense(x, wg, wu, wo):
+        # every token (M/k of them) through every expert
+        xt = x[::top_k]
+        g = jax.nn.silu(jnp.einsum("td,edf->tef", xt, wg))
+        u = jnp.einsum("td,edf->tef", xt, wu)
+        return jnp.einsum("tef,efd->ted", g * u, wo)
+
+    def ragged(x, wg, wu, wo):
+        g = jax.nn.silu(jax.lax.ragged_dot(x, wg, gs))
+        u = jax.lax.ragged_dot(x, wu, gs)
+        return jax.lax.ragged_dot(g * u, wo, gs)
+
+    def gmm_percall(x, wg, wu, wo):
+        g = jax.nn.silu(ops.gmm(x, wg, gs))
+        u = ops.gmm(x, wu, gs)
+        return ops.gmm(g * u, wo, gs)
+
+    def fused(x, wg, wu, wo):
+        return ops.moe_ffn(x, wg, wu, wo, gs)
+
+    paths = {"dense": dense, "ragged": ragged, "fused": fused}
+    if on_tpu or args.with_interpret:
+        paths["gmm_percall"] = gmm_percall
+
+    results = {}
+    for name, fn in paths.items():
+        fwd = jax.jit(fn)
+        grad = jax.jit(jax.grad(
+            lambda *a, _f=fn: jnp.sum(_f(*a) ** 2), argnums=(0, 1, 2, 3)))
+        fwd_ms = timed(fwd, (xs, wg, wu, wo), args.iters)
+        grad_ms = timed(grad, (xs, wg, wu, wo), args.iters)
+        results[name] = {"fwd_ms": round(fwd_ms, 3),
+                         "grad_ms": round(grad_ms, 3)}
+        print(f"{name:12s} fwd {fwd_ms:9.2f} ms   fwd+bwd {grad_ms:9.2f} ms")
+
+    gate = {
+        "baseline": "ragged",
+        "threshold": GATE_SPEEDUP,
+        "fused_vs_ragged_fwd": round(
+            results["ragged"]["fwd_ms"] / results["fused"]["fwd_ms"], 3),
+        "fused_vs_ragged_grad": round(
+            results["ragged"]["grad_ms"] / results["fused"]["grad_ms"], 3),
+    }
+    gate["pass"] = (gate["fused_vs_ragged_fwd"] >= GATE_SPEEDUP
+                    and gate["fused_vs_ragged_grad"] >= GATE_SPEEDUP)
+    print(f"gate: fused vs ragged {gate['fused_vs_ragged_fwd']}x fwd, "
+          f"{gate['fused_vs_ragged_grad']}x fwd+bwd "
+          f"({'PASS' if gate['pass'] else 'FAIL'} at {GATE_SPEEDUP}x)")
+
+    payload = {
+        "bench": "moe_ffn",
+        "shape": {"name": shape_name, "d_model": d, "d_ff": f, "experts": E,
+                  "top_k": top_k, "rows": M},
+        "backend": jax.default_backend(),
+        "iters": args.iters,
+        "results": results,
+        "gate": gate,
+    }
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parents[1] / "BENCH_moe_ffn.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    return 0 if gate["pass"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

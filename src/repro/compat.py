@@ -1,0 +1,29 @@
+"""Cross-version jax API shims.
+
+The container pins jax 0.4.37; several APIs this codebase targets were
+renamed or moved on the way to jax 0.5+:
+
+* ``jax.shard_map``        — lived at ``jax.experimental.shard_map`` (with
+  the replication-check kwarg spelled ``check_rep`` instead of
+  ``check_vma``).
+* ``jax.sharding.AxisType`` — absent; handled in ``repro.launch.mesh``.
+* ``pltpu.CompilerParams`` — spelled ``TPUCompilerParams``; handled in
+  ``repro.kernels.pallas_compat``.
+
+Keep every version branch here (or in the two modules above) so kernels and
+engines stay clean.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off, on any jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

@@ -148,16 +148,20 @@ class ZebraMPMD:
                     order, aux)
 
         def expert_fwd(p_exp, buf):
-            """Expert-group program: grouped FFN over packed buffers."""
+            """Expert-group program: grouped FFN straight over the
+            capacity-packed [E, C, d] dispatch buffer (no re-sort/re-pack;
+            the buffer is already the packed domain)."""
             return zs._experts_dense(p_exp["wi_gate"], p_exp["wi_up"],
-                                     p_exp["wo"], buf, cd)
+                                     p_exp["wo"], buf, cd,
+                                     use_kernel=run.use_gmm_kernel)
 
         def local_expert_fwd(p_layer, buf_local):
             f = p_layer["ffn"]
             if f["wi_gate"].shape[0] == 0:
                 return buf_local
             return zs._experts_dense(f["wi_gate"], f["wi_up"], f["wo"],
-                                     buf_local, cd)
+                                     buf_local, cd,
+                                     use_kernel=run.use_gmm_kernel)
 
         def combine(h, out_local, out_remote, weights, tok, slot, keep,
                     order):

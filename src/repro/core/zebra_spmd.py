@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.models import modules
 from repro.models.config import LayerSpec, ModelConfig
 from repro.models.modules import RunConfig
@@ -109,8 +110,20 @@ def _unpack(buf, meta, weights, T: int):
     return jnp.take(vals, inv, axis=0).reshape(T, k, d).sum(axis=1)
 
 
-def _experts_dense(wi_gate, wi_up, wo, buf, cd):
-    """Per-expert FFN over packed buffers. buf: [E_loc, C, d]."""
+def _experts_dense(wi_gate, wi_up, wo, buf, cd, use_kernel: bool = False):
+    """Per-expert FFN over packed buffers. buf: [E_loc, C, d].
+
+    The capacity-packed buffer is ALREADY the tile-aligned packed domain
+    (uniform C rows per expert), so with use_kernel it feeds straight into
+    the fused grouped-GEMM pipeline (ops.moe_ffn_packed) with no sort, no
+    pack scatter and no unpack gather; otherwise a batched einsum, which is
+    what XLA schedules best on non-Pallas backends.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops  # lazy: avoid cycles
+        return kops.moe_ffn_packed(buf, wi_gate.astype(cd),
+                                   wi_up.astype(cd), wo.astype(cd),
+                                   use_kernel=True)
     g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wi_gate.astype(cd)))
     u = jnp.einsum("ecd,edf->ecf", buf, wi_up.astype(cd))
     return jnp.einsum("ecf,efd->ecd", g * u, wo.astype(cd))
@@ -159,7 +172,8 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
             C = max(_round_up(int(T * k / E * zcfg.capacity_factor), 8), 8)
             buf, meta = _pack(x, idx_loc, E_loc + 1, C)
             out = _experts_dense(ffn["wi_gate"], ffn["wi_up"], ffn["wo"],
-                                 buf[:E_loc], cd)
+                                 buf[:E_loc], cd,
+                                 use_kernel=run.use_gmm_kernel)
             out = jnp.concatenate(
                 [out, jnp.zeros((1, C, x.shape[1]), out.dtype)], axis=0)
             y = _unpack(out, meta, weights, T)
@@ -179,7 +193,7 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
             recv = jnp.swapaxes(recv, 0, 1).reshape(E_loc, n_ep * C,
                                                     x.shape[1])
             out = _experts_dense(ffn["wi_gate"], ffn["wi_up"], ffn["wo"],
-                                 recv, cd)
+                                 recv, cd, use_kernel=run.use_gmm_kernel)
             out = jnp.swapaxes(out.reshape(E_loc, n_ep, C, x.shape[1]), 0, 1)
             # Combine: reverse all-to-all.
             back = jax.lax.all_to_all(out, ep, split_axis=0, concat_axis=0,
@@ -191,8 +205,7 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
     out_specs = (batch_spec, P())
 
     def moe_fn(ffn_params, x2d):
-        sm = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+        sm = _shard_map(fn, mesh, in_specs, out_specs)
         return sm(ffn_params, x2d)
 
     return moe_fn

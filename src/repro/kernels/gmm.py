@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _gmm_kernel(tile_group, lhs_ref, rhs_ref, out_ref, acc, *, n_k):
     ik = pl.program_id(2)
@@ -80,10 +82,127 @@ def gmm_tiled(lhs, rhs, tile_group, *, block_m=128, block_k=128, block_n=128,
             scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(tile_group, lhs, rhs)
+    return out[:, :N]
+
+
+def _gmm_glu_kernel(tile_group, lhs_ref, rhs_g_ref, rhs_u_ref, out_ref,
+                    acc_g, acc_u, *, n_k):
+    """Fused GLU grouped matmul: out = silu(lhs @ rhs_g) * (lhs @ rhs_u).
+
+    Each lhs m-tile is read from HBM ONCE and feeds both the gate and the up
+    GEMM; the activation (silu * mul) is applied on the f32 accumulators in
+    VMEM before the single flush, so the intermediate ``g``/``u`` tensors
+    never round-trip through HBM (DESIGN.md §5.3).
+    """
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    lhs = lhs_ref[...].astype(jnp.float32)
+    acc_g[...] += jax.lax.dot_general(
+        lhs, rhs_g_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_u[...] += jax.lax.dot_general(
+        lhs, rhs_u_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        g = acc_g[...]
+        out_ref[...] = (g * jax.lax.logistic(g) * acc_u[...]
+                        ).astype(out_ref.dtype)
+
+
+def gmm_glu_tiled(lhs, rhs_stacked, tile_group, *, block_m=128, block_k=128,
+                  block_n=128, interpret=False, out_dtype=None):
+    """Fused GLU grouped matmul over tile-aligned groups, stacked weights.
+
+    lhs: [Mp, K]; rhs_stacked: [G, K, 2N] (gate weights in [..., :N], up
+    weights in [..., N:]); tile_group: [Mp//block_m] int32.
+    Returns [Mp, N] = silu(lhs @ gate) * (lhs @ up) per group.
+    """
+    G, _, N2 = rhs_stacked.shape
+    assert N2 % 2 == 0
+    N = N2 // 2
+    K = lhs.shape[1]
+    if (-K) % block_k == 0 and (-N) % block_n == 0:
+        # Tile-aligned halves (the production case): index straight into
+        # the stacked tensor — the up tile of output column-block jn lives
+        # at column-block jn + N/block_n. No slice/pad copies.
+        return _gmm_glu_call(lhs, rhs_stacked, rhs_stacked, tile_group,
+                             N // block_n, N, block_m=block_m,
+                             block_k=block_k, block_n=block_n,
+                             interpret=interpret, out_dtype=out_dtype)
+    return gmm_glu_tiled_pair(lhs, rhs_stacked[:, :, :N],
+                              rhs_stacked[:, :, N:], tile_group,
+                              block_m=block_m, block_k=block_k,
+                              block_n=block_n, interpret=interpret,
+                              out_dtype=out_dtype)
+
+
+def gmm_glu_tiled_pair(lhs, rhs_gate, rhs_up, tile_group, *, block_m=128,
+                       block_k=128, block_n=128, interpret=False,
+                       out_dtype=None):
+    """gmm_glu_tiled with gate/up as separate [G, K, N] arrays — lets
+    callers holding unstacked expert weights (the param layout) skip the
+    [G, K, 2N] restack copy entirely."""
+    K = lhs.shape[1]
+    N = rhs_gate.shape[-1]
+    pk = (-K) % block_k
+    pn = (-N) % block_n
+    if pk:
+        lhs = jnp.pad(lhs, ((0, 0), (0, pk)))
+        rhs_gate = jnp.pad(rhs_gate, ((0, 0), (0, pk), (0, 0)))
+        rhs_up = jnp.pad(rhs_up, ((0, 0), (0, pk), (0, 0)))
+    if pn:
+        rhs_gate = jnp.pad(rhs_gate, ((0, 0), (0, 0), (0, pn)))
+        rhs_up = jnp.pad(rhs_up, ((0, 0), (0, 0), (0, pn)))
+    return _gmm_glu_call(lhs, rhs_gate, rhs_up, tile_group, 0, N,
+                         block_m=block_m, block_k=block_k, block_n=block_n,
+                         interpret=interpret, out_dtype=out_dtype)
+
+
+def _gmm_glu_call(lhs, rhs_g, rhs_u, tile_group, u_off, N, *, block_m,
+                  block_k, block_n, interpret, out_dtype):
+    """Shared pallas_call: lhs/rhs already tile-padded; the up tile of
+    output column-block jn is read at column-block jn + u_off of rhs_u."""
+    Mp, Kp = lhs.shape
+    assert Mp % block_m == 0
+    Np = ((N + block_n - 1) // block_n) * block_n
+    n_m, n_n, n_k = Mp // block_m, Np // block_n, Kp // block_k
+    out_dtype = out_dtype or lhs.dtype
+
+    out = pl.pallas_call(
+        functools.partial(_gmm_glu_kernel, n_k=n_k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_m, n_n, n_k),
+            in_specs=[
+                pl.BlockSpec((block_m, block_k),
+                             lambda im, jn, ik, tg: (im, ik)),
+                pl.BlockSpec((1, block_k, block_n),
+                             lambda im, jn, ik, tg: (tg[im], ik, jn)),
+                pl.BlockSpec((1, block_k, block_n),
+                             lambda im, jn, ik, tg: (tg[im], ik,
+                                                     jn + u_off)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda im, jn, ik, tg: (im, jn)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
+                            pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tile_group, lhs, rhs_g, rhs_u)
     return out[:, :N]
 
 
@@ -154,7 +273,7 @@ def gmm_dw_tiled(lhs, dout, tile_group, n_groups, *, block_m=128, block_k=128,
             scratch_shapes=[pltpu.VMEM((block_k, block_n), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((n_groups, Kp, Np), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(tile_group, lhs, dout)

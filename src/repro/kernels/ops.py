@@ -105,7 +105,13 @@ def _round_up(x: int, m: int) -> int:
 def _pack_meta(group_sizes, m: int, n_groups: int, block_m: int):
     """Destination row for each sorted row + group id per m-tile.
 
-    Static padded size: every group padded up to a block_m multiple.
+    Static padded size: every group padded up to a block_m multiple. Group
+    lookups are O(M log G) ``searchsorted`` binary searches against the
+    cumulative group ends (``ends`` is non-decreasing, so ``side='right'``
+    maps row r to the first group whose end exceeds r) — NOT O(M·G)
+    comparison matrices. Rows beyond sum(group_sizes) land in the last
+    group and produce unspecified output (callers always pass
+    m == sum(group_sizes)).
     """
     padded = ((group_sizes + block_m - 1) // block_m) * block_m
     p_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
@@ -113,7 +119,7 @@ def _pack_meta(group_sizes, m: int, n_groups: int, block_m: int):
     ends = jnp.cumsum(group_sizes)
     starts = ends - group_sizes
     row = jnp.arange(m)
-    gid = jnp.clip(jnp.sum(row[:, None] >= ends[None, :], axis=-1),
+    gid = jnp.clip(jnp.searchsorted(ends, row, side="right"),
                    0, n_groups - 1)
     dest = p_starts[gid] + (row - starts[gid])
 
@@ -122,7 +128,7 @@ def _pack_meta(group_sizes, m: int, n_groups: int, block_m: int):
     tile_ends = jnp.cumsum(padded // block_m)
     tile = jnp.arange(n_tiles)
     tile_group = jnp.clip(
-        jnp.sum(tile[:, None] >= tile_ends[None, :], axis=-1),
+        jnp.searchsorted(tile_ends, tile, side="right"),
         0, n_groups - 1).astype(jnp.int32)
     return dest, tile_group, mp
 
@@ -170,11 +176,218 @@ def gmm(lhs, rhs, group_sizes, *, block_m: int = 128, block_k: int = 128,
     G = rhs.shape[0]
     dest, tile_group, Mp = _pack_meta(group_sizes.astype(jnp.int32), M, G,
                                       block_m)
-    lhs_p = jnp.zeros((Mp, K), lhs.dtype).at[dest].set(lhs)
+    lhs_p = _scatter_rows(lhs, dest, Mp)
     fn = _make_gmm_packed(block_m, block_k, block_n, interpret, G,
                           jnp.dtype(lhs.dtype).name)
     out_p = fn(lhs_p, rhs, tile_group)
-    return jnp.take(out_p, dest, axis=0)
+    return _gather_rows(out_p, dest)
+
+
+# ---------------------------------------------------------------------------
+# Single-pack fused MoE expert FFN (packed domain end to end)
+# ---------------------------------------------------------------------------
+#
+# ops.gmm packs/unpacks the token-copy activation inside EVERY call, so the
+# three expert GEMMs of a GLU FFN cost three scatter/gather pairs forward
+# (and their transposes backward). moe_ffn instead computes the pack
+# metadata once, scatters into the tile-aligned layout once, runs
+# gate/up/down entirely in the packed domain (gate+up fused into one
+# lhs-read via gmm_glu_tiled), and gathers back once — a single custom_vjp
+# whose backward re-uses the metadata and recomputes activations
+# (stage-granular remat, the paper's §6.1 checkpointing setting) instead of
+# storing them or letting XLA transpose three separate scatter/gather
+# pairs. See DESIGN.md §5.
+
+
+def _scatter_rows(values, dest, mp: int, dtype=None):
+    """values [M, d] -> packed [Mp, d]; the ONE pack scatter (dest is
+    strictly increasing and unique by construction)."""
+    out = jnp.zeros((mp, values.shape[1]), dtype or values.dtype)
+    return out.at[dest].set(values.astype(out.dtype), unique_indices=True,
+                            indices_are_sorted=True)
+
+
+def _gather_rows(packed, dest):
+    """Packed [Mp, d] -> [M, d]; the ONE unpack gather."""
+    return jnp.take(packed, dest, axis=0, unique_indices=True,
+                    indices_are_sorted=True)
+
+
+def _tiles_gemm_xla(lhs_p, rhs, tile_group, block_m: int, out_dtype):
+    """XLA fallback for gmm_tiled: the packed domain expressed as a batched
+    matmul over m-tiles, with the per-tile weight selected by ``tile_group``.
+
+    O(Mp·K·N) — unlike lax.ragged_dot, whose CPU lowering runs a dense
+    masked dot per group (O(G·M·K·N)). Used on backends without Mosaic so
+    the single-pack pipeline is the fast path everywhere.
+    """
+    Mp, K = lhs_p.shape
+    n_m = Mp // block_m
+    lt = lhs_p.reshape(n_m, block_m, K)
+    rt = jnp.take(rhs, tile_group, axis=0)  # [n_m, K, N]
+    out = jnp.einsum("tmk,tkn->tmn", lt, rt,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(Mp, rhs.shape[-1]).astype(out_dtype)
+
+
+def _tiles_dw_xla(lhs_p, dout_p, tile_group, n_groups: int, block_m: int):
+    """XLA fallback for gmm_dw_tiled: per-tile outer products reduced per
+    group with a segment sum. drhs[g] = sum_{tiles t of g} lhs_t^T @ dout_t.
+    """
+    Mp, K = lhs_p.shape
+    N = dout_p.shape[1]
+    n_m = Mp // block_m
+    lt = lhs_p.reshape(n_m, block_m, K).astype(jnp.float32)
+    dt = dout_p.reshape(n_m, block_m, N).astype(jnp.float32)
+    per_tile = jnp.einsum("tmk,tmn->tkn", lt, dt,
+                          preferred_element_type=jnp.float32)
+    return jax.ops.segment_sum(per_tile, tile_group,
+                               num_segments=n_groups)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_moe_ffn(block_m, block_k, block_n, interpret, n_groups,
+                  use_kernel, pack, out_dtype_name):
+    """custom_vjp over the whole packed-domain GLU FFN (cached per config).
+
+    pack=True: inputs are expert-sorted rows + a dest map (scatter in /
+    gather out). pack=False: inputs are already tile-aligned (the zebra
+    engines' capacity-packed [E, C, d] buffers flattened) and dest is a
+    0-length dummy.
+    """
+    out_dtype = jnp.dtype(out_dtype_name)
+    blk = dict(block_m=block_m, block_k=block_k, block_n=block_n,
+               interpret=interpret)
+
+    def _gemm(lhs_p, rhs, tile_group, out_dt):
+        if use_kernel:
+            return gmm_kernel.gmm_tiled(lhs_p, rhs, tile_group,
+                                        out_dtype=out_dt, **blk)
+        return _tiles_gemm_xla(lhs_p, rhs, tile_group, block_m, out_dt)
+
+    def _dw(lhs_p, dout_p, tile_group, dt):
+        if use_kernel:
+            return gmm_kernel.gmm_dw_tiled(
+                lhs_p.astype(jnp.float32), dout_p, tile_group, n_groups,
+                **blk).astype(dt)
+        return _tiles_dw_xla(lhs_p, dout_p, tile_group, n_groups,
+                             block_m).astype(dt)
+
+    @jax.custom_vjp
+    def ffn(x, wi_gate, wi_up, wo, dest, tile_group):
+        mp = tile_group.shape[0] * block_m
+        x_p = _scatter_rows(x, dest, mp) if pack else x
+        if use_kernel:
+            h_p = gmm_kernel.gmm_glu_tiled_pair(x_p, wi_gate, wi_up,
+                                                tile_group,
+                                                out_dtype=out_dtype, **blk)
+        else:
+            g = _tiles_gemm_xla(x_p, wi_gate, tile_group, block_m,
+                                jnp.float32)
+            u = _tiles_gemm_xla(x_p, wi_up, tile_group, block_m,
+                                jnp.float32)
+            h_p = (jax.nn.silu(g) * u).astype(out_dtype)
+        out_p = _gemm(h_p, wo, tile_group, out_dtype)
+        return _gather_rows(out_p, dest) if pack else out_p
+
+    def fwd(x, wi_gate, wi_up, wo, dest, tile_group):
+        # Residuals are the INPUTS only: packed activations are recomputed
+        # in bwd (stage-granular remat), re-using the pack metadata.
+        return (ffn(x, wi_gate, wi_up, wo, dest, tile_group),
+                (x, wi_gate, wi_up, wo, dest, tile_group))
+
+    def bwd(res, dout):
+        x, wi_gate, wi_up, wo, dest, tile_group = res
+        mp = tile_group.shape[0] * block_m
+        if pack:
+            x_p = _scatter_rows(x, dest, mp)
+            dout_p = _scatter_rows(dout, dest, mp, jnp.float32)
+        else:
+            x_p = x
+            dout_p = dout.astype(jnp.float32)
+        # Recompute pre-activations (f32) in the packed domain.
+        g_p = _gemm(x_p, wi_gate, tile_group, jnp.float32)
+        u_p = _gemm(x_p, wi_up, tile_group, jnp.float32)
+        sg = jax.lax.logistic(g_p)
+        act = g_p * sg  # silu(g)
+        h_p = act * u_p
+        dwo = _dw(h_p, dout_p, tile_group, wo.dtype)
+        dh_p = _gemm(dout_p, jnp.swapaxes(wo, 1, 2).astype(jnp.float32),
+                     tile_group, jnp.float32)
+        dg_p = dh_p * u_p * (sg * (1.0 + g_p * (1.0 - sg)))  # silu'
+        du_p = dh_p * act
+        dwg = _dw(x_p, dg_p, tile_group, wi_gate.dtype)
+        dwu = _dw(x_p, du_p, tile_group, wi_up.dtype)
+        dx_p = _gemm(dg_p, jnp.swapaxes(wi_gate, 1, 2).astype(jnp.float32),
+                     tile_group, jnp.float32) \
+            + _gemm(du_p, jnp.swapaxes(wi_up, 1, 2).astype(jnp.float32),
+                    tile_group, jnp.float32)
+        dx = (_gather_rows(dx_p, dest) if pack else dx_p).astype(x.dtype)
+        return (dx, dwg, dwu, dwo,
+                np.zeros(dest.shape, jax.dtypes.float0),
+                np.zeros(tile_group.shape, jax.dtypes.float0))
+
+    ffn.defvjp(fwd, bwd)
+    return ffn
+
+
+def _use_kernel_default() -> bool:
+    # Mosaic lowering on TPU; elsewhere the XLA tile-gather path is the
+    # fast one (interpret-mode Pallas is a test vehicle, not a backend).
+    return jax.default_backend() == "tpu"
+
+
+def moe_ffn(x_sorted, wi_gate, wi_up, wo, group_sizes, *,
+            block_m: int = 128, block_k: int = 128,
+            block_n: int = 128, interpret: bool | None = None,
+            use_kernel: bool | None = None):
+    """Whole GLU expert FFN over expert-sorted rows, packed once.
+
+    x_sorted: [M, d] rows sorted by group (M == sum(group_sizes));
+    wi_gate/wi_up: [G, d, f]; wo: [G, f, d]; group_sizes: [G] int32.
+    Returns [M, d] = (silu(x @ wi_gate_g) * (x @ wi_up_g)) @ wo_g per row.
+
+    Exactly ONE pack scatter and ONE unpack gather per forward; the fused
+    backward re-uses the pack metadata and rematerializes activations.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
+    M, _ = x_sorted.shape
+    G = wi_gate.shape[0]
+    dest, tile_group, _ = _pack_meta(group_sizes.astype(jnp.int32), M, G,
+                                     block_m)
+    fn = _make_moe_ffn(block_m, block_k, block_n, interpret, G, use_kernel,
+                       True, jnp.dtype(x_sorted.dtype).name)
+    return fn(x_sorted, wi_gate, wi_up, wo, dest, tile_group)
+
+
+def moe_ffn_packed(buf, wi_gate, wi_up, wo, *, block_m: int | None = None,
+                   block_k: int = 128, block_n: int = 128,
+                   interpret: bool | None = None,
+                   use_kernel: bool | None = None):
+    """moe_ffn for ALREADY capacity-packed [E, C, d] buffers (the zebra
+    engines' dispatch layout): every expert owns exactly C contiguous rows,
+    so the buffer IS the packed domain — no sort, no pack scatter, no
+    unpack gather. Returns [E, C, d].
+    """
+    E, C, d = buf.shape
+    interpret = _interpret_default() if interpret is None else interpret
+    use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
+    # Engines round capacities to multiples of 8; pad odd capacities up
+    # rather than degrading to sub-sublane tiles (zero rows are inert in
+    # both the outputs and the weight gradients).
+    Cp = _round_up(C, 8)
+    if Cp != C:
+        buf = jnp.pad(buf, ((0, 0), (0, Cp - C), (0, 0)))
+    if block_m is None:
+        block_m = next(b for b in (128, 64, 32, 16, 8) if Cp % b == 0)
+    assert Cp % block_m == 0, (Cp, block_m)
+    tile_group = jnp.repeat(jnp.arange(E, dtype=jnp.int32), Cp // block_m)
+    fn = _make_moe_ffn(block_m, block_k, block_n, interpret, E, use_kernel,
+                       False, jnp.dtype(buf.dtype).name)
+    dest = jnp.zeros((0,), jnp.int32)  # unused in the no-pack variant
+    out = fn(buf.reshape(E * Cp, d), wi_gate, wi_up, wo, dest, tile_group)
+    return out.reshape(E, Cp, d)[:, :C]
 
 
 # ---------------------------------------------------------------------------

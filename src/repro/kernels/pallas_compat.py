@@ -1,0 +1,18 @@
+"""jax-version compatibility shims for Pallas TPU APIs.
+
+The pinned container jax (0.4.37) predates two renames we rely on:
+
+* ``pltpu.TPUCompilerParams`` became ``pltpu.CompilerParams`` in jax 0.5.x.
+  Both spellings accept the same ``dimension_semantics`` field, so a single
+  alias suffices.
+
+Import ``CompilerParams`` from here instead of ``pltpu`` in every kernel
+module so the kernels lower on both the pinned jax and newer releases.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

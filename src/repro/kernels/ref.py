@@ -79,6 +79,31 @@ def gmm(lhs, rhs, group_sizes, preferred_element_type=None):
     return out.astype(out_dtype)
 
 
+def gmm_glu(lhs, rhs_stacked, group_sizes, preferred_element_type=None):
+    """Fused-GLU grouped matmul oracle (mirror of gmm.gmm_glu_tiled).
+
+    lhs: [M,K]; rhs_stacked: [G,K,2N] with gate weights in [..., :N] and up
+    weights in [..., N:]. out[m] = silu(lhs[m] @ gate_g) * (lhs[m] @ up_g).
+    """
+    N = rhs_stacked.shape[-1] // 2
+    gu = gmm(lhs, rhs_stacked, group_sizes,
+             preferred_element_type=jnp.float32)
+    out = jax.nn.silu(gu[:, :N]) * gu[:, N:]
+    return out.astype(preferred_element_type or lhs.dtype)
+
+
+def moe_ffn(x_sorted, wi_gate, wi_up, wo, group_sizes):
+    """Whole-expert-FFN oracle: the ground truth for ops.moe_ffn.
+
+    x_sorted: [M,d] rows sorted by expert; wi_*: [G,d,f]; wo: [G,f,d].
+    """
+    g = jax.nn.silu(gmm(x_sorted, wi_gate, group_sizes,
+                        preferred_element_type=jnp.float32))
+    u = gmm(x_sorted, wi_up, group_sizes,
+            preferred_element_type=jnp.float32)
+    return gmm((g * u).astype(x_sorted.dtype), wo, group_sizes)
+
+
 # ---------------------------------------------------------------------------
 # SSD (mamba2 state-space duality) oracles
 # ---------------------------------------------------------------------------

@@ -48,8 +48,11 @@ class RunConfig:
 
     policy: Policy = Policy()
     attn_impl: str = "ref"  # ref | chunked | flash (Pallas)
-    moe_impl: str = "dense"  # dense | gather (ragged_dot / gmm kernel)
-    use_gmm_kernel: bool = False  # gather mode: Pallas gmm vs lax.ragged_dot
+    moe_impl: str = "dense"  # dense | gather (single-pack fused moe_ffn)
+    # gather mode: True forces the Pallas grouped kernels (interpret mode
+    # off-TPU — test vehicle); False lets kernels/ops pick the backend
+    # default (Mosaic on TPU, XLA tile-gather fallback elsewhere).
+    use_gmm_kernel: bool = False
     remat: str = "none"  # none | full | dots
     deterministic: bool = True
     chunk_q: int = 512  # query-chunk size of the chunked attention path
@@ -445,12 +448,12 @@ def moe_route(router_w, cfg: ModelConfig, policy: Policy, x2d):
     probs = jax.nn.softmax(logits, axis=-1)
     weights, idx = jax.lax.top_k(probs, cfg.top_k)
     weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
-    # Switch-style load-balance loss + router z-loss.
+    # Switch-style load-balance loss + router z-loss. The assignment
+    # fraction f is a histogram of the (non-differentiable) top-k indices:
+    # an O(T·k) bincount, not an O(T·E) one_hot materialization.
     T = x2d.shape[0]
-    assign = jnp.zeros((T, cfg.n_experts), policy.accum_dtype)
-    one_hot = jax.nn.one_hot(idx, cfg.n_experts, dtype=policy.accum_dtype)
-    assign = jnp.sum(one_hot, axis=1) / cfg.top_k  # [T, E]
-    f = jnp.mean(assign, axis=0)
+    counts = jnp.bincount(idx.reshape(-1), length=cfg.n_experts)
+    f = counts.astype(policy.accum_dtype) / (T * cfg.top_k)
     p = jnp.mean(probs, axis=0)
     aux = {
         "moe_aux_loss": cfg.n_experts * jnp.sum(f * p) * cfg.router_aux_coef,
@@ -464,16 +467,19 @@ def expert_ffn(wi_gate, wi_up, wo, xs, group_sizes, run: RunConfig):
     """Grouped expert FFN over expert-sorted tokens xs [Tk, d].
 
     wi_*: [E, d, f]; wo: [E, f, d]; group_sizes: [E] int32.
+
+    Single-pack fused pipeline (kernels/ops.moe_ffn): one scatter into the
+    tile-aligned packed domain, all three GEMMs there (gate+up fused), one
+    gather out, one custom_vjp with activation recompute. use_gmm_kernel
+    forces the Pallas grouped kernels; otherwise ops picks the backend
+    default (Mosaic on TPU, the XLA tile-gather fallback elsewhere) for
+    the same packed-domain pipeline.
     """
     cd = run.policy.compute_dtype
-    if run.use_gmm_kernel:
-        from repro.kernels import ops as kops
-        g = jax.nn.silu(kops.gmm(xs, wi_gate.astype(cd), group_sizes))
-        u = kops.gmm(xs, wi_up.astype(cd), group_sizes)
-        return kops.gmm(g * u, wo.astype(cd), group_sizes)
-    g = jax.nn.silu(jax.lax.ragged_dot(xs, wi_gate.astype(cd), group_sizes))
-    u = jax.lax.ragged_dot(xs, wi_up.astype(cd), group_sizes)
-    return jax.lax.ragged_dot(g * u, wo.astype(cd), group_sizes)
+    from repro.kernels import ops as kops
+    return kops.moe_ffn(xs, wi_gate.astype(cd), wi_up.astype(cd),
+                        wo.astype(cd), group_sizes,
+                        use_kernel=True if run.use_gmm_kernel else None)
 
 
 def apply_moe(params, cfg: ModelConfig, run: RunConfig, x):
@@ -504,7 +510,7 @@ def apply_moe(params, cfg: ModelConfig, run: RunConfig, x):
     ys = expert_ffn(params["wi_gate"], params["wi_up"], params["wo"], xs,
                     group_sizes, run)
     w_sorted = jnp.take(weights.reshape(-1), sort, axis=0).astype(cd)
-    y = jnp.zeros((T, d), cd).at[tok].add(ys * w_sorted[:, None])
+    y = jax.ops.segment_sum(ys * w_sorted[:, None], tok, num_segments=T)
     return y.reshape(B, S, d), aux
 
 

@@ -1,0 +1,146 @@
+"""Deterministic fallback for the `hypothesis` API surface this repo uses.
+
+Activated by tests/conftest.py ONLY when the real hypothesis package is not
+installed (this container has no network access for pip). It implements just
+the subset the test-suite imports — ``given``, ``settings`` and the
+``integers`` / ``floats`` / ``sampled_from`` / ``lists`` / ``booleans`` /
+``just`` / ``tuples`` strategies — with a seeded RNG so runs are
+reproducible. Example 0 draws every strategy's minimum and example 1 its
+maximum, so boundary cases (empty groups, zero offload, ...) are always
+exercised; the remaining examples are uniform draws.
+
+If hypothesis is ever installed (see requirements-dev.txt) the real package
+shadows this stub automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__version__ = "0.0-repro-stub"
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng, phase):
+        """phase 0 -> minimal example, 1 -> maximal, else random."""
+        return self._draw(rng, phase)
+
+
+class strategies:  # namespace mirroring `hypothesis.strategies`
+    @staticmethod
+    def integers(min_value, max_value):
+        def draw(rng, phase):
+            if phase == 0:
+                return min_value
+            if phase == 1:
+                return max_value
+            return rng.randint(min_value, max_value)
+        return _Strategy(draw)
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        def draw(rng, phase):
+            if phase == 0:
+                return float(min_value)
+            if phase == 1:
+                return float(max_value)
+            return rng.uniform(min_value, max_value)
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans():
+        def draw(rng, phase):
+            if phase in (0, 1):
+                return bool(phase)
+            return rng.random() < 0.5
+        return _Strategy(draw)
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng, phase: value)
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+
+        def draw(rng, phase):
+            if phase == 0:
+                return elements[0]
+            if phase == 1:
+                return elements[-1]
+            return rng.choice(elements)
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng, phase):
+            if phase == 0:
+                size = min_size
+            elif phase == 1:
+                size = max_size
+            else:
+                size = rng.randint(min_size, max_size)
+            return [elements.draw(rng, phase) for _ in range(size)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(
+            lambda rng, phase: tuple(s.draw(rng, phase) for s in strats))
+
+
+st = strategies
+
+
+class settings:
+    """Decorator factory: records max_examples on the given-wrapped test."""
+
+    def __init__(self, max_examples=10, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strats, **kw_strats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 10)
+            rng = random.Random(0xC0FFEE)
+            for i in range(n):
+                ex_args = [s.draw(rng, i) for s in arg_strats]
+                ex_kw = {k: s.draw(rng, i) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *ex_args, **kwargs, **ex_kw)
+                except _Unsatisfied:
+                    continue
+        # Hide the test's own parameters from pytest's fixture resolution
+        # (they are supplied by the strategies, exactly as real hypothesis
+        # does by exposing a parameterless wrapper).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorate
+
+
+def assume(condition):
+    """Weak `assume`: abandons only the enclosing check, like hypothesis."""
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+class HealthCheck:  # accepted but unused (settings(suppress_health_check=..))
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"

@@ -23,9 +23,11 @@ def moe_cfg(arch="qwen3-moe-30b-a3b", cap=99.0, **kw):
     return dataclasses.replace(cfg, capacity_factor=cap, **kw)
 
 
+@pytest.mark.parametrize("use_gmm_kernel", [False, True])
 @pytest.mark.parametrize("mode", ["replicated", "alltoall"])
-def test_ep_moe_matches_oracle(mesh8, mode):
+def test_ep_moe_matches_oracle(mesh8, mode, use_gmm_kernel):
     cfg = moe_cfg()
+    run = dataclasses.replace(RUN, use_gmm_kernel=use_gmm_kernel)
     ffn, _ = split_params(modules.init_moe(KEY, cfg))
     x = jax.random.normal(KEY, (8, 16, cfg.d_model)) * 0.3
     y_ref, _ = modules.apply_moe(ffn, cfg, RUN, x)
@@ -33,7 +35,7 @@ def test_ep_moe_matches_oracle(mesh8, mode):
         zcfg = Z.ZebraConfig(mode=mode, capacity_factor=99.0,
                              batch_axes=("data",) if mode == "replicated"
                              else ("data", "model"))
-        moe_fn = Z.make_ep_moe(mesh8, cfg, RUN, zcfg)
+        moe_fn = Z.make_ep_moe(mesh8, cfg, run, zcfg)
         y, _ = jax.jit(moe_fn)(ffn, x.reshape(-1, cfg.d_model))
     np.testing.assert_allclose(y.reshape(x.shape), y_ref, atol=1e-4)
 
