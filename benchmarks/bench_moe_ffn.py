@@ -103,7 +103,7 @@ def main():
         return ops.gmm(g * u, wo, gs)
 
     def fused(x, wg, wu, wo):
-        return ops.moe_ffn(x, wg, wu, wo, gs)
+        return ops.moe_ffn(x, wg, wu, wo, gs, small_m=False)
 
     paths = {"dense": dense, "ragged": ragged, "fused": fused}
     if on_tpu or args.with_interpret:
@@ -134,6 +134,38 @@ def main():
           f"{gate['fused_vs_ragged_grad']}x fwd+bwd "
           f"({'PASS' if gate['pass'] else 'FAIL'} at {GATE_SPEEDUP}x)")
 
+    # --- small-M (decode-shape) crossover: group-dense vs packed ----------
+    # ROADMAP follow-up: at small M the packed pipeline's ~E*block_m pad
+    # rows dominate, so moe_ffn auto-routes to the group-dense fallback
+    # when M*(E-1) <= E*block_m (break-even near block_m rows). Record
+    # both sides at the requested token count AND at a true decode shape
+    # (16 tokens ~ a slot batch), bracketing the crossover.
+    small_m = {"auto_rule": "M*(G-1) <= G*block_m", "block_m": 128,
+               "points": []}
+    for sm_tokens in sorted({min(args.tokens, 128), min(args.tokens, 16)}):
+        Ms = sm_tokens * top_k
+        xs_s = xs[:Ms]
+        gs_s = routed_group_sizes(ks[4], Ms, E)
+
+        def sm_path(small_flag, _gs=gs_s):
+            return jax.jit(lambda x, wg, wu, wo: ops.moe_ffn(
+                x, wg, wu, wo, _gs, small_m=small_flag))
+
+        pt = {"rows": Ms,
+              "auto_routes_to": "group_dense"
+              if Ms * (E - 1) <= E * 128 else "fused"}
+        for name, fn in [("group_dense", sm_path(True)),
+                         ("fused_packed", sm_path(False))]:
+            ms = timed(fn, (xs_s, wg, wu, wo), args.iters)
+            pt[f"{name}_fwd_ms"] = round(ms, 3)
+            print(f"small-M ({Ms:4d} rows) {name:12s} fwd {ms:9.2f} ms")
+        pt["group_dense_speedup"] = round(
+            pt["fused_packed_fwd_ms"] / pt["group_dense_fwd_ms"], 3)
+        print(f"small-M ({Ms:4d} rows): group-dense "
+              f"{pt['group_dense_speedup']}x vs packed "
+              f"(auto -> {pt['auto_routes_to']})")
+        small_m["points"].append(pt)
+
     payload = {
         "bench": "moe_ffn",
         "shape": {"name": shape_name, "d_model": d, "d_ff": f, "experts": E,
@@ -141,6 +173,7 @@ def main():
         "backend": jax.default_backend(),
         "iters": args.iters,
         "results": results,
+        "small_m": small_m,
         "gate": gate,
     }
     out = pathlib.Path(args.out) if args.out else \

@@ -1,0 +1,87 @@
+"""Serving benchmark: a fixed mixed-length Poisson trace through the
+continuous-batching engine. Tracks tokens/s, time-to-first-token and
+inter-token latency across PRs via BENCH_serve.json.
+
+Reuses launch/serve.py::serve_arch (one engine wiring, two entry points)
+so the benchmark always measures exactly what the driver runs.
+
+No hard gate: absolute numbers are host-dependent; the JSON is the
+trend record (and the run doubles as an integration check — it fails if
+any request is dropped or the engine stalls).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+
+ARCHS = ("qwen3-moe-30b-a3b", "llama3.2-3b")  # MoE + dense
+
+
+def bench_arch(arch: str, args) -> dict:
+    from repro.launch.serve import serve_arch
+
+    t0 = time.perf_counter()
+    s = serve_arch(arch, args)
+    wall = time.perf_counter() - t0
+    assert s["n_requests"] == args.requests, "dropped requests"
+    return {
+        "requests": s["n_requests"],
+        "generated_tokens": s["n_generated_tokens"],
+        "wall_s": round(wall, 3),
+        "tokens_per_s": s["tokens_per_s"],
+        "ttft_s_p50": round(s["ttft_s"]["p50"], 4),
+        "ttft_s_max": round(s["ttft_s"]["max"], 4),
+        "itl_s_p50": round(s["itl_s"]["p50"], 5),
+        "itl_s_p95": round(s["itl_s"]["p95"], 5),
+        "queue_depth_max": s["queue_depth"]["max"],
+        "max_concurrent_active": s["max_concurrent_active"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    # fixed-trace knobs serve_arch reads beyond the CLI ones above
+    args.mesh = "1x1"
+    args.rate = 0.5
+    args.seed = 0
+    args.prefill_budget = None
+    args.temperature = 0.0
+    args.top_k = 0
+    args.top_p = 1.0
+    args.stream = False
+
+    payload = {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "trace": {"slots": args.slots, "requests": args.requests,
+                  "prompt_len": args.prompt_len, "gen": args.gen,
+                  "prefill_chunk": args.prefill_chunk, "rate": args.rate,
+                  "seed": args.seed},
+        "results": {arch: bench_arch(arch, args) for arch in ARCHS},
+    }
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

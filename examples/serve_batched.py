@@ -1,5 +1,5 @@
-"""Batched serving example: prefill + continuous greedy decode
-(deliverable b, serving flavour).
+"""Continuous-batching serving example: Poisson trace, chunked prefill,
+slot recycling (deliverable b, serving flavour).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/serve_batched.py
@@ -15,8 +15,9 @@ def main():
     n = jax.device_count()
     mesh = {1: "1x1", 2: "1x2", 4: "2x2", 8: "2x4"}.get(n, f"1x{n}")
     return serve_cli.main([
-        "--arch", "qwen3-moe-30b-a3b", "--smoke", "--batch", "4",
-        "--prompt-len", "32", "--gen", "16", "--mesh", mesh,
+        "--arch", "qwen3-moe-30b-a3b", "--smoke", "--slots", "4",
+        "--requests", "6", "--prompt-len", "32", "--gen", "16",
+        "--prefill-chunk", "8", "--mesh", mesh,
     ])
 
 

@@ -247,13 +247,19 @@ def _tiles_dw_xla(lhs_p, dout_p, tile_group, n_groups: int, block_m: int):
 
 @functools.lru_cache(maxsize=None)
 def _make_moe_ffn(block_m, block_k, block_n, interpret, n_groups,
-                  use_kernel, pack, out_dtype_name):
+                  use_kernel, pack, out_dtype_name, scaled):
     """custom_vjp over the whole packed-domain GLU FFN (cached per config).
 
     pack=True: inputs are expert-sorted rows + a dest map (scatter in /
     gather out). pack=False: inputs are already tile-aligned (the zebra
     engines' capacity-packed [E, C, d] buffers flattened) and dest is a
     0-length dummy.
+
+    scaled=True: a per-row [M] scale (the router combine weight) is
+    multiplied into the unpacked rows, fusing the combine's weighting into
+    the ONE unpack gather — gather mode touches each output row exactly
+    once. Its gradient is exact at the cost of one extra grouped GEMM in
+    the backward (the unscaled output rows are rematerialized).
     """
     out_dtype = jnp.dtype(out_dtype_name)
     blk = dict(block_m=block_m, block_k=block_k, block_n=block_n,
@@ -274,7 +280,7 @@ def _make_moe_ffn(block_m, block_k, block_n, interpret, n_groups,
                              block_m).astype(dt)
 
     @jax.custom_vjp
-    def ffn(x, wi_gate, wi_up, wo, dest, tile_group):
+    def ffn(x, wi_gate, wi_up, wo, scales, dest, tile_group):
         mp = tile_group.shape[0] * block_m
         x_p = _scatter_rows(x, dest, mp) if pack else x
         if use_kernel:
@@ -288,29 +294,43 @@ def _make_moe_ffn(block_m, block_k, block_n, interpret, n_groups,
                                 jnp.float32)
             h_p = (jax.nn.silu(g) * u).astype(out_dtype)
         out_p = _gemm(h_p, wo, tile_group, out_dtype)
-        return _gather_rows(out_p, dest) if pack else out_p
+        out = _gather_rows(out_p, dest) if pack else out_p
+        if scaled:
+            out = out * scales.astype(out.dtype)[:, None]
+        return out
 
-    def fwd(x, wi_gate, wi_up, wo, dest, tile_group):
+    def fwd(x, wi_gate, wi_up, wo, scales, dest, tile_group):
         # Residuals are the INPUTS only: packed activations are recomputed
         # in bwd (stage-granular remat), re-using the pack metadata.
-        return (ffn(x, wi_gate, wi_up, wo, dest, tile_group),
-                (x, wi_gate, wi_up, wo, dest, tile_group))
+        return (ffn(x, wi_gate, wi_up, wo, scales, dest, tile_group),
+                (x, wi_gate, wi_up, wo, scales, dest, tile_group))
 
     def bwd(res, dout):
-        x, wi_gate, wi_up, wo, dest, tile_group = res
+        x, wi_gate, wi_up, wo, scales, dest, tile_group = res
         mp = tile_group.shape[0] * block_m
+        dout_f = dout.astype(jnp.float32)
+        d_rows = dout_f * scales.astype(jnp.float32)[:, None] if scaled \
+            else dout_f
         if pack:
             x_p = _scatter_rows(x, dest, mp)
-            dout_p = _scatter_rows(dout, dest, mp, jnp.float32)
+            dout_p = _scatter_rows(d_rows, dest, mp, jnp.float32)
         else:
             x_p = x
-            dout_p = dout.astype(jnp.float32)
+            dout_p = d_rows
         # Recompute pre-activations (f32) in the packed domain.
         g_p = _gemm(x_p, wi_gate, tile_group, jnp.float32)
         u_p = _gemm(x_p, wi_up, tile_group, jnp.float32)
         sg = jax.lax.logistic(g_p)
         act = g_p * sg  # silu(g)
         h_p = act * u_p
+        if scaled:
+            # d(scale_r) = dout_r · y_r needs the unscaled output rows —
+            # one extra grouped GEMM (stage remat, nothing stored).
+            y_p = _gemm(h_p, wo, tile_group, jnp.float32)
+            y_rows = _gather_rows(y_p, dest) if pack else y_p
+            dscales = jnp.sum(dout_f * y_rows, axis=-1).astype(scales.dtype)
+        else:
+            dscales = jnp.zeros(scales.shape, scales.dtype)
         dwo = _dw(h_p, dout_p, tile_group, wo.dtype)
         dh_p = _gemm(dout_p, jnp.swapaxes(wo, 1, 2).astype(jnp.float32),
                      tile_group, jnp.float32)
@@ -323,7 +343,7 @@ def _make_moe_ffn(block_m, block_k, block_n, interpret, n_groups,
             + _gemm(du_p, jnp.swapaxes(wi_up, 1, 2).astype(jnp.float32),
                     tile_group, jnp.float32)
         dx = (_gather_rows(dx_p, dest) if pack else dx_p).astype(x.dtype)
-        return (dx, dwg, dwu, dwo,
+        return (dx, dwg, dwu, dwo, dscales,
                 np.zeros(dest.shape, jax.dtypes.float0),
                 np.zeros(tile_group.shape, jax.dtypes.float0))
 
@@ -337,28 +357,74 @@ def _use_kernel_default() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def moe_ffn_group_dense(x_sorted, wi_gate, wi_up, wo, group_sizes, *,
+                        row_scales=None):
+    """Small-M (decode-shape) expert FFN: dense per-group GEMMs + a per-row
+    select. O(G·M·d·f) arithmetic — G× the packed pipeline's — but no pack
+    scatter, no per-tile weight gather, and none of the packed path's
+    ~G·block_m pad rows, which dominate below M ≈ block_m·G/(G−1)
+    (`bench_moe_ffn.py` records the crossover in BENCH_moe_ffn.json).
+    Autodiff-native: at small M the [G, M, f] intermediates are cheap to
+    store, so no custom_vjp / remat is needed.
+    """
+    M = x_sorted.shape[0]
+    G = wi_gate.shape[0]
+    ends = jnp.cumsum(group_sizes.astype(jnp.int32))
+    gid = jnp.clip(jnp.searchsorted(ends, jnp.arange(M), side="right"),
+                   0, G - 1)
+    g = jnp.einsum("md,gdf->gmf", x_sorted, wi_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("md,gdf->gmf", x_sorted, wi_up,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x_sorted.dtype)
+    y = jnp.einsum("gmf,gfd->gmd", h, wo,
+                   preferred_element_type=jnp.float32)
+    y = y[gid, jnp.arange(M)]
+    if row_scales is not None:
+        y = y * row_scales.astype(jnp.float32)[:, None]
+    return y.astype(x_sorted.dtype)
+
+
 def moe_ffn(x_sorted, wi_gate, wi_up, wo, group_sizes, *,
-            block_m: int = 128, block_k: int = 128,
+            row_scales=None, block_m: int = 128, block_k: int = 128,
             block_n: int = 128, interpret: bool | None = None,
-            use_kernel: bool | None = None):
+            use_kernel: bool | None = None, small_m: bool | None = None):
     """Whole GLU expert FFN over expert-sorted rows, packed once.
 
     x_sorted: [M, d] rows sorted by group (M == sum(group_sizes));
     wi_gate/wi_up: [G, d, f]; wo: [G, f, d]; group_sizes: [G] int32.
-    Returns [M, d] = (silu(x @ wi_gate_g) * (x @ wi_up_g)) @ wo_g per row.
+    Returns [M, d] = (silu(x @ wi_gate_g) * (x @ wi_up_g)) @ wo_g per row,
+    times row_scales[r] when given ([M] router combine weights — fused
+    into the one unpack gather so each output row is touched once).
 
     Exactly ONE pack scatter and ONE unpack gather per forward; the fused
     backward re-uses the pack metadata and rematerializes activations.
+
+    small_m: True forces / False forbids the group-dense fallback
+    (`moe_ffn_group_dense`); None auto-routes to it when
+    M * (G - 1) <= G * block_m, i.e. M ≲ block_m · G/(G-1): the packed
+    pipeline always pays ~G·block_m pad rows while group-dense pays
+    (G-1)·M extra dense rows, so they break even near block_m — measured
+    at mixtral-w1/4 ratios the crossover sits between 128 and 256 rows
+    (BENCH_moe_ffn.json `small_m`). Decode shapes (M = slots · top_k) sit
+    far below it.
     """
-    interpret = _interpret_default() if interpret is None else interpret
-    use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
     M, _ = x_sorted.shape
     G = wi_gate.shape[0]
+    if small_m is None:
+        small_m = M * (G - 1) <= G * block_m
+    if small_m:
+        return moe_ffn_group_dense(x_sorted, wi_gate, wi_up, wo,
+                                   group_sizes, row_scales=row_scales)
+    interpret = _interpret_default() if interpret is None else interpret
+    use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
     dest, tile_group, _ = _pack_meta(group_sizes.astype(jnp.int32), M, G,
                                      block_m)
+    scaled = row_scales is not None
     fn = _make_moe_ffn(block_m, block_k, block_n, interpret, G, use_kernel,
-                       True, jnp.dtype(x_sorted.dtype).name)
-    return fn(x_sorted, wi_gate, wi_up, wo, dest, tile_group)
+                       True, jnp.dtype(x_sorted.dtype).name, scaled)
+    scales = row_scales if scaled else jnp.zeros((0,), x_sorted.dtype)
+    return fn(x_sorted, wi_gate, wi_up, wo, scales, dest, tile_group)
 
 
 def moe_ffn_packed(buf, wi_gate, wi_up, wo, *, block_m: int | None = None,
@@ -384,9 +450,11 @@ def moe_ffn_packed(buf, wi_gate, wi_up, wo, *, block_m: int | None = None,
     assert Cp % block_m == 0, (Cp, block_m)
     tile_group = jnp.repeat(jnp.arange(E, dtype=jnp.int32), Cp // block_m)
     fn = _make_moe_ffn(block_m, block_k, block_n, interpret, E, use_kernel,
-                       False, jnp.dtype(buf.dtype).name)
+                       False, jnp.dtype(buf.dtype).name, False)
     dest = jnp.zeros((0,), jnp.int32)  # unused in the no-pack variant
-    out = fn(buf.reshape(E * Cp, d), wi_gate, wi_up, wo, dest, tile_group)
+    scales = jnp.zeros((0,), buf.dtype)  # unused in the unscaled variant
+    out = fn(buf.reshape(E * Cp, d), wi_gate, wi_up, wo, scales, dest,
+             tile_group)
     return out.reshape(E, Cp, d)[:, :C]
 
 

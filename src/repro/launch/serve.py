@@ -1,7 +1,11 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""Continuous-batching serving driver: Poisson arrivals, chunked prefill,
+per-slot sampled decode, streaming per-request output (DESIGN.md §7).
+
+    # MoE + dense smoke archs through a mixed-length Poisson trace:
+    PYTHONPATH=src python -m repro.launch.serve --smoke --mesh 1x1
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
-        --smoke --batch 4 --prompt-len 64 --gen 32 --mesh 1x2
+        --smoke --slots 4 --requests 8 --prompt-len 64 --gen 32 --mesh 1x2
 """
 
 from __future__ import annotations
@@ -12,65 +16,160 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.launch.mesh import make_mesh
-from repro.models import registry
-from repro.models.config import ShapeConfig
+from repro.models import registry, stack
 from repro.models.modules import Policy, RunConfig
 from repro.pytree import split_params
-from repro.serve.engine import BatchedServer, make_serve_program
+from repro.serve import (ContinuousBatchingEngine, Request, SamplingParams,
+                         Scheduler, ServeMetrics, make_continuous_program)
+
+SMOKE_ARCHS = ("qwen3-moe-30b-a3b", "llama3.2-3b")  # MoE + dense
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--mesh", default="1x1")
-    args = ap.parse_args(argv)
+def build_trace(seed: int, n: int, rate: float, prompt_len: int, gen: int,
+                vocab: int, sampling: SamplingParams,
+                eos_token=None) -> list:
+    """Mixed-length Poisson trace: exponential inter-arrivals (in engine
+    ticks), prompt lengths in [prompt_len/4, prompt_len], generation
+    budgets in [gen/2, gen]."""
+    rng = np.random.RandomState(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.randint(max(1, prompt_len // 4), prompt_len + 1))
+        gmax = int(rng.randint(max(1, gen // 2), gen + 1))
+        prompt = rng.randint(0, vocab, size=(plen,)).astype(int).tolist()
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gmax,
+                            sampling=sampling, eos_token=eos_token,
+                            arrival=t))
+    return reqs
 
-    cfg = registry.get_config(args.arch)
-    if args.smoke:
-        cfg = registry.smoke_config(cfg)
-    d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = make_mesh((d, m), ("data", "model"))
-    run = RunConfig(policy=Policy(), attn_impl="ref", moe_impl="gather")
+
+def serve_arch_lockstep(cfg, mesh, run, args) -> dict:
+    """Whole-batch lockstep fallback for enc-dec / vision archs (they need
+    per-request front embeddings the continuous engine does not carry)."""
+    from repro.models.config import ShapeConfig
+    from repro.serve import BatchedServer, make_serve_program
     max_len = args.prompt_len + args.gen
-    shape = ShapeConfig("cli", "decode", max_len, args.batch)
+    shape = ShapeConfig("cli", "decode", max_len, args.slots)
     program = make_serve_program(cfg, mesh, run, shape, max_len=max_len)
-
     key = jax.random.PRNGKey(0)
-    from repro.models import stack
     with mesh:
         params = jax.jit(
             lambda: split_params(stack.init_model(key, cfg))[0],
             out_shardings=program.param_shardings)()
-    server = BatchedServer(program, params, args.batch, max_len)
-
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+    server = BatchedServer(program, params, args.slots, max_len)
+    prompts = jax.random.randint(key, (args.slots, args.prompt_len), 0,
                                  cfg.vocab_size, jnp.int32)
     fronts = {}
     if cfg.is_encdec:
         fronts["encoder_embeds"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq, cfg.d_model),
+            (args.slots, cfg.encoder_seq, cfg.d_model),
             run.policy.compute_dtype)
     if cfg.vision_seq > 0:
         fronts["vision_embeds"] = jnp.zeros(
-            (args.batch, cfg.vision_seq, cfg.vision_dim or cfg.d_model),
+            (args.slots, cfg.vision_seq, cfg.vision_dim or cfg.d_model),
             run.policy.compute_dtype)
-
-    t0 = time.time()
+    t0 = time.perf_counter()
     server.submit_prefill(prompts, fronts)
     out = [server.tokens]
     for _ in range(args.gen - 1):
         out.append(server.step(fronts))
     toks = jnp.concatenate(out, axis=1)
-    dt = time.time() - t0
-    print(f"[serve] arch={cfg.name} generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print(toks[:, :16])
+    dt = time.perf_counter() - t0
+    tps = round(args.slots * args.gen / dt, 2)
+    print(f"[serve] arch={cfg.name} lockstep fallback generated "
+          f"{toks.shape} in {dt:.2f}s ({tps} tok/s)")
+    return {"tokens_per_s": tps, "lockstep": True}
+
+
+def serve_arch(arch: str, args) -> dict:
+    cfg = registry.get_config(arch)
+    if args.smoke:
+        cfg = registry.smoke_config(cfg)
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((d, m), ("data", "model"))
+    run = RunConfig(policy=Policy(), attn_impl="ref", moe_impl="gather")
+    if cfg.is_encdec or cfg.vision_seq > 0:
+        return serve_arch_lockstep(cfg, mesh, run, args)
+    max_len = args.prompt_len + args.gen
+    program = make_continuous_program(cfg, mesh, run, n_slots=args.slots,
+                                      max_len=max_len, seed=args.seed)
+
+    key = jax.random.PRNGKey(0)
+    with mesh:
+        params = jax.jit(
+            lambda: split_params(stack.init_model(key, cfg))[0],
+            out_shardings=program.param_shardings)()
+
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
+    trace = build_trace(args.seed, args.requests, args.rate,
+                        args.prompt_len, args.gen, cfg.vocab_size, sampling)
+    sched = Scheduler(args.slots, max_len, prefill_chunk=args.prefill_chunk,
+                      token_budget=args.prefill_budget)
+    metrics = ServeMetrics()
+    stream = None
+    if args.stream:
+        def stream(rid, tok, fin):
+            print(f"[{cfg.name}] rid={rid} tok={tok}"
+                  + (" <done>" if fin else ""))
+    engine = ContinuousBatchingEngine(program, params, sched,
+                                      metrics=metrics, on_token=stream)
+    t0 = time.perf_counter()
+    results = engine.run(trace)
+    dt = time.perf_counter() - t0
+
+    for req in trace:
+        tr = metrics.requests[req.rid]
+        toks = results[req.rid]
+        print(f"[{cfg.name}] rid={req.rid} prompt={len(req.prompt)} "
+              f"gen={len(toks)}/{req.max_new_tokens} "
+              f"first_tick={tr.first_token_tick} "
+              f"finish_tick={tr.finish_tick} out={toks[:8]}...")
+    s = metrics.summary()
+    print(f"[serve] arch={cfg.name} {s['n_requests']} requests, "
+          f"{s['n_generated_tokens']} tokens in {dt:.2f}s "
+          f"({s['tokens_per_s']} tok/s, ttft p50 {s['ttft_s']['p50']:.3f}s, "
+          f"itl p50 {s['itl_s']['p50']:.4f}s, "
+          f"queue depth max {s['queue_depth']['max']}, "
+          f"max concurrent {s['max_concurrent_active']})")
+    return s
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="default: llama3.2-3b; with --smoke and no --arch, "
+                         "runs the MoE + dense smoke pair")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent KV slots (decode batch)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--rate", type=float, default=0.4,
+                    help="Poisson arrival rate (requests per engine tick)")
+    ap.add_argument("--prompt-len", type=int, default=48,
+                    help="max prompt length (trace mixes lengths below it)")
+    ap.add_argument("--gen", type=int, default=24,
+                    help="max new tokens (trace mixes budgets below it)")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prefill tokens per tick (default: one chunk)")
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else \
+        (list(SMOKE_ARCHS) if args.smoke else ["llama3.2-3b"])
+    for arch in archs:
+        serve_arch(arch, args)
     return 0
 
 

@@ -303,12 +303,21 @@ def _attention_inner(q, k, v, cfg: ModelConfig, run: RunConfig, *,
 
 def apply_attention(params, cfg: ModelConfig, run: RunConfig, x, positions,
                     *, causal: bool, window: int = 0, kv=None, kv_positions=None,
-                    cache=None, cache_index=None, rope: bool = True):
+                    cache=None, cache_index=None, rope: bool = True,
+                    attend_to_cache: bool = False):
     """Full/local/cross attention with optional KV cache (decode).
 
     x: [B, S, d]; positions: [B, S].
     kv: cross-attention memory [B, T, d] (rope disabled for cross).
     cache: dict(k=[B, C, KH, hd], v=..., pos=[B, C]) -> returns updated cache.
+    cache_index: scalar (lockstep decode / prefill offset) or per-slot [B]
+        vector (continuous batching, DESIGN.md §7.2): row b writes its own
+        cache line at cache_index[b]; rows with negative positions write
+        nothing, so dead slots never touch their cache.
+    attend_to_cache: with S > 1, attend over the full (just-updated) cache
+        instead of assuming it empty — chunked prefill, where earlier
+        chunks' keys live in the cache. Unwritten lines (pos == -1) are
+        masked out.
     """
     B, S, _ = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -336,7 +345,21 @@ def apply_attention(params, cfg: ModelConfig, run: RunConfig, x, positions,
     if cache is not None:
         # Ring-buffer cache (window>0) or linear cache. Keys stored post-rope.
         C = cache["k"].shape[1]
-        if window > 0 and S >= C:
+        if jnp.ndim(cache_index) == 1:
+            # Per-slot positions [B]: each row scatters its single new K/V
+            # into its own cache line. Inactive slots carry position -1,
+            # which maps to the out-of-bounds sentinel C and is dropped —
+            # the write never happens, so freed slots stay inert until the
+            # next insert overwrites them wholesale.
+            assert S == 1, "per-slot cache_index implies single-token decode"
+            slot = (cache_index % C) if window > 0 else cache_index
+            slot = jnp.where(cache_index >= 0, slot, C)
+            b_ix = jnp.arange(B)
+            ck = cache["k"].at[b_ix, slot].set(k[:, 0], mode="drop")
+            cv = cache["v"].at[b_ix, slot].set(v[:, 0], mode="drop")
+            cpos = cache["pos"].at[b_ix, slot].set(
+                positions[:, 0].astype(cache["pos"].dtype), mode="drop")
+        elif window > 0 and S >= C:
             # prefill block larger than the ring: only the last C keys
             # survive; place key of position p at ring slot p % C.
             shift = (cache_index + S - C) % C
@@ -344,6 +367,15 @@ def apply_attention(params, cfg: ModelConfig, run: RunConfig, x, positions,
             cv = jnp.roll(v[:, -C:], shift, axis=1)
             cpos = jnp.roll(positions[:, -C:].astype(cache["pos"].dtype),
                             shift, axis=1)
+        elif window > 0 and S > 1:
+            # Chunked prefill into a ring (S < C): per-position modular
+            # scatter — a dynamic_update_slice would CLAMP (not wrap) a
+            # chunk that crosses the ring edge and corrupt the cache.
+            idx = (cache_index + jnp.arange(S)) % C
+            ck = cache["k"].at[:, idx].set(k)
+            cv = cache["v"].at[:, idx].set(v)
+            cpos = cache["pos"].at[:, idx].set(
+                positions.astype(cache["pos"].dtype))
         else:
             slot = (cache_index % C) if window > 0 else cache_index
             ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
@@ -351,13 +383,15 @@ def apply_attention(params, cfg: ModelConfig, run: RunConfig, x, positions,
             cpos = jax.lax.dynamic_update_slice(
                 cache["pos"], positions.astype(cache["pos"].dtype), (0, slot))
         new_cache = {"k": ck, "v": cv, "pos": cpos}
-        if S == 1:
-            # decode: attend over the cache contents
+        if S == 1 or attend_to_cache:
+            # decode / chunked prefill: attend over the cache contents
+            # (earlier chunks included; pos == -1 lines are masked out).
             k, v, kv_pos = ck, cv, cpos
         else:
-            # prefill: the cache is assumed empty at entry, so attention
-            # runs structurally over the fresh K/V (never materializing the
-            # [S, S] score matrix); the cache write is a side effect.
+            # whole-sequence prefill: the cache is assumed empty at entry,
+            # so attention runs structurally over the fresh K/V (never
+            # materializing the [S, S] score matrix); the cache write is a
+            # side effect.
             structural = True
 
     out = _attention_inner(
@@ -463,22 +497,26 @@ def moe_route(router_w, cfg: ModelConfig, policy: Policy, x2d):
     return weights, idx.astype(jnp.int32), aux
 
 
-def expert_ffn(wi_gate, wi_up, wo, xs, group_sizes, run: RunConfig):
+def expert_ffn(wi_gate, wi_up, wo, xs, group_sizes, run: RunConfig,
+               row_scales=None):
     """Grouped expert FFN over expert-sorted tokens xs [Tk, d].
 
     wi_*: [E, d, f]; wo: [E, f, d]; group_sizes: [E] int32.
+    row_scales: optional [Tk] per-row combine weights, fused into the
+    unpack gather (each output row touched once).
 
     Single-pack fused pipeline (kernels/ops.moe_ffn): one scatter into the
     tile-aligned packed domain, all three GEMMs there (gate+up fused), one
     gather out, one custom_vjp with activation recompute. use_gmm_kernel
     forces the Pallas grouped kernels; otherwise ops picks the backend
     default (Mosaic on TPU, the XLA tile-gather fallback elsewhere) for
-    the same packed-domain pipeline.
+    the same packed-domain pipeline. Decode shapes (M ≲ E·block_m) route
+    to the group-dense fallback automatically (DESIGN.md §5.5).
     """
     cd = run.policy.compute_dtype
     from repro.kernels import ops as kops
     return kops.moe_ffn(xs, wi_gate.astype(cd), wi_up.astype(cd),
-                        wo.astype(cd), group_sizes,
+                        wo.astype(cd), group_sizes, row_scales=row_scales,
                         use_kernel=True if run.use_gmm_kernel else None)
 
 
@@ -502,15 +540,18 @@ def apply_moe(params, cfg: ModelConfig, run: RunConfig, x):
         return y.reshape(B, S, d), aux
 
     # Dropless gather mode: sort token-copies by expert, grouped matmul.
+    # The router combine weight rides into the FFN as a fused row scale,
+    # so the unpack gather emits already-weighted rows and the combine is
+    # a bare segment-sum (one touch per output row).
     flat_idx = idx.reshape(-1)  # [T*k]
     sort = jnp.argsort(flat_idx)
     tok = sort // k
     xs = jnp.take(x2d, tok, axis=0)
     group_sizes = jnp.bincount(flat_idx, length=cfg.n_experts).astype(jnp.int32)
-    ys = expert_ffn(params["wi_gate"], params["wi_up"], params["wo"], xs,
-                    group_sizes, run)
     w_sorted = jnp.take(weights.reshape(-1), sort, axis=0).astype(cd)
-    y = jax.ops.segment_sum(ys * w_sorted[:, None], tok, num_segments=T)
+    ys = expert_ffn(params["wi_gate"], params["wi_up"], params["wo"], xs,
+                    group_sizes, run, row_scales=w_sorted)
+    y = jax.ops.segment_sum(ys, tok, num_segments=T)
     return y.reshape(B, S, d), aux
 
 
@@ -724,7 +765,8 @@ def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
 
 def apply_mixer_part(params, cfg: ModelConfig, run: RunConfig, spec: LayerSpec,
                      x, positions, state=None, encoder_out=None,
-                     encoder_positions=None, cache_index=None):
+                     encoder_positions=None, cache_index=None,
+                     attend_to_cache: bool = False):
     """Pre-norm mixer + residual (+ cross-attn). Returns (h, new_state)."""
     new_state = dict(state) if state is not None else None
     h = x
@@ -736,7 +778,8 @@ def apply_mixer_part(params, cfg: ModelConfig, run: RunConfig, spec: LayerSpec,
             cache = state.get("kv") if state is not None else None
             att, new_kv = apply_attention(
                 params["mixer"], cfg, run, u, positions, causal=causal,
-                window=window, cache=cache, cache_index=cache_index)
+                window=window, cache=cache, cache_index=cache_index,
+                attend_to_cache=attend_to_cache)
             if new_state is not None:
                 new_state["kv"] = new_kv
             mixed = att
@@ -783,11 +826,12 @@ def apply_ffn_part(params, cfg: ModelConfig, run: RunConfig, spec: LayerSpec,
 def apply_layer(params, cfg: ModelConfig, run: RunConfig, spec: LayerSpec,
                 x, positions, state=None, encoder_out=None,
                 encoder_positions=None, cache_index=None,
-                moe_override: Optional[Callable] = None):
+                moe_override: Optional[Callable] = None,
+                attend_to_cache: bool = False):
     h, new_state = apply_mixer_part(
         params, cfg, run, spec, x, positions, state=state,
         encoder_out=encoder_out, encoder_positions=encoder_positions,
-        cache_index=cache_index)
+        cache_index=cache_index, attend_to_cache=attend_to_cache)
     y, aux = apply_ffn_part(params, cfg, run, spec, h,
                             moe_override=moe_override)
     return y, new_state, aux

@@ -96,7 +96,8 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
                  x, positions, states=None, tail_states=None,
                  encoder_out=None, encoder_positions=None, cache_index=None,
                  layer_override: Optional[Callable] = None,
-                 moe_override: Optional[Callable] = None):
+                 moe_override: Optional[Callable] = None,
+                 attend_to_cache: bool = False):
     """Run the scanned pattern stack + tail. Returns (x, new_states, aux)."""
     aux = _zero_aux()
     decode = states is not None
@@ -119,7 +120,8 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
                     p, cfg, run, spec, x, positions, state=st,
                     encoder_out=encoder_out,
                     encoder_positions=encoder_positions,
-                    cache_index=cache_index, moe_override=moe_override)
+                    cache_index=cache_index, moe_override=moe_override,
+                    attend_to_cache=attend_to_cache)
             x = y
             a = _acc_aux(a, laux)
             if decode:
@@ -166,7 +168,7 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
         x, ns, a = one_block_single(tp, cfg, run, spec, x, positions, st,
                                     encoder_out, encoder_positions,
                                     cache_index, layer_override, decode,
-                                    moe_override)
+                                    moe_override, attend_to_cache)
         aux = _acc_aux(aux, a)
         new_tail_states.append(ns)
 
@@ -178,7 +180,7 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
 
 def one_block_single(p, cfg, run, spec, x, positions, st, encoder_out,
                      encoder_positions, cache_index, layer_override, decode,
-                     moe_override=None):
+                     moe_override=None, attend_to_cache=False):
     if layer_override is not None and spec.ffn == "moe" and not decode:
         y, laux = layer_override(p, spec, x, positions)
         return y, None, laux
@@ -186,7 +188,8 @@ def one_block_single(p, cfg, run, spec, x, positions, st, encoder_out,
                                encoder_out=encoder_out,
                                encoder_positions=encoder_positions,
                                cache_index=cache_index,
-                               moe_override=moe_override)
+                               moe_override=moe_override,
+                               attend_to_cache=attend_to_cache)
 
 
 def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
@@ -194,12 +197,17 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
                 encoder_embeds=None, vision_embeds=None,
                 layer_override: Optional[Callable] = None,
                 moe_override: Optional[Callable] = None,
-                return_hidden: bool = False):
+                return_hidden: bool = False,
+                attend_to_cache: bool = False):
     """Forward pass.
 
     tokens: [B, S] int32.
     positions: [B, S] (defaults to arange / cache_index).
     decode_state: state tree from init_decode_state (enables KV caching).
+    cache_index: scalar next-cache-line index, or per-slot [B] vector
+        (continuous batching — each sequence at its own position).
+    attend_to_cache: S > 1 prefill attends over the existing cache instead
+        of assuming it empty (chunked prefill, DESIGN.md §7).
     encoder_embeds: [B, T_enc, d] stub audio-frontend output (whisper).
     vision_embeds: [B, vision_seq, vision_dim] stub patch embeddings (VLM).
 
@@ -209,8 +217,10 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
     pol = run.policy
     if positions is None:
         if cache_index is not None:
-            positions = jnp.full((B, S), 0, jnp.int32) + cache_index \
-                + jnp.arange(S, dtype=jnp.int32)[None, :]
+            ci = jnp.asarray(cache_index, jnp.int32)
+            base = ci[:, None] if ci.ndim == 1 else ci
+            positions = jnp.broadcast_to(
+                base + jnp.arange(S, dtype=jnp.int32), (B, S))
         else:
             positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
                                          (B, S))
@@ -253,7 +263,7 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
         states=decode_state, tail_states=tail_states,
         encoder_out=encoder_out, encoder_positions=encoder_positions,
         cache_index=cache_index, layer_override=layer_override,
-        moe_override=moe_override)
+        moe_override=moe_override, attend_to_cache=attend_to_cache)
 
     x = modules.apply_norm(params["final_norm"], x, pol)
     if return_hidden:

@@ -1,3 +1,11 @@
-from repro.serve.engine import BatchedServer, ServeProgram, make_serve_program
+from repro.serve.engine import (BatchedServer, ContinuousBatchingEngine,
+                                ContinuousProgram, ServeProgram,
+                                make_continuous_program, make_serve_program)
+from repro.serve.metrics import ServeMetrics
+from repro.serve.sampling import GREEDY, SamplingParams
+from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["BatchedServer", "ServeProgram", "make_serve_program"]
+__all__ = ["BatchedServer", "ServeProgram", "make_serve_program",
+           "ContinuousBatchingEngine", "ContinuousProgram",
+           "make_continuous_program", "ServeMetrics", "SamplingParams",
+           "GREEDY", "Request", "Scheduler"]

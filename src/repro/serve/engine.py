@@ -1,19 +1,36 @@
-"""Serving: prefill / decode steps with sharded KV caches + batch engine."""
+"""Serving engines over sharded KV decode states.
+
+Two entry points:
+
+* ``make_serve_program`` / ``BatchedServer`` — the lockstep demo path: one
+  scalar ``cache_index`` shared by the whole batch, whole-batch prefill,
+  greedy decode. Kept for A/B parity tests and the dry-run tooling.
+* ``make_continuous_program`` / ``ContinuousBatchingEngine`` — the real
+  serving path (DESIGN.md §7): per-slot position vector ``[B]`` + active
+  mask, chunked prefill into a batch-1 cache that is *inserted* into a
+  free slot without touching live ones, sampled decode (temperature /
+  top-k / top-p per slot), slot recycling on EOS or length limit.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import stack
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.models.modules import RunConfig
-from repro.sharding.rules import ShardingRules, rules_for
+from repro.serve import sampling
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import PrefillChunk, Request, Scheduler
+from repro.sharding.rules import (ShardingRules, rules_for,
+                                  slot_vector_spec)
 from repro.train.step import abstract_params, fit_batch_axes
 
 
@@ -172,3 +189,308 @@ class BatchedServer:
                 fronts or {})
         self.cache_index = self.cache_index + 1
         return self.tokens
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ContinuousProgram:
+    """Compiled pieces of the continuous-batching engine."""
+
+    cfg: ModelConfig
+    run: RunConfig
+    mesh: Mesh
+    n_slots: int
+    max_len: int
+    prefill_step: Callable   # (params, pstate, tokens[1,c], offset) ->
+    #                          (pstate, last_logits [1,V] f32)
+    insert_step: Callable    # (state, pstate, slot) -> state
+    decode_step: Callable    # (params, state, tok[B,1], pos[B], active[B],
+    #                          rids[B], ngen[B], temp[B], topk[B], topp[B])
+    #                          -> (state, next[B], last_logits [B,V] f32)
+    sample_step: Callable    # (logits[N,V], rids, ngen, temp, topk, topp)
+    init_state: Callable     # () -> batched decode state (B = n_slots)
+    init_pstate: Callable    # () -> batch-1 prefill decode state
+    param_shardings: object
+    state_shardings: object
+
+
+def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
+                            n_slots: int, max_len: int,
+                            seed: int = 0) -> ContinuousProgram:
+    """Build the jit'd steps of the continuous-batching engine.
+
+    Decode carries a per-slot position vector ``pos [B]`` (the next cache
+    line of each slot; -1 for dead slots, whose cache writes are dropped
+    and whose query positions mask out every key) instead of the lockstep
+    scalar ``cache_index``. Prefill runs at batch 1 — chunked, attending
+    over its own cache — and the finished cache is inserted into a free
+    slot by a batch-axis ``dynamic_update_slice`` over every decode-state
+    leaf, so live slots are never touched.
+
+    MoE FFNs take the dropless gather path (``apply_moe`` -> single-pack
+    ``ops.moe_ffn``): no capacity, so dead-slot tokens can never displace
+    live tokens, and decode shapes auto-route to the group-dense small-M
+    fallback (DESIGN.md §5.5). Expert-parallel decode (EP sharding at pod
+    scale) stays future work.
+    """
+    assert not cfg.is_encdec and cfg.vision_seq == 0, \
+        "continuous batching supports decoder-only LMs"
+    rules = rules_for(cfg, mesh, variant="serve")
+    B = n_slots
+    from repro.sharding.rules import fitted_shardings, make_constrainer
+    pshapes, paxes = abstract_params(cfg)
+    psh = fitted_shardings(pshapes, paxes, rules, mesh)
+    dtype = run.policy.compute_dtype
+
+    _, sspecs = decode_state_specs(cfg, mesh, rules, B, max_len, dtype)
+    ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    _, pspecs = decode_state_specs(cfg, mesh, rules, 1, max_len, dtype)
+    pssh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+    baxes = fit_batch_axes(B, mesh, rules.batch_axes)
+    run_b = dataclasses.replace(run, constrain=make_constrainer(
+        dataclasses.replace(rules, batch_axes=baxes), mesh))
+    run_p = dataclasses.replace(run, constrain=make_constrainer(
+        dataclasses.replace(rules, batch_axes=()), mesh))
+    vec_sh = NamedSharding(mesh, slot_vector_spec(B, mesh, rules))
+    tok_sh = NamedSharding(mesh, P(baxes if baxes else None, None))
+    base_key = jax.random.PRNGKey(seed)
+
+    from repro.models import modules
+
+    def prefill(params, pstate, tokens, offset):
+        """One prompt chunk at batch 1: writes cache lines
+        [offset, offset+c), attends over the whole cache (earlier chunks
+        included), returns f32 logits of the chunk's last position."""
+        hidden, pstate, _ = stack.apply_model(
+            params, cfg, run_p, tokens, decode_state=pstate,
+            cache_index=offset, attend_to_cache=True, return_hidden=True)
+        last = modules.apply_unembedding(
+            params["embed"], params.get("lm_head"), cfg, run.policy,
+            hidden[:, -1])
+        return pstate, last.astype(jnp.float32)
+
+    def insert(state, pstate, slot):
+        """Overwrite slot ``slot`` of every decode-state leaf with the
+        batch-1 prefilled state (batch axis: 1 for scan-stacked block
+        leaves, 0 for tail leaves). A full overwrite — KV, cache
+        positions, recurrent states — so recycled slots cannot leak."""
+        def ins(axis):
+            return lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), slot, axis=axis)
+        new = {"blocks": None, "tails":
+               jax.tree.map(ins(0), state["tails"], pstate["tails"])}
+        if state["blocks"] is not None:
+            new["blocks"] = jax.tree.map(ins(1), state["blocks"],
+                                         pstate["blocks"])
+        return new
+
+    def decode(params, state, tok, pos, active, rids, ngen, temp, topk,
+               topp):
+        """One decode step for every slot; dead slots (pos < 0) write no
+        cache lines and emit token 0."""
+        logits, state, _ = stack.apply_model(
+            params, cfg, run_b, tok, decode_state=state, cache_index=pos)
+        last = logits[:, -1].astype(jnp.float32)
+        keys = sampling.request_keys(base_key, rids, ngen)
+        nxt = sampling.sample_tokens(last, keys, temp, topk, topp)
+        return state, jnp.where(active, nxt, 0), last
+
+    def sample(logits, rids, ngen, temp, topk, topp):
+        keys = sampling.request_keys(base_key, rids, ngen)
+        return sampling.sample_tokens(logits.astype(jnp.float32), keys,
+                                      temp, topk, topp)
+
+    jit_prefill = jax.jit(prefill, in_shardings=(psh, pssh, None, None),
+                          out_shardings=(pssh, None), donate_argnums=(1,))
+    jit_insert = jax.jit(insert, in_shardings=(ssh, pssh, None),
+                         out_shardings=ssh, donate_argnums=(0,))
+    jit_decode = jax.jit(
+        decode,
+        in_shardings=(psh, ssh, tok_sh) + (vec_sh,) * 7,
+        out_shardings=(ssh, None, None), donate_argnums=(1,))
+
+    return ContinuousProgram(
+        cfg=cfg, run=run, mesh=mesh, n_slots=B, max_len=max_len,
+        prefill_step=jit_prefill, insert_step=jit_insert,
+        decode_step=jit_decode, sample_step=jax.jit(sample),
+        init_state=jax.jit(
+            lambda: stack.init_decode_state(cfg, B, max_len, dtype),
+            out_shardings=ssh),
+        init_pstate=jax.jit(
+            lambda: stack.init_decode_state(cfg, 1, max_len, dtype),
+            out_shardings=pssh),
+        param_shardings=psh, state_shardings=ssh)
+
+
+class ContinuousBatchingEngine:
+    """Continuous-batching serving loop (DESIGN.md §7).
+
+    One ``tick`` = up to ``scheduler.token_budget`` chunked-prefill tokens
+    (admitting at most one request at a time into a freed slot) followed
+    by ONE batched decode step over all live slots. Requests finish and
+    free their slot on EOS or length limit while other slots keep
+    decoding; generated tokens land in ``results[rid]``.
+    """
+
+    def __init__(self, program: ContinuousProgram, params,
+                 scheduler: Scheduler, *, metrics: ServeMetrics = None,
+                 on_token: Callable = None, record_logits: bool = False):
+        self.p = program
+        self.params = params
+        self.sched = scheduler
+        self.metrics = metrics or ServeMetrics()
+        self.on_token = on_token  # callable(rid, token, finished)
+        self.record_logits = record_logits
+        self.logits: Dict[int, List[np.ndarray]] = {}  # rid -> [V] rows
+        self.rejected: List[int] = []  # rids refused admission
+        self.tick_count = 0
+        B = program.n_slots
+        with program.mesh:
+            self.state = program.init_state()
+        self.pstate = None
+        # Host mirrors of the per-slot decode inputs.
+        self._tok = np.zeros((B,), np.int32)
+        self._pos = np.full((B,), -1, np.int32)
+        self._active = np.zeros((B,), bool)
+        self._rid = np.zeros((B,), np.int32)
+        self._ngen = np.zeros((B,), np.int32)
+        self._temp = np.zeros((B,), np.float32)
+        self._topk = np.zeros((B,), np.int32)
+        self._topp = np.ones((B,), np.float32)
+
+    @property
+    def results(self) -> Dict[int, List[int]]:
+        return self.sched.results
+
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+        self.metrics.on_submit(req.rid, len(req.prompt))
+
+    # -- one engine tick ----------------------------------------------------
+
+    def tick(self) -> None:
+        budget = self.sched.token_budget
+        while budget > 0:
+            chunk = self.sched.plan_prefill(budget)
+            if chunk is None:
+                break
+            self._run_prefill_chunk(chunk)
+            budget -= chunk.length
+        if self._active.any():
+            self._decode_once()
+        self.metrics.on_tick(self.sched.queue_depth, self.sched.n_active)
+        self.tick_count += 1
+
+    def _run_prefill_chunk(self, chunk: PrefillChunk) -> None:
+        req = chunk.request
+        if chunk.start == 0:  # fresh request -> fresh prefill cache
+            with self.p.mesh:
+                self.pstate = self.p.init_pstate()
+        toks = np.asarray(
+            req.prompt[chunk.start:chunk.start + chunk.length],
+            np.int32)[None, :]
+        with self.p.mesh:
+            self.pstate, logits = self.p.prefill_step(
+                self.params, self.pstate, toks,
+                jnp.asarray(chunk.start, jnp.int32))
+        if self.sched.finish_prefill_chunk(chunk):
+            self._admit(chunk, logits)
+
+    def _admit(self, chunk: PrefillChunk, last_logits) -> None:
+        """Sample the first token from the prefill logits and insert the
+        prefilled cache into the freed slot."""
+        req, slot = chunk.request, chunk.slot
+        sp = req.sampling
+        with self.p.mesh:
+            first = self.p.sample_step(
+                last_logits, np.asarray([req.rid], np.int32),
+                np.zeros((1,), np.int32),
+                np.asarray([sp.temperature], np.float32),
+                np.asarray([sp.top_k], np.int32),
+                np.asarray([sp.top_p], np.float32))
+            self.state = self.p.insert_step(self.state, self.pstate,
+                                            jnp.asarray(slot, jnp.int32))
+        self.pstate = None
+        first = int(np.asarray(first)[0])
+        if self.record_logits:
+            self.logits[req.rid] = [np.asarray(last_logits)[0]]
+        self.metrics.on_token(req.rid, self.tick_count)
+        finished = self.sched.activate(chunk, first)
+        if self.on_token:
+            self.on_token(req.rid, first, finished)
+        if finished:
+            self.metrics.on_finish(req.rid, self.tick_count)
+            return
+        self._tok[slot] = first
+        self._pos[slot] = len(req.prompt)
+        self._active[slot] = True
+        self._rid[slot] = req.rid
+        self._ngen[slot] = 1
+        self._temp[slot] = sp.temperature
+        self._topk[slot] = sp.top_k
+        self._topp[slot] = sp.top_p
+
+    def _decode_once(self) -> None:
+        with self.p.mesh:
+            self.state, nxt, logits = self.p.decode_step(
+                self.params, self.state, self._tok[:, None], self._pos,
+                self._active, self._rid, self._ngen, self._temp,
+                self._topk, self._topp)
+        nxt = np.asarray(nxt)
+        if self.record_logits:
+            logits = np.asarray(logits)
+        for slot in np.nonzero(self._active)[0]:
+            slot = int(slot)
+            tok = int(nxt[slot])
+            rid = int(self._rid[slot])
+            if self.record_logits:
+                self.logits[rid].append(logits[slot])
+            self.metrics.on_token(rid, self.tick_count)
+            finished = self.sched.note_token(slot, tok)
+            if self.on_token:
+                self.on_token(rid, tok, finished)
+            if finished:
+                self.metrics.on_finish(rid, self.tick_count)
+                self._release(slot)
+            else:
+                self._tok[slot] = tok
+                self._pos[slot] += 1
+                self._ngen[slot] += 1
+
+    def _release(self, slot: int) -> None:
+        self._active[slot] = False
+        self._pos[slot] = -1
+        self._tok[slot] = 0
+        self._ngen[slot] = 0
+        self._temp[slot] = 0.0
+        self._topk[slot] = 0
+        self._topp[slot] = 1.0
+
+    # -- trace driver -------------------------------------------------------
+
+    def run(self, requests: List[Request], max_ticks: int = 100_000):
+        """Drive a trace to completion. ``Request.arrival`` is in engine
+        ticks (the simulated clock); requests are submitted when the tick
+        counter reaches their arrival time."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        while True:
+            while pending and pending[0].arrival <= self.tick_count:
+                req = pending.pop(0)
+                try:
+                    self.submit(req)
+                except ValueError:
+                    # inadmissible (oversized / empty) — reject this
+                    # request, keep serving the rest
+                    self.rejected.append(req.rid)
+            if not pending and not self.sched.has_work() \
+                    and not self._active.any():
+                return self.results
+            self.tick()
+            if self.tick_count > max_ticks:
+                raise RuntimeError(f"serve trace exceeded {max_ticks} ticks")

@@ -1,0 +1,113 @@
+"""Serving metrics: queue depth, time-to-first-token, inter-token latency,
+throughput (DESIGN.md §7).
+
+Wall-clock times come from a injectable ``clock`` (default
+``time.perf_counter``); engine ticks are recorded alongside so tests can
+assert scheduling behaviour (interleaving, slot recycling) without
+depending on timing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    rid: int
+    prompt_len: int = 0
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    first_token_tick: Optional[int] = None
+    finish_tick: Optional[int] = None
+    n_generated: int = 0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+    @property
+    def itl(self) -> List[float]:
+        """Inter-token latencies (gaps between consecutive tokens)."""
+        ts = self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+
+def _pctl(xs: List[float], q: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    i = min(len(s) - 1, int(round(q * (len(s) - 1))))
+    return s[i]
+
+
+class ServeMetrics:
+    """Aggregates per-request traces + per-tick engine state."""
+
+    def __init__(self, clock=time.perf_counter):
+        self.clock = clock
+        self.requests: Dict[int, RequestTrace] = {}
+        self.queue_depths: List[int] = []
+        self.active_counts: List[int] = []
+        self._t0: Optional[float] = None
+
+    # -- event hooks (called by the engine) ---------------------------------
+
+    def on_submit(self, rid: int, prompt_len: int) -> None:
+        now = self.clock()
+        if self._t0 is None:
+            self._t0 = now
+        self.requests[rid] = RequestTrace(rid=rid, prompt_len=prompt_len,
+                                          submit_time=now)
+
+    def on_token(self, rid: int, tick: int) -> None:
+        now = self.clock()
+        tr = self.requests[rid]
+        if tr.first_token_time is None:
+            tr.first_token_time = now
+            tr.first_token_tick = tick
+        tr.token_times.append(now)
+        tr.n_generated += 1
+
+    def on_finish(self, rid: int, tick: int) -> None:
+        tr = self.requests[rid]
+        tr.finish_time = self.clock()
+        tr.finish_tick = tick
+
+    def on_tick(self, queue_depth: int, n_active: int) -> None:
+        self.queue_depths.append(queue_depth)
+        self.active_counts.append(n_active)
+
+    # -- aggregates ---------------------------------------------------------
+
+    def summary(self) -> dict:
+        done = [t for t in self.requests.values() if t.finish_time is not None]
+        ttfts = [t.ttft for t in done if t.ttft is not None]
+        itls = [g for t in done for g in t.itl]
+        n_tok = sum(t.n_generated for t in done)
+        wall = (max(t.finish_time for t in done) - self._t0) \
+            if done and self._t0 is not None else float("nan")
+        return {
+            "n_requests": len(done),
+            "n_generated_tokens": n_tok,
+            "wall_s": round(wall, 4) if wall == wall else wall,
+            "tokens_per_s": round(n_tok / wall, 2) if wall and wall == wall
+            and wall > 0 else float("nan"),
+            "ttft_s": {"mean": _mean(ttfts), "p50": _pctl(ttfts, 0.5),
+                       "max": max(ttfts) if ttfts else float("nan")},
+            "itl_s": {"mean": _mean(itls), "p50": _pctl(itls, 0.5),
+                      "p95": _pctl(itls, 0.95)},
+            "queue_depth": {"mean": _mean(self.queue_depths),
+                            "max": max(self.queue_depths, default=0)},
+            "max_concurrent_active": max(self.active_counts, default=0),
+        }
+
+
+def _mean(xs: List[float]) -> float:
+    return sum(xs) / len(xs) if xs else float("nan")

@@ -1,0 +1,173 @@
+"""Continuous-batching request scheduler (DESIGN.md §7.1/§7.3).
+
+Host-side bookkeeping only — no jax. The scheduler decides WHAT runs each
+engine tick (which prefill chunk, which slots decode); the engine owns the
+device arrays and executes the plan.
+
+Slot lifecycle: queued -> prefilling (chunks of <= prefill_chunk tokens
+into the batch-1 prefill cache) -> active (inserted into a free slot of
+the batched decode state) -> finished (EOS or length limit) -> slot freed
+and recycled. An insert overwrites EVERY decode-state leaf of the slot
+(KV cache, cache positions, recurrent states), which is why recycling can
+never leak state across requests.
+
+Admission rules:
+  * a request must fit its slot: len(prompt) + max_new_tokens <= max_len
+    (checked at submit — oversized requests are rejected immediately);
+  * at most ``token_budget`` prompt tokens are scheduled per tick, so a
+    long prompt is spread over several ticks and decode of live slots
+    never stalls for more than one chunk;
+  * one request prefills at a time (its chunks are sequential — they
+    share the single prefill cache); the queue is FIFO.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional
+
+from repro.serve.sampling import GREEDY, SamplingParams
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    sampling: SamplingParams = GREEDY
+    eos_token: Optional[int] = None
+    arrival: float = 0.0  # trace time (engine ticks in the simulated clock)
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    """One scheduled slice of a request's prompt."""
+
+    request: Request
+    slot: int
+    start: int
+    length: int
+
+    @property
+    def final(self) -> bool:
+        return self.start + self.length >= len(self.request.prompt)
+
+
+@dataclasses.dataclass
+class _Running:
+    request: Request
+    n_generated: int = 0
+
+
+class Scheduler:
+    """Request queue + slot allocator over ``n_slots`` KV slots."""
+
+    def __init__(self, n_slots: int, max_len: int, *,
+                 prefill_chunk: int = 64, token_budget: Optional[int] = None):
+        assert n_slots >= 1 and prefill_chunk >= 1
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.token_budget = token_budget or prefill_chunk
+        self.queue: Deque[Request] = collections.deque()
+        self.free: List[int] = list(range(n_slots - 1, -1, -1))  # pop -> 0
+        self.running: Dict[int, _Running] = {}  # slot -> live request
+        self._prefilling = None  # (request, slot, next_start) | None
+        self.results: Dict[int, List[int]] = {}  # rid -> generated tokens
+        self.n_rejected = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) < 1 or req.max_new_tokens < 1:
+            self.n_rejected += 1
+            raise ValueError(f"request {req.rid}: empty prompt or zero budget")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            self.n_rejected += 1
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + "
+                f"max_new {req.max_new_tokens} exceeds max_len {self.max_len}")
+        self.queue.append(req)
+
+    # -- prefill planning ---------------------------------------------------
+
+    def plan_prefill(self, budget: int) -> Optional[PrefillChunk]:
+        """Next prompt chunk to run, spending at most ``budget`` tokens.
+
+        Admits the queue head into a free slot when nothing is mid-prefill.
+        Returns None when there is no admissible work (empty queue, no free
+        slot, or exhausted budget).
+        """
+        if budget <= 0:
+            return None
+        if self._prefilling is None:
+            if not self.queue or not self.free:
+                return None
+            self._prefilling = (self.queue.popleft(), self.free.pop(), 0)
+        req, slot, start = self._prefilling
+        length = min(self.prefill_chunk, len(req.prompt) - start, budget)
+        if length <= 0:
+            return None
+        return PrefillChunk(request=req, slot=slot, start=start,
+                            length=length)
+
+    def finish_prefill_chunk(self, chunk: PrefillChunk) -> bool:
+        """Record a completed chunk; True when the whole prompt is cached."""
+        req, slot, start = self._prefilling
+        assert req is chunk.request and start == chunk.start
+        if chunk.final:
+            self._prefilling = None
+            return True
+        self._prefilling = (req, slot, start + chunk.length)
+        return False
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    def activate(self, chunk: PrefillChunk, first_token: int) -> bool:
+        """Admit the fully-prefilled request into its slot with its first
+        sampled token. Returns True if it finished immediately (EOS or
+        max_new_tokens == 1) — the slot is then freed right away."""
+        req = chunk.request
+        self.results[req.rid] = [first_token]
+        self.running[chunk.slot] = _Running(request=req, n_generated=1)
+        return self._maybe_finish(chunk.slot, first_token)
+
+    def note_token(self, slot: int, token: int) -> bool:
+        """Record one decoded token for a live slot; True when finished."""
+        run = self.running[slot]
+        run.n_generated += 1
+        self.results[run.request.rid].append(token)
+        return self._maybe_finish(slot, token)
+
+    def _maybe_finish(self, slot: int, token: int) -> bool:
+        run = self.running[slot]
+        req = run.request
+        done = (req.eos_token is not None and token == req.eos_token) \
+            or run.n_generated >= req.max_new_tokens
+        if done:
+            del self.running[slot]
+            self.free.append(slot)
+        return done
+
+    # -- introspection ------------------------------------------------------
+
+    def slot_request(self, slot: int) -> Request:
+        return self.running[slot].request
+
+    def slot_generated(self, slot: int) -> int:
+        return self.running[slot].n_generated
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue) + (1 if self._prefilling is not None else 0)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.running)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self._prefilling is not None \
+            or bool(self.running)

@@ -65,7 +65,7 @@ class ShardingRules:
         if logical is None:
             return None
         if logical == "batch":
-            return self.batch_axes
+            return self.batch_axes or None  # () -> replicated (e.g. B=1)
         return self.act_rules.get(logical, None)
 
     def spec(self, axes: Sequence[Optional[str]]) -> P:
@@ -158,6 +158,17 @@ def fitted_shardings(shapes_tree, axes_tree, rules: ShardingRules,
 
 def shardings_for(axes_tree, rules: ShardingRules, mesh: Mesh):
     return axes_map(lambda a: NamedSharding(mesh, rules.spec(a)), axes_tree)
+
+
+def slot_vector_spec(batch: int, mesh: Mesh, rules: ShardingRules) -> P:
+    """Spec for per-slot serving vectors [B] (positions, active mask,
+    request ids, sampling parameters). They ride the same batch axes as
+    the token batch — divisibility-fitted — so the decode step's per-row
+    cache scatter stays local to the shard owning the row instead of
+    degrading to a replicated update."""
+    if not rules.batch_axes:
+        return P(None)
+    return P(_fit_axis(batch, tuple(rules.batch_axes), mesh))
 
 
 def batch_spec(rules: ShardingRules, ndim: int, *, seq_axis=None) -> P:

@@ -163,7 +163,10 @@ def test_moe_gather_with_gmm_kernel():
     cfg = small_cfg(family="moe", n_experts=4, top_k=2,
                     pattern=(LayerSpec(ffn="moe"),))
     p, _ = split_params(modules.init_moe(KEY, cfg))
-    x = jax.random.normal(KEY, (2, 8, cfg.d_model)) * 0.5
+    # M = 2*256*2 = 1024 > E*block_m/(E-1) threshold: stays on the packed
+    # pipeline so the Pallas kernel path is actually exercised (smaller
+    # shapes auto-route BOTH runs to the group-dense fallback).
+    x = jax.random.normal(KEY, (2, 256, cfg.d_model)) * 0.5
     run_g = dataclasses.replace(RUN, moe_impl="gather")
     run_k = dataclasses.replace(RUN, moe_impl="gather", use_gmm_kernel=True)
     y1, _ = modules.apply_moe(p, cfg, run_g, x)

@@ -79,6 +79,64 @@ def test_moe_ffn_grads_match_oracle(use_kernel):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
 
 
+def test_moe_ffn_group_dense_matches_oracle():
+    """Small-M fallback parity (values + grads), with and without fused
+    row scales."""
+    sizes = [37, 0, 90, 73]
+    M, d, f, G = sum(sizes), 32, 48, len(sizes)
+    x, wg, wu, wo = make_ffn(M, d, f, G)
+    gs = jnp.asarray(sizes, jnp.int32)
+    s = rand((M,), k=11, scale=0.5)
+
+    out = ops.moe_ffn_group_dense(x, wg, wu, wo, gs)
+    want = ref.moe_ffn(x, wg, wu, wo, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+    # auto-routing picks it at decode shapes (M*(G-1) <= G*block_m)
+    xs_small = x[:24]
+    gs_small = jnp.asarray([10, 0, 9, 5], jnp.int32)
+    auto = ops.moe_ffn(xs_small, wg, wu, wo, gs_small)
+    np.testing.assert_allclose(
+        np.asarray(auto),
+        np.asarray(ops.moe_ffn_group_dense(xs_small, wg, wu, wo, gs_small)),
+        atol=1e-6)
+
+    g1 = jax.grad(lambda *a: jnp.sum(
+        ops.moe_ffn_group_dense(*a[:4], gs, row_scales=a[4]) ** 2),
+        argnums=(0, 1, 2, 3, 4))(x, wg, wu, wo, s)
+    g2 = jax.grad(lambda *a: jnp.sum(
+        (ref.moe_ffn(*a[:4], gs) * a[4][:, None]) ** 2),
+        argnums=(0, 1, 2, 3, 4))(x, wg, wu, wo, s)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_moe_ffn_packed_path_row_scales(use_kernel):
+    """Fused row-scale combine on the packed pipeline: values + all grads
+    (incl. d(scales), which needs the rematerialized unscaled rows)."""
+    sizes = [37, 0, 90, 73]
+    M, d, f, G = sum(sizes), 32, 48, len(sizes)
+    x, wg, wu, wo = make_ffn(M, d, f, G)
+    gs = jnp.asarray(sizes, jnp.int32)
+    s = rand((M,), k=12, scale=0.5)
+
+    out = ops.moe_ffn(x, wg, wu, wo, gs, row_scales=s, small_m=False,
+                      use_kernel=use_kernel, block_m=32)
+    want = ref.moe_ffn(x, wg, wu, wo, gs) * s[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+    g1 = jax.grad(lambda *a: jnp.sum(
+        ops.moe_ffn(*a[:4], gs, row_scales=a[4], small_m=False,
+                    use_kernel=use_kernel, block_m=32) ** 2),
+        argnums=(0, 1, 2, 3, 4))(x, wg, wu, wo, s)
+    g2 = jax.grad(lambda *a: jnp.sum(
+        (ref.moe_ffn(*a[:4], gs) * a[4][:, None]) ** 2),
+        argnums=(0, 1, 2, 3, 4))(x, wg, wu, wo, s)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
 def test_moe_ffn_bf16():
     sizes = [64, 96, 40]
     M, d, f, G = sum(sizes), 32, 64, len(sizes)
@@ -188,9 +246,11 @@ def test_moe_ffn_single_pack_scatter_gather():
 
 
 def test_apply_moe_gather_single_pack():
-    """Whole gather-mode MoE layer: one pack scatter (.set) total; every
+    """Whole gather-mode MoE layer at a training shape (M > E*block_m so
+    the packed pipeline is taken): one pack scatter (.set) total; every
     other scatter is an int/combine ADD (bincount histograms + the
-    segment-sum combine), never a d-wide repack."""
+    segment-sum combine), never a d-wide repack. The fused row-scale
+    combine must not add a second d-wide pass."""
     cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
                       n_heads=2, n_kv_heads=2, d_ff=64, d_ff_expert=64,
                       vocab_size=64, n_experts=4, top_k=2,
@@ -198,7 +258,7 @@ def test_apply_moe_gather_single_pack():
     run = RunConfig(policy=Policy(compute_dtype=jnp.float32),
                     moe_impl="gather", use_gmm_kernel=True)
     p, _ = split_params(modules.init_moe(KEY, cfg))
-    x = rand((2, 8, cfg.d_model), k=9, scale=0.5)
+    x = rand((4, 128, cfg.d_model), k=9, scale=0.5)  # M = 1024 > 4*128
     jx = jax.make_jaxpr(
         lambda x_: modules.apply_moe(p, cfg, run, x_)[0])(x)
     set_scatters = _count_eqns(
@@ -206,12 +266,31 @@ def test_apply_moe_gather_single_pack():
     assert len(set_scatters) == 1, [e.primitive.name for e in set_scatters]
 
 
+def test_apply_moe_decode_shape_uses_group_dense():
+    """Decode shapes (M <= E*block_m) skip the packed pipeline entirely:
+    no pack scatter in the jaxpr at all (ROADMAP small-M fallback)."""
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, d_ff_expert=64,
+                      vocab_size=64, n_experts=4, top_k=2,
+                      pattern=(LayerSpec(ffn="moe"),))
+    run = RunConfig(policy=Policy(compute_dtype=jnp.float32),
+                    moe_impl="gather")
+    p, _ = split_params(modules.init_moe(KEY, cfg))
+    x = rand((4, 1, cfg.d_model), k=9, scale=0.5)  # M = 8 (decode step)
+    jx = jax.make_jaxpr(
+        lambda x_: modules.apply_moe(p, cfg, run, x_)[0])(x)
+    set_scatters = _count_eqns(
+        jx.jaxpr, lambda e: e.primitive.name == "scatter")
+    assert len(set_scatters) == 0, [e.primitive.name for e in set_scatters]
+
+
 # ---------------------------------------------------------------------------
 # Full-layer parity (gather+fused vs dense), forward AND backward
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("use_kernel", [False, True])
-def test_apply_moe_gather_fused_grads_match_dense(use_kernel):
+@pytest.mark.parametrize("seq", [8, 256])  # group-dense / packed regimes
+def test_apply_moe_gather_fused_grads_match_dense(use_kernel, seq):
     cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
                       n_heads=2, n_kv_heads=2, d_ff=64, d_ff_expert=64,
                       vocab_size=64, n_experts=4, top_k=2,
@@ -221,7 +300,7 @@ def test_apply_moe_gather_fused_grads_match_dense(use_kernel):
     run_g = RunConfig(policy=pol, moe_impl="gather",
                       use_gmm_kernel=use_kernel)
     p, _ = split_params(modules.init_moe(KEY, cfg))
-    x = rand((2, 8, cfg.d_model), k=9, scale=0.5)
+    x = rand((2, seq, cfg.d_model), k=9, scale=0.5)
 
     def loss(run):
         def fn(p_, x_):
