@@ -166,6 +166,35 @@ def main():
               f"(auto -> {pt['auto_routes_to']})")
         small_m["points"].append(pt)
 
+    # --- block-size autotuning sweep for the fused GLU grouped GEMM ------
+    # Candidates are (block_m, block_n) pairs that fit the per-core VMEM
+    # budget given gmm_glu_tiled's working set (lhs/gate/up/out tiles
+    # double-buffered + two f32 accumulators; kernels/gmm.glu_vmem_bytes).
+    # Off-TPU the XLA tile-gather fallback executes the same packed domain,
+    # where block_n does not bind (no rhs tiling) — the sweep still ranks
+    # block_m, and the VMEM feasibility set is what TPU runs consult.
+    from repro.kernels import gmm as gmm_mod
+    autotune = {"vmem_budget_bytes": gmm_mod.VMEM_BUDGET_BYTES,
+                "block_k": 128,
+                "note": "block_n binds only on the Mosaic (TPU) path",
+                "candidates": []}
+    for bm, bn in gmm_mod.glu_block_candidates():
+        fn = jax.jit(lambda x, wg, wu, wo, _bm=bm, _bn=bn: ops.moe_ffn(
+            x, wg, wu, wo, gs, small_m=False, block_m=_bm, block_n=_bn))
+        ms = timed(fn, (xs, wg, wu, wo), args.iters)
+        vb = gmm_mod.glu_vmem_bytes(bm, 128, bn)
+        autotune["candidates"].append(
+            {"block_m": bm, "block_n": bn, "fwd_ms": round(ms, 3),
+             "vmem_bytes": vb})
+        print(f"autotune bm={bm:4d} bn={bn:4d} fwd {ms:9.2f} ms "
+              f"(vmem {vb/2**20:.1f} MiB)")
+    chosen = min(autotune["candidates"], key=lambda c: c["fwd_ms"])
+    autotune["chosen"] = {"block_m": chosen["block_m"],
+                          "block_n": chosen["block_n"],
+                          "fwd_ms": chosen["fwd_ms"]}
+    print(f"autotune chosen: block_m={chosen['block_m']} "
+          f"block_n={chosen['block_n']} ({chosen['fwd_ms']} ms)")
+
     payload = {
         "bench": "moe_ffn",
         "shape": {"name": shape_name, "d_model": d, "d_ff": f, "experts": E,
@@ -174,6 +203,7 @@ def main():
         "iters": args.iters,
         "results": results,
         "small_m": small_m,
+        "autotune": autotune,
         "gate": gate,
     }
     out = pathlib.Path(args.out) if args.out else \

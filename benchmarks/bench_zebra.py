@@ -1,0 +1,160 @@
+"""Zebra overlapped-dispatch benchmark — step time vs n_chunks.
+
+Tracks the chunked, double-buffered dispatch pipeline (DESIGN.md §8): the
+[E, C, d] dispatch buffer is split into n_chunks capacity slices so the
+all-to-all of chunk k+1 rides under the expert GEMM of chunk k.
+
+Two sections land in BENCH_zebra.json:
+
+  * simulated (the regression gate): the discrete-event simulator — the
+    paper's own throughput methodology (§6.4.1 fn.2) and where this repo's
+    throughput claims live (zebra_mpmd docstring) — prices the canonical
+    Theorem-1 schedule at n_chunks ∈ {1, 2, 4} on the benchmark config
+    (mixtral-w1 on the paper's A40+V100 ZP group). Overlapped dispatch
+    (n_chunks >= 2) must be STRICTLY faster than serialized (n_chunks=1).
+  * measured (informational, NOISY): wall-clock per-step fwd+bwd time of
+    the SPMD alltoall engine on emulated devices. On a CPU container every
+    emulated device shares one core, so overlap CANNOT materialize in
+    wall-clock; what this records is the program-count overhead floor of
+    chunking on an emulated backend (numbers vary run to run by 2-3x under
+    CPU thread-scheduling noise). It is not a throughput claim — those
+    live in the simulated section, per the paper's methodology.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_zebra.py [--smoke]
+        [--no-measure] [--iters K] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+
+_flags = os.environ.get("XLA_FLAGS", "")  # before jax import: emulated group
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHUNKS = (1, 2, 4)
+
+
+def simulated_sweep(smoke: bool):
+    from repro.core import hardware as HW
+    from repro.core import planner
+    from repro.core.profiler import ZPGroupShape
+
+    from repro.models import registry
+    cfg = registry.get_config("mixtral-w1")
+    zp = ZPGroupShape(M=4, N=4, attn_class=HW.A40, exp_class=HW.V100)
+    global_batch, seq_len = (8, 1024) if smoke else (16, 4096)
+    out = {"config": "mixtral-w1", "zp": {"M": zp.M, "N": zp.N,
+                                          "attn_class": zp.attn_class.name,
+                                          "exp_class": zp.exp_class.name},
+           "global_batch": global_batch, "seq_len": seq_len, "points": {}}
+    for q in CHUNKS:
+        plan = planner.plan_zp_group(cfg, zp, global_batch, seq_len,
+                                     n_chunks=q)
+        out["points"][str(q)] = {
+            "iter_time_ms": round(plan.predicted.iter_time * 1e3, 4),
+            "attn_util": round(plan.predicted.attn_util, 4),
+            "exp_util": round(plan.predicted.exp_util, 4),
+            "R": plan.R,
+            "offload_total": sum(plan.offload),
+        }
+        print(f"sim n_chunks={q}: iter {plan.predicted.iter_time*1e3:9.3f} ms"
+              f"  attn_util {plan.predicted.attn_util:.3f}"
+              f"  exp_util {plan.predicted.exp_util:.3f}"
+              f"  offload {sum(plan.offload)}")
+    return out
+
+
+def measured_sweep(iters: int):
+    """Wall-clock fwd+bwd of the SPMD alltoall MoE layer per n_chunks."""
+    import dataclasses
+
+    from jax.sharding import Mesh
+
+    from repro.core import zebra_spmd as Z
+    from repro.models import modules, registry
+    from repro.models.modules import Policy, RunConfig
+    from repro.pytree import split_params
+
+    run = RunConfig(policy=Policy(compute_dtype=jnp.float32))
+    cfg = registry.smoke_config(registry.get_config("mixtral-w1"))
+    cfg = dataclasses.replace(cfg, capacity_factor=2.0)
+    key = jax.random.PRNGKey(0)
+    ffn, _ = split_params(modules.init_moe(key, cfg))
+    devs = jax.devices()
+    if len(devs) < 8:  # someone forced a smaller emulated pool
+        return {"skipped": f"needs 8 devices, have {len(devs)}"}
+    mesh = Mesh(np.array(devs[:8]).reshape(2, 4), ("data", "model"))
+    x = jax.random.normal(key, (512, cfg.d_model), jnp.float32) * 0.3
+    out = {"config": "mixtral-w1-smoke", "tokens": int(x.shape[0]),
+           "note": ("emulated single-core devices: no wall-clock overlap "
+                    "possible; run-to-run noise 2-3x; see module docstring"),
+           "points": {}}
+    for q in CHUNKS:
+        zcfg = Z.ZebraConfig(mode="alltoall", capacity_factor=2.0,
+                             batch_axes=("data", "model"), n_chunks=q)
+        with mesh:
+            moe_fn = Z.make_ep_moe(mesh, cfg, run, zcfg)
+            step = jax.jit(jax.grad(
+                lambda f, xx: jnp.sum(moe_fn(f, xx)[0] ** 2)))
+            g = step(ffn, x)
+            jax.tree.map(lambda a: a.block_until_ready(), g)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                g = step(ffn, x)
+                jax.tree.map(lambda a: a.block_until_ready(), g)
+            ms = (time.perf_counter() - t0) / iters * 1e3
+        out["points"][str(q)] = {"step_ms": round(ms, 3)}
+        print(f"measured n_chunks={q}: {ms:9.2f} ms/step (emulated devices)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes + measured engine smoke")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip the wall-clock engine sweep")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    simulated = simulated_sweep(args.smoke)
+    serialized = simulated["points"]["1"]["iter_time_ms"]
+    overlapped = min(simulated["points"][str(q)]["iter_time_ms"]
+                     for q in CHUNKS if q > 1)
+    gate = {
+        "metric": "simulated iter_time_ms",
+        "serialized_n_chunks_1": serialized,
+        "best_overlapped": overlapped,
+        "speedup": round(serialized / overlapped, 4),
+        "pass": overlapped < serialized,
+    }
+    print(f"gate: overlapped {overlapped} ms vs serialized {serialized} ms "
+          f"({gate['speedup']}x, {'PASS' if gate['pass'] else 'FAIL'})")
+
+    payload = {"bench": "zebra_overlap", "backend": jax.default_backend(),
+               "n_chunks_sweep": list(CHUNKS), "simulated": simulated,
+               "gate": gate}
+    if not args.no_measure:
+        payload["measured"] = measured_sweep(args.iters)
+
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parents[1] / "BENCH_zebra.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    return 0 if gate["pass"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,7 +19,7 @@ def main():
             cfg = dataclasses.replace(base, n_experts=3 * N)
             zp = ZPGroupShape(M=4, N=N, attn_class=HW.A40,
                               exp_class=HW.V100)
-            plan = plan_zp_group(cfg, zp, gb, s)
+            plan = plan_zp_group(cfg, zp, gb, s, n_chunks=1)  # paper-faithful: serialized dispatch
             th = gb * s / plan.predicted.iter_time
             th_ideal = sim.ep_ideal_throughput(cfg, zp, gb, s)
             emit(f"fig10/s{s}/ratio4to{N}",

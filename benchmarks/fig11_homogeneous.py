@@ -15,7 +15,7 @@ def main():
     for s in (4096, 8192, 12288, 16384, 20480, 24576, 32768):
         gb = global_batch_for(s)
         zp = ZPGroupShape(M=2, N=2, attn_class=HW.A40, exp_class=HW.V100)
-        plan = plan_zp_group(cfg, zp, gb, s)
+        plan = plan_zp_group(cfg, zp, gb, s, n_chunks=1)  # paper-faithful: serialized dispatch
         th_hm = gb * s / plan.predicted.iter_time
         emit(f"fig11/s{s}/hetermoe_2a40_2v100",
              plan.predicted.iter_time * 1e6, f"tok_s={th_hm:.0f}")

@@ -12,7 +12,7 @@ def main():
         cfg = registry.get_config(model)
         for s in (4096, 8192, 16384, 24576, 32768):
             gb = global_batch_for(s)
-            plan = plan_zp_group(cfg, zp, gb, s)
+            plan = plan_zp_group(cfg, zp, gb, s, n_chunks=1)  # paper-faithful: serialized dispatch
             speed = plan.predicted_no_asym.iter_time / \
                 plan.predicted.iter_time
             emit(f"fig12/{model}/s{s}", plan.predicted.iter_time * 1e6,

@@ -18,7 +18,7 @@ def run_setup(setup_names, tag):
                 continue  # EP divisibility (paper: experts % GPUs == 0)
             for s in SEQ_LENS:
                 gb = global_batch_for(s)
-                plan = plan_zp_group(cfg, zp, gb, s)
+                plan = plan_zp_group(cfg, zp, gb, s, n_chunks=1)  # paper-faithful: serialized dispatch
                 tokens = gb * s
                 th_hm = tokens / plan.predicted.iter_time
                 # baselines

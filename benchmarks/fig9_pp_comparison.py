@@ -16,7 +16,7 @@ def main():
                 continue
             for s in SEQ_LENS:
                 gb = global_batch_for(s)
-                plan = plan_zp_group(cfg, zp, gb, s)
+                plan = plan_zp_group(cfg, zp, gb, s, n_chunks=1)  # paper-faithful: serialized dispatch
                 th_hm = gb * s / plan.predicted.iter_time
                 t_pp = sim.pp_iter_time(cfg, zp, gb, s)
                 th_pp = gb * s / t_pp

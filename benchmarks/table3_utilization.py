@@ -12,8 +12,8 @@ def main():
     cfg = registry.get_config("mixtral-d1")
     for s in (8192, 16384):
         gb = global_batch_for(s)
-        plan = plan_zp_group(cfg, zp, gb, s, use_asym=False)
-        with_asym = plan_zp_group(cfg, zp, gb, s, use_asym=True)
+        plan = plan_zp_group(cfg, zp, gb, s, use_asym=False, n_chunks=1)
+        with_asym = plan_zp_group(cfg, zp, gb, s, use_asym=True, n_chunks=1)
         dist = sim.distep_iter_time(cfg, zp, gb, s,
                                     min(zp.attn_class.link_bw,
                                         zp.exp_class.link_bw))

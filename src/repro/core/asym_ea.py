@@ -62,6 +62,7 @@ def asym_ea_offload(
     t_exp: float,
     n_min: int = 0,
     n_max: Optional[int] = None,
+    t_comm_exposed: float = 0.0,
 ) -> AsymEAPlan:
     """Algorithm 1. Times are per-microbatch forward durations.
 
@@ -69,6 +70,15 @@ def asym_ea_offload(
     t_attn = T_A^Attn, t_exp_attn = T_E^Attn (one expert FFN on an attention
     GPU), t_exp = T_E^Exp.
     n_min/n_max: bounds on sum(O) in per-expert-GPU units.
+
+    t_comm_exposed: the EXPOSED (not-overlapped) dispatch+combine all-to-all
+    residue per microbatch (simulator.exposed_comm). It sits on the expert
+    hop's critical path exactly like expert compute, so it joins t_exp in
+    the per-layer bubble the attention GPUs gather. With serialized
+    dispatch (n_chunks=1) this is the full wire time; with chunked
+    double-buffered dispatch most of it hides under expert compute and
+    MUST NOT be double-counted here — the planner passes the residue only
+    (DESIGN.md §8).
     """
     if not divisibility_ok(M, N):
         raise ValueError(f"Asym-EA needs M|N or N|M, got M={M}, N={N}")
@@ -78,7 +88,7 @@ def asym_ea_offload(
         n_max = n  # at most everything
     n_max = min(n_max, L * (n // N))          # cannot offload more than held
 
-    t_gather = t_exp - t_attn                 # line 3
+    t_gather = t_exp + t_comm_exposed - t_attn  # line 3 (+ exposed a2a)
     # line 4 (prose form; see module docstring):
     t_squeeze = (t_exp * N / n) * n2 + (t_exp_attn * N / n) * n1
 

@@ -33,6 +33,7 @@ class ZebraPlan:
     predicted_no_asym: sim.SimResult
     n_min: int
     n_max: int
+    n_chunks: int = 1  # dispatch chunking the prediction was priced at
 
     @property
     def tokens_per_iter(self) -> int:
@@ -45,54 +46,73 @@ class ZebraPlan:
 def plan_zp_group(cfg: ModelConfig, zp: ZPGroupShape, global_batch: int,
                   seq_len: int, R: Optional[int] = None,
                   candidates: Sequence[int] = (2, 4, 8, 16),
-                  use_asym: bool = True) -> ZebraPlan:
-    """Pick (R, offload) minimizing simulated iteration time."""
+                  use_asym: bool = True, n_chunks: Optional[int] = None,
+                  chunk_candidates: Sequence[int] = (1, 2, 4)) -> ZebraPlan:
+    """Pick (R, n_chunks, offload) minimizing simulated iteration time.
+
+    Dispatch chunking is priced through the overlap-aware cost model: the
+    link streams carry only the EXPOSED all-to-all residue (DESIGN.md §8),
+    and the same residue — not the full wire time — feeds Algorithm 1's
+    bubble estimate so Asym-EA no longer offloads experts to pay for
+    communication that chunking already hid."""
     best = None
     rs = [R] if R else [r for r in candidates if global_batch % r == 0] or [1]
+    qs = [n_chunks] if n_chunks else list(chunk_candidates) or [1]
+    link_bw = min(zp.attn_class.link_bw, zp.exp_class.link_bw)
     for r in rs:
-        times = P.profile_layer(cfg, zp, global_batch, seq_len, r)
-        comm = sim.comm_times(cfg, global_batch, seq_len, r,
-                              min(zp.attn_class.link_bw,
-                                  zp.exp_class.link_bw), zp.M, zp.N)
-        no_asym = sim.simulate_hetermoe(cfg, times, comm, r, zp.M, zp.N)
-        chosen = no_asym
-        offload = tuple([0] * cfg.n_layers)
+        times = P.profile_layer(cfg, zp, global_batch, seq_len, r,
+                                link_bw=link_bw)
+        # The overlap-aware LayerTimes is the single source of the a2a
+        # wire times; CommTimes is just its simulator-facing view.
+        comm = sim.CommTimes(dispatch=times.t_dispatch,
+                             combine=times.t_combine)
         n_min, n_max = P.asym_ea_memory_bounds(cfg, zp, global_batch,
                                                seq_len, r)
         # express n_max in per-expert-GPU units (sum(O) bound; see asym_ea)
         n_max_units = n_max // max(zp.N, 1)
-        if use_asym and cfg.is_moe and divisibility_ok(zp.M, zp.N):
-            try:
-                plan = asym_ea_offload(
-                    cfg.n_experts, cfg.n_layers, zp.M, zp.N,
-                    t_attn=times.t_attn, t_exp_attn=times.t_exp_attn,
-                    t_exp=times.t_exp, n_min=n_min // max(zp.N, 1),
-                    n_max=n_max_units)
-                with_asym = sim.simulate_hetermoe(cfg, times, comm, r, zp.M,
-                                                  zp.N, plan)
-                if with_asym.iter_time < chosen.iter_time:
-                    chosen = with_asym
-                    offload = plan.offload
-            except ValueError:
-                pass
-        zp_plan = ZebraPlan(zp=zp, R=r, offload=offload, times=times,
-                            comm=comm, predicted=chosen,
-                            predicted_no_asym=no_asym, n_min=n_min,
-                            n_max=n_max)
-        if best is None or chosen.iter_time < best.predicted.iter_time:
-            best = zp_plan
+        for q in qs:
+            no_asym = sim.simulate_hetermoe(cfg, times, comm, r, zp.M, zp.N,
+                                            n_chunks=q)
+            chosen = no_asym
+            offload = tuple([0] * cfg.n_layers)
+            if use_asym and cfg.is_moe and divisibility_ok(zp.M, zp.N):
+                exposed = (sim.exposed_comm(comm.dispatch, times.t_exp, q)
+                           + sim.exposed_comm(comm.combine, times.t_exp, q))
+                try:
+                    plan = asym_ea_offload(
+                        cfg.n_experts, cfg.n_layers, zp.M, zp.N,
+                        t_attn=times.t_attn, t_exp_attn=times.t_exp_attn,
+                        t_exp=times.t_exp, n_min=n_min // max(zp.N, 1),
+                        n_max=n_max_units, t_comm_exposed=exposed)
+                    with_asym = sim.simulate_hetermoe(cfg, times, comm, r,
+                                                      zp.M, zp.N, plan,
+                                                      n_chunks=q)
+                    if with_asym.iter_time < chosen.iter_time:
+                        chosen = with_asym
+                        offload = plan.offload
+                except ValueError:
+                    pass
+            zp_plan = ZebraPlan(zp=zp, R=r, offload=offload, times=times,
+                                comm=comm, predicted=chosen,
+                                predicted_no_asym=no_asym, n_min=n_min,
+                                n_max=n_max, n_chunks=q)
+            if best is None or chosen.iter_time < best.predicted.iter_time:
+                best = zp_plan
     return best
 
 
 def sweep_ratios(cfg: ModelConfig, attn_class: DeviceClass,
                  exp_class: DeviceClass, M: int, Ns: Sequence[int],
-                 global_batch: int, seq_len: int):
-    """Fig. 10: HeterMoE throughput vs expert-GPU count at fixed M."""
+                 global_batch: int, seq_len: int,
+                 n_chunks: Optional[int] = None):
+    """Fig. 10: HeterMoE throughput vs expert-GPU count at fixed M.
+    Pass n_chunks=1 for the paper-faithful serialized-dispatch model."""
     out = {}
     for N in Ns:
         zp = ZPGroupShape(M=M, N=N, attn_class=attn_class,
                           exp_class=exp_class)
-        out[N] = plan_zp_group(cfg, zp, global_batch, seq_len)
+        out[N] = plan_zp_group(cfg, zp, global_batch, seq_len,
+                               n_chunks=n_chunks)
     return out
 
 
@@ -115,4 +135,7 @@ def replan(cfg: ModelConfig, plan: ZebraPlan, global_batch: int,
         raise RuntimeError("ZP group no longer viable; trigger full restart")
     zp = ZPGroupShape(M=M, N=N, attn_class=plan.zp.attn_class,
                       exp_class=exp_class)
-    return plan_zp_group(cfg, zp, global_batch, seq_len)
+    # Keep the original plan's dispatch-chunking cost model so degraded
+    # predictions stay comparable to the baseline they replace.
+    return plan_zp_group(cfg, zp, global_batch, seq_len,
+                         n_chunks=plan.n_chunks)

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 from repro.core.hardware import DeviceClass
 from repro.models.config import ModelConfig
@@ -33,6 +34,12 @@ class LayerTimes:
     Follows the paper's §5 profiler semantics: T_E^Attn is ONE expert FFN
     over the full per-expert-GPU token batch B on an attention GPU (one
     expert's actual share is then T_E^Attn * N / n).
+
+    Overlap-aware extension (DESIGN.md §8): t_dispatch / t_combine carry
+    the per-microbatch all-to-all wire times (zero when no link bandwidth
+    was supplied), so consumers can price the EXPOSED residue of chunked,
+    double-buffered dispatch (simulator.exposed_comm) instead of the full
+    serialized transfer.
     """
 
     t_attn: float       # T_A^Attn on the attention class
@@ -40,6 +47,8 @@ class LayerTimes:
     t_exp_attn: float   # T_E^Attn on the attention class (full B tokens)
     t_exp_on_exp: float      # one expert FFN, full B tokens, expert class
     t_attn_on_exp: float     # attention block on the expert class (EP baseline)
+    t_dispatch: float = 0.0  # dispatch all-to-all wire time, one direction
+    t_combine: float = 0.0   # combine all-to-all wire time, one direction
 
 
 def gemm_time(flops: float, bytes_moved: float, dev: DeviceClass) -> float:
@@ -111,9 +120,23 @@ class ZPGroupShape:
     exp_class: DeviceClass
 
 
+def a2a_time(cfg: ModelConfig, mb_tokens: int, link_bw: float, M: int,
+             N: int) -> float:
+    """One-direction all-to-all wire time for one microbatch: every routed
+    token copy crosses the bipartite cut once per direction (paper: no
+    extra communication vs EP)."""
+    byts = mb_tokens * max(cfg.top_k, 1) * cfg.d_model * BYTES
+    agg_bw = link_bw * min(M, N) if min(M, N) else link_bw
+    return byts / agg_bw
+
+
 def profile_layer(cfg: ModelConfig, zp: ZPGroupShape, global_batch: int,
-                  seq_len: int, num_microbatches: int) -> LayerTimes:
-    """The paper-profiler quantities for one (model, ZP group, batch)."""
+                  seq_len: int, num_microbatches: int,
+                  link_bw: Optional[float] = None) -> LayerTimes:
+    """The paper-profiler quantities for one (model, ZP group, batch).
+
+    With ``link_bw`` the returned LayerTimes also carries the dispatch /
+    combine all-to-all wire times (the overlap-aware fields)."""
     mb_tokens = global_batch * seq_len // num_microbatches
     tokens_per_attn_gpu = mb_tokens // zp.M
     # Each expert GPU receives (top_k-weighted) token copies for its experts.
@@ -127,9 +150,11 @@ def profile_layer(cfg: ModelConfig, zp: ZPGroupShape, global_batch: int,
     t_exp_on_exp = expert_ffn_time(cfg, tokens_per_exp_gpu, zp.exp_class)
     t_attn_on_exp = attention_block_time(cfg, tokens_per_attn_gpu, seq_len,
                                          zp.exp_class)
+    t_a2a = a2a_time(cfg, mb_tokens, link_bw, zp.M, zp.N) if link_bw else 0.0
     return LayerTimes(t_attn=t_attn, t_exp=t_exp, t_exp_attn=t_exp_attn,
                       t_exp_on_exp=t_exp_on_exp,
-                      t_attn_on_exp=t_attn_on_exp)
+                      t_attn_on_exp=t_attn_on_exp,
+                      t_dispatch=t_a2a, t_combine=t_a2a)
 
 
 # ---------------------------------------------------------------------------

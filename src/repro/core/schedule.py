@@ -64,6 +64,12 @@ class ZebraSchedule:
     R: int
     offload: tuple  # per-layer o_l (0 = no Asym-EA at that layer)
     streams: Dict[str, List[Task]]
+    # Sub-microbatch dispatch chunking (DESIGN.md §8): each D/C task is a
+    # pipeline of n_chunks slices double-buffered against the matching E
+    # task, so the simulator prices only its EXPOSED residue on the link
+    # streams. Task ordering and dependencies are unchanged — chunking is
+    # strictly finer-grained than the (layer, microbatch) task system.
+    n_chunks: int = 1
 
     def all_tasks(self) -> List[Task]:
         return [t for s in self.streams.values() for t in s]
@@ -104,10 +110,12 @@ def dependencies(task: Task, L: int, offload: tuple) -> List[Task]:
     return deps
 
 
-def canonical_schedule(L: int, R: int, offload: tuple = None) -> ZebraSchedule:
+def canonical_schedule(L: int, R: int, offload: tuple = None,
+                       n_chunks: int = 1) -> ZebraSchedule:
     """Theorem 1's optimal per-stream orders (+ Asym-EA X-task placement:
     offloaded expert compute goes after the layer's attention microbatches,
-    paper §4.2)."""
+    paper §4.2). ``n_chunks`` records the sub-microbatch dispatch chunking
+    the engines run with (see ZebraSchedule)."""
     offload = tuple(offload) if offload else tuple([0] * L)
     attn: List[Task] = []
     expc: List[Task] = []
@@ -146,7 +154,7 @@ def canonical_schedule(L: int, R: int, offload: tuple = None) -> ZebraSchedule:
     return ZebraSchedule(L, R, offload, {
         "attn_comp": attn, "exp_comp": expc,
         "link_a2e": a2e, "link_e2a": e2a,
-    })
+    }, n_chunks=max(int(n_chunks), 1))
 
 
 def validate(sched: ZebraSchedule) -> None:

@@ -34,6 +34,22 @@ class CommTimes:
     combine: float
 
 
+def exposed_comm(t_comm: float, t_hide: float, n_chunks: int) -> float:
+    """Exposed (critical-path) time of an all-to-all split into n_chunks
+    and double-buffered against compute of total duration t_hide.
+
+    The first chunk's wire time is always exposed (nothing to hide it
+    under); each later chunk transfers while the previous chunk computes,
+    so only the excess of per-chunk wire time over per-chunk compute time
+    stays exposed. n_chunks == 1 is the serialized baseline (full t_comm
+    exposed) — the pre-overlap cost model."""
+    q = max(int(n_chunks), 1)
+    if q == 1:
+        return t_comm
+    per = t_comm / q
+    return per + (q - 1) * max(0.0, per - t_hide / q)
+
+
 @dataclasses.dataclass
 class SimResult:
     iter_time: float
@@ -50,7 +66,7 @@ class SimResult:
 
 def task_duration(task, times: LayerTimes, comm: CommTimes, L: int,
                   offload, n_experts: int, N: int, M: int,
-                  head_time: float) -> float:
+                  head_time: float, n_chunks: int = 1) -> float:
     kind, phase, l, _ = task
     scale = BWD_RATIO if phase == "B" else 1.0
     o_l = offload[l] if 0 <= l < L else 0
@@ -62,12 +78,15 @@ def task_duration(task, times: LayerTimes, comm: CommTimes, L: int,
     if kind == "X":
         _, t_extra = apply_offload_to_times(times, o_l, n_experts, N, M)
         return t_extra * scale
-    if kind == "D":
+    if kind in ("D", "C"):
+        # Volume is phase-independent (activations fwd, cotangents bwd);
+        # with chunked dispatch only the exposed residue sits on the link
+        # stream — the rest hides under the matching expert compute (whose
+        # duration scales with BWD_RATIO in the backward).
         frac = 1.0 - o_l * N / n_experts  # offloaded tokens stay local-ish
-        return comm.dispatch * frac * (1.0 if phase == "F" else 1.0)
-    if kind == "C":
-        frac = 1.0 - o_l * N / n_experts
-        return comm.combine * frac
+        t_exp, _ = apply_offload_to_times(times, o_l, n_experts, N, M)
+        vol = (comm.dispatch if kind == "D" else comm.combine) * frac
+        return exposed_comm(vol, t_exp * scale, n_chunks)
     if kind == "H":
         return head_time
     raise ValueError(task)
@@ -107,7 +126,7 @@ def simulate(sched: S.ZebraSchedule, times: LayerTimes, comm: CommTimes,
         done += 1
         st = max((end[p] for p in preds[t]), default=0.0)
         dur = task_duration(t, times, comm, L, offload, n_experts, N, M,
-                            head_time)
+                            head_time, n_chunks=sched.n_chunks)
         start[t] = st
         end[t] = st + dur
         for s_ in succs[t]:
@@ -138,18 +157,17 @@ def comm_times(cfg, global_batch: int, seq_len: int, R: int,
                link_bw: float, M: int, N: int) -> CommTimes:
     """All-to-all volume per microbatch: every routed token copy crosses the
     bipartite cut once per direction (paper: no extra communication vs EP)."""
+    from repro.core.profiler import a2a_time
     mb_tokens = global_batch * seq_len // R
-    byts = mb_tokens * max(cfg.top_k, 1) * cfg.d_model * 2  # bf16
-    agg_bw = link_bw * min(M, N) if min(M, N) else link_bw
-    t = byts / agg_bw
+    t = a2a_time(cfg, mb_tokens, link_bw, M, N)
     return CommTimes(dispatch=t, combine=t)
 
 
 def simulate_hetermoe(cfg, times: LayerTimes, comm: CommTimes, R: int,
                       M: int, N: int, plan: Optional[AsymEAPlan] = None,
-                      head_time: float = 0.0) -> SimResult:
+                      head_time: float = 0.0, n_chunks: int = 1) -> SimResult:
     offload = plan.offload if plan is not None else tuple([0] * cfg.n_layers)
-    sched = S.canonical_schedule(cfg.n_layers, R, offload)
+    sched = S.canonical_schedule(cfg.n_layers, R, offload, n_chunks=n_chunks)
     return simulate(sched, times, comm, cfg.n_experts, N, M, head_time)
 
 

@@ -13,7 +13,12 @@ JAX's async dispatch turns that issue order into overlapped execution — the
 TPU/JAX equivalent of the paper's CUDA-stream scheduling. Activations cross
 groups as capacity-packed [E, C, d] buffers via jax.device_put (the bipartite
 dispatch/combine all-to-alls; volumes identical to EP, per the paper's
-no-extra-communication argument).
+no-extra-communication argument). With n_chunks > 1 each expert hop is a
+chunked, double-buffered pipeline (DESIGN.md §8): the device_put of capacity
+chunk k+1 is issued before chunk k's expert program, forward and backward,
+so transfers hide under expert compute at sub-microbatch granularity, and
+the combine consumes ONE packed [E, C, d] output assembled from the local
+(attention-side) rows and the streamed remote chunks.
 
 Backward uses stage-granular recompute (activation checkpointing, the
 paper's §6.1 setting): each stage's VJP re-executes its forward inside jit.
@@ -68,12 +73,14 @@ class ZebraMPMD:
     def __init__(self, cfg: ModelConfig, run: RunConfig, attn_devices,
                  exp_devices, num_microbatches: int = 2,
                  offload: Optional[tuple] = None,
-                 capacity_factor: Optional[float] = None):
+                 capacity_factor: Optional[float] = None,
+                 n_chunks: int = 1):
         assert cfg.is_moe, "MPMD zebra engine is for MoE architectures"
         assert not cfg.tail_specs, "use pattern-aligned layer counts"
         self.cfg = cfg
         self.run = run
         self.R = num_microbatches
+        self.Q = max(int(n_chunks), 1)
         self.M = len(attn_devices)
         self.N = len(exp_devices)
         self.attn_mesh = Mesh(np.array(attn_devices), ("adata",))
@@ -141,8 +148,12 @@ class ZebraMPMD:
             weights, idx, aux = modules.moe_route(
                 p_layer["ffn"]["router"], cfg, run.policy, u2)
             n_att = p_layer["ffn"]["wi_gate"].shape[0]
-            C = max(_round_up(int(u2.shape[0] * cfg.top_k / E * self.cf), 8),
-                    8)
+            from repro.kernels.ops import chunk_capacity
+            C0 = max(_round_up(int(u2.shape[0] * cfg.top_k / E * self.cf),
+                               8), 8)
+            # Capacity padded so the remote buffer splits into Q equal
+            # chunk slices for the pipelined dispatch (pad rows inert).
+            C, _ = chunk_capacity(C0, self.Q)
             buf, (tok, slot, keep, order) = zs._pack(u2, idx, E, C)
             return (h, buf[n_att:], buf[:n_att], weights, tok, slot, keep,
                     order, aux)
@@ -163,10 +174,18 @@ class ZebraMPMD:
                                      buf_local, cd,
                                      use_kernel=run.use_gmm_kernel)
 
-        def combine(h, out_local, out_remote, weights, tok, slot, keep,
-                    order):
+        def assemble(out_local, *out_chunks):
+            """Stitch the local output and the streamed remote chunk
+            outputs into ONE packed [E, C, d] buffer (capacity-major for
+            the remote part) — the single output `combine` consumes."""
+            rem = out_chunks[0] if len(out_chunks) == 1 else \
+                jnp.concatenate(out_chunks, axis=1)
+            return jnp.concatenate([out_local.astype(rem.dtype), rem],
+                                   axis=0)
+
+        def combine(h, out, weights, tok, slot, keep, order):
+            """Weighted combine over ONE packed [E, C, d] expert output."""
             B, S, d = h.shape
-            out = jnp.concatenate([out_local, out_remote], axis=0)
             y2 = zs._unpack(out, (tok, slot, keep, order), weights, B * S)
             return h + y2.reshape(h.shape).astype(h.dtype)
 
@@ -179,11 +198,11 @@ class ZebraMPMD:
                                        axis=-1)[..., 0]
             return jnp.mean(nll)
 
-        a_jit = functools.partial(jax.jit)
         self.embed_f = jax.jit(embed)
         self.attn_route_f = jax.jit(attn_route)
         self.expert_f = jax.jit(expert_fwd)
         self.local_expert_f = jax.jit(local_expert_fwd)
+        self.assemble_f = jax.jit(assemble)
         self.combine_f = jax.jit(combine)
         self.head_loss_f = jax.jit(head_loss)
 
@@ -191,13 +210,11 @@ class ZebraMPMD:
         self.head_bwd = jax.jit(lambda p, x, t: jax.grad(
             head_loss, argnums=(0, 1))(p, x, t))
 
-        def combine_bwd(h, out_local, out_remote, weights, tok, slot, keep,
-                        order, g):
+        def combine_bwd(h, out, weights, tok, slot, keep, order, g):
             _, vjp = jax.vjp(
-                lambda h_, ol, orm, w: combine(h_, ol, orm, w, tok, slot,
-                                               keep, order),
-                h, out_local, out_remote, weights)
-            return vjp(g)  # (dh, d_out_local, d_out_remote, d_weights)
+                lambda h_, o_, w: combine(h_, o_, w, tok, slot, keep, order),
+                h, out, weights)
+            return vjp(g)  # (dh, d_out_packed, d_weights)
 
         self.combine_bwd_f = jax.jit(combine_bwd)
 
@@ -264,19 +281,32 @@ class ZebraMPMD:
         for j in range(R):
             tj = jax.device_put(toks[j], batch_sh)
             x[(0, j)] = self.embed_f(attn_side["embed"], tj, positions)
+        Q = self.Q
         for l in range(L):
             for j in range(R):
                 out = self.attn_route_f(attn_side["layers"][l], x[(l, j)],
                                         positions)
                 (h, buf_r, buf_l, w, tok, slot, keep, order, aux) = out
-                buf_dev = self._to_exp(buf_r)           # dispatch a2a
-                o_rem = self.expert_f(exp_layers[l], buf_dev)
-                o_rem = self._to_attn(o_rem)            # combine a2a
+                Cq = buf_r.shape[1] // Q
+                # Chunked dispatch: the device_put of chunk q+1 is issued
+                # BEFORE the expert GEMM of chunk q, so JAX's async
+                # dispatch overlaps the transfer with compute — the D/E
+                # pipelining of Theorem 1 at sub-microbatch granularity.
+                sent = [self._to_exp(buf_r[:, :Cq])]
+                outs = []
+                for q in range(Q):
+                    if q + 1 < Q:
+                        sent.append(self._to_exp(
+                            buf_r[:, (q + 1) * Cq:(q + 2) * Cq]))
+                    o = self.expert_f(exp_layers[l], sent[q])
+                    outs.append(self._to_attn(o))   # combine a2a, chunk q
+                # Local (offloaded) experts run on the attention mesh
+                # while the remote chunks are in flight.
                 o_loc = self.local_expert_f(attn_side["layers"][l], buf_l)
-                y = self.combine_f(h, o_loc, o_rem, w, tok, slot, keep,
-                                   order)
+                out_full = self.assemble_f(o_loc, *outs)
+                y = self.combine_f(h, out_full, w, tok, slot, keep, order)
                 saved[(l, j)] = (h, buf_r, buf_l, w, tok, slot, keep, order,
-                                 o_loc, o_rem)
+                                 out_full)
                 x[(l + 1, j)] = y
 
         # ---- head + backward, Theorem-1 reverse order ----
@@ -298,15 +328,29 @@ class ZebraMPMD:
 
         for l in range(L - 1, -1, -1):
             for j in range(R):
-                (h, buf_r, buf_l, w, tok, slot, keep, order, o_loc,
-                 o_rem) = saved.pop((l, j))
-                dh, d_ol, d_or, dw = self.combine_bwd_f(
-                    h, o_loc, o_rem, w, tok, slot, keep, order, g_x[(l + 1, j)])
-                d_or_dev = self._to_exp(d_or)           # grad dispatch (C^B)
-                gpe, d_buf_r = self.expert_bwd_f(
-                    exp_layers[l], self._to_exp(buf_r), d_or_dev)
-                grads_e[l] = jax.tree.map(jnp.add, grads_e[l], gpe)
-                d_buf_r = self._to_attn(d_buf_r)        # grad combine (D^B)
+                (h, buf_r, buf_l, w, tok, slot, keep, order,
+                 out_full) = saved.pop((l, j))
+                n_att = buf_l.shape[0]
+                dh, d_out, dw = self.combine_bwd_f(
+                    h, out_full, w, tok, slot, keep, order, g_x[(l + 1, j)])
+                d_ol, d_or = d_out[:n_att], d_out[n_att:]
+                Cq = d_or.shape[1] // Q
+                # Chunked grad dispatch (C^B): ship chunk q+1's cotangent
+                # and recompute input while chunk q's expert backward runs.
+                sent = [(self._to_exp(d_or[:, :Cq]),
+                         self._to_exp(buf_r[:, :Cq]))]
+                d_chunks = []
+                for q in range(Q):
+                    if q + 1 < Q:
+                        sl = slice((q + 1) * Cq, (q + 2) * Cq)
+                        sent.append((self._to_exp(d_or[:, sl]),
+                                     self._to_exp(buf_r[:, sl])))
+                    g_q, b_q = sent[q]
+                    gpe, d_buf_q = self.expert_bwd_f(exp_layers[l], b_q, g_q)
+                    grads_e[l] = jax.tree.map(jnp.add, grads_e[l], gpe)
+                    d_chunks.append(self._to_attn(d_buf_q))  # D^B, chunk q
+                d_buf_r = d_chunks[0] if Q == 1 else \
+                    jnp.concatenate(d_chunks, axis=1)
                 gpl, d_buf_l = self.local_expert_bwd_f(
                     attn_side["layers"][l], buf_l, d_ol)
                 gpa, dx = self.attn_route_bwd_f(

@@ -18,7 +18,11 @@ Two expert-parallel dispatch modes (ZebraConfig.mode):
     ("model") axis too; tokens are capacity-packed per expert and exchanged
     with ``lax.all_to_all`` (dispatch), computed on their expert shard, and
     exchanged back (combine). Microbatching requires global_batch >=
-    R * n_batch_shards.
+    R * n_batch_shards. With ``n_chunks > 1`` the dispatch buffer streams
+    in capacity chunks double-buffered against the expert GEMMs, and with
+    ``offload_experts > 0`` the leading experts stay replicated
+    attention-side, folded into the first chunk's unified grouped GEMM
+    (DESIGN.md §8).
   * "replicated" — TPU-native hybrid (TP attention + EP experts): batch is
     sharded over "data" only, so activations are replicated across the
     expert axis; each expert shard *selects* its own tokens locally (the
@@ -55,6 +59,17 @@ class ZebraConfig:
     batch_axes: tuple = ("data",)  # axes the token batch is sharded over
     capacity_factor: float = 1.25
     pipeline: bool = True  # False -> sequential EP (paper's "EP"/DistEP)
+    # Chunked dispatch (alltoall mode): the [E, C, d] dispatch buffer is
+    # split into n_chunks capacity slices; the all-to-all of chunk k+1 has
+    # no data dependence on the expert GEMM of chunk k, so XLA's async
+    # scheduler double-buffers communication under compute (DESIGN.md §8).
+    n_chunks: int = 1
+    # Asym-EA-style offload (alltoall mode): experts [0, offload_experts)
+    # live replicated on every shard ("attention-side"); their tokens skip
+    # the all-to-all entirely and their GEMM is folded into the FIRST
+    # chunk's unified grouped call (ops.moe_ffn_packed_multi), filling the
+    # bubble while chunk 0 of the remote dispatch is in flight.
+    offload_experts: int = 0
 
 
 def _round_up(x: int, m: int) -> int:
@@ -140,20 +155,21 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
     k = cfg.top_k
     ep = zcfg.ep_axis
     n_ep = mesh.shape[ep]
-    assert E % n_ep == 0, f"experts {E} must divide over {ep}={n_ep}"
-    E_loc = E // n_ep
+    n_loc = zcfg.offload_experts if zcfg.mode == "alltoall" else 0
+    E_rem = E - n_loc
+    assert 0 <= n_loc < E, f"offload_experts {n_loc} out of range for E={E}"
+    assert E_rem % n_ep == 0, \
+        f"remote experts {E_rem} must divide over {ep}={n_ep}"
+    E_loc = E_rem // n_ep
+    Q = max(int(zcfg.n_chunks), 1)
     cd = run.policy.compute_dtype
 
     ba = tuple(zcfg.batch_axes)
     if zcfg.mode == "alltoall" and ep not in ba:
         ba = ba + (ep,)
     batch_spec = P(ba, None)
-    ffn_specs = {
-        "router": P(None, None),
-        "wi_gate": P(ep, None, None),
-        "wi_up": P(ep, None, None),
-        "wo": P(ep, None, None),
-    }
+    from repro.sharding.rules import ep_ffn_specs
+    ffn_specs = ep_ffn_specs(ep, offload=n_loc > 0)
 
     def local_route(router_w, x):
         weights, idx, aux = modules.moe_route(router_w, cfg, run.policy, x)
@@ -180,33 +196,83 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
             y = jax.lax.psum(y, ep)  # combine partial expert outputs
             return y, aux
 
-    else:  # alltoall
+    else:  # alltoall: chunked, double-buffered packed-domain dispatch
+        from repro.kernels import ops as kops  # lazy: avoid cycles
+        # The alltoall hop always rides the ops.moe_ffn machinery (not the
+        # replicated mode's batched einsum): the unified local+remote call
+        # and the per-chunk slices need its tile_group metadata, and its
+        # recompute-backward custom_vjp keeps only chunk INPUTS resident —
+        # with n_chunks > 1 an autodiff einsum would store every chunk's
+        # activations across the whole unrolled pipeline instead.
+        uk = True if run.use_gmm_kernel else None  # None -> backend default
+
+        def remote_ffn(ffn, r):
+            return kops.moe_ffn_packed(r, ffn["wi_gate"].astype(cd),
+                                       ffn["wi_up"].astype(cd),
+                                       ffn["wo"].astype(cd), use_kernel=uk)
+
         def fn(ffn, x):  # x: [T_loc, d], batch sharded over ep axis as well
-            T = x.shape[0]
+            T, d = x.shape
             weights, idx, aux = local_route(ffn["router"], x)
-            C = max(_round_up(int(T * k / E * zcfg.capacity_factor), 8), 8)
-            buf, meta = _pack(x, idx, E, C)  # [E, C, d]
-            buf = buf.reshape(n_ep, E_loc, C, x.shape[1])
-            # Dispatch: exchange expert-major buffers across the EP axis.
-            recv = jax.lax.all_to_all(buf, ep, split_axis=0, concat_axis=0,
-                                      tiled=False)
-            recv = jnp.swapaxes(recv, 0, 1).reshape(E_loc, n_ep * C,
-                                                    x.shape[1])
-            out = _experts_dense(ffn["wi_gate"], ffn["wi_up"], ffn["wo"],
-                                 recv, cd, use_kernel=run.use_gmm_kernel)
-            out = jnp.swapaxes(out.reshape(E_loc, n_ep, C, x.shape[1]), 0, 1)
-            # Combine: reverse all-to-all.
-            back = jax.lax.all_to_all(out, ep, split_axis=0, concat_axis=0,
-                                      tiled=False)
-            y = _unpack(back.reshape(E, C, -1), meta, weights, T)
+            C0 = max(_round_up(int(T * k / E * zcfg.capacity_factor), 8), 8)
+            # Capacity padded so it splits into Q equal sublane-aligned
+            # chunk slices (pad rows are zero and inert end to end).
+            C, Cq = kops.chunk_capacity(C0, Q)
+            buf, meta = _pack(x, idx, E, C)  # [E, C, d] — packed domain
+            loc = buf[:n_loc]                # local (offloaded) experts
+            rem = buf[n_loc:].reshape(n_ep, E_loc, C, d)
+            # Dispatch: one all-to-all per capacity chunk, all issued
+            # before any expert GEMM — chunk q+1's exchange has no data
+            # dependence on chunk q's compute, so the collectives hide
+            # behind expert compute instead of preceding it (the backward
+            # of this unrolled loop transposes chunk-by-chunk and keeps
+            # the same independence, mirroring the overlap).
+            recv = [jax.lax.all_to_all(
+                        jax.lax.dynamic_slice_in_dim(rem, q * Cq, Cq, axis=2),
+                        ep, split_axis=0, concat_axis=0, tiled=False)
+                    for q in range(Q)]
+            outs = []
+            for q in range(Q):
+                r = jnp.swapaxes(recv[q], 0, 1).reshape(E_loc, n_ep * Cq, d)
+                if q == 0 and n_loc:
+                    # Local + remote experts in ONE grouped GEMM per
+                    # projection direction: the offloaded experts' GEMM
+                    # fills the bubble while later chunks are in flight.
+                    out_l, o = kops.moe_ffn_packed_multi(
+                        [loc, r],
+                        [ffn["wi_gate_loc"].astype(cd),
+                         ffn["wi_gate"].astype(cd)],
+                        [ffn["wi_up_loc"].astype(cd),
+                         ffn["wi_up"].astype(cd)],
+                        [ffn["wo_loc"].astype(cd), ffn["wo"].astype(cd)],
+                        use_kernel=uk)
+                else:
+                    o = remote_ffn(ffn, r)
+                # Combine: chunk q's reverse all-to-all is issued before
+                # chunk q+1's GEMM — same hiding on the way back.
+                o = jnp.swapaxes(o.reshape(E_loc, n_ep, Cq, d), 0, 1)
+                outs.append(jax.lax.all_to_all(o, ep, split_axis=0,
+                                               concat_axis=0, tiled=False))
+            back = outs[0] if Q == 1 else jnp.concatenate(outs, axis=2)
+            out_full = back.reshape(E_rem, C, d)
+            if n_loc:
+                # Combine consumes ONE packed [E, C, d] output.
+                out_full = jnp.concatenate([out_l.astype(out_full.dtype),
+                                            out_full], axis=0)
+            y = _unpack(out_full, meta, weights, T)
             return y, aux
 
     in_specs = (ffn_specs, batch_spec)
     out_specs = (batch_spec, P())
 
     def moe_fn(ffn_params, x2d):
+        fp = {"router": ffn_params["router"]}
+        for k_ in ("wi_gate", "wi_up", "wo"):
+            if n_loc:
+                fp[k_ + "_loc"] = ffn_params[k_][:n_loc]
+            fp[k_] = ffn_params[k_][n_loc:]
         sm = _shard_map(fn, mesh, in_specs, out_specs)
-        return sm(ffn_params, x2d)
+        return sm(fp, x2d)
 
     return moe_fn
 

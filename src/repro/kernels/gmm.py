@@ -89,6 +89,46 @@ def gmm_tiled(lhs, rhs, tile_group, *, block_m=128, block_k=128, block_n=128,
     return out[:, :N]
 
 
+# ---------------------------------------------------------------------------
+# VMEM budgeting for block-size autotuning
+# ---------------------------------------------------------------------------
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # per-core VMEM, v4/v5e class
+
+
+def glu_vmem_bytes(block_m: int, block_k: int, block_n: int,
+                   lhs_dtype=jnp.bfloat16, rhs_dtype=jnp.bfloat16) -> int:
+    """Peak VMEM working set of one gmm_glu_tiled grid step.
+
+    Streamed operands (lhs tile, gate+up rhs tiles, out tile) are
+    double-buffered by the Pallas pipeline (2x); the two f32 accumulator
+    scratches are single instances that live across the k-loop.
+    """
+    lb = jnp.dtype(lhs_dtype).itemsize
+    rb = jnp.dtype(rhs_dtype).itemsize
+    streamed = (block_m * block_k * lb          # lhs tile
+                + 2 * block_k * block_n * rb    # gate + up rhs tiles
+                + block_m * block_n * lb)       # fused output tile
+    scratch = 2 * block_m * block_n * 4         # two f32 accumulators
+    return 2 * streamed + scratch
+
+
+def glu_block_candidates(block_k: int = 128,
+                         vmem_budget: int = VMEM_BUDGET_BYTES,
+                         lhs_dtype=jnp.bfloat16, rhs_dtype=jnp.bfloat16,
+                         ms=(512, 256, 128, 64), ns=(512, 256, 128)):
+    """(block_m, block_n) sweep candidates for gmm_glu_tiled that fit the
+    VMEM budget, largest tiles first (MXU-aligned multiples of 128 plus a
+    64-row sublane option for capacity-chunked buffers)."""
+    out = []
+    for bm in ms:
+        for bn in ns:
+            if glu_vmem_bytes(bm, block_k, bn, lhs_dtype,
+                              rhs_dtype) <= vmem_budget:
+                out.append((bm, bn))
+    return out
+
+
 def _gmm_glu_kernel(tile_group, lhs_ref, rhs_g_ref, rhs_u_ref, out_ref,
                     acc_g, acc_u, *, n_k):
     """Fused GLU grouped matmul: out = silu(lhs @ rhs_g) * (lhs @ rhs_u).

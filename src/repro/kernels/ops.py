@@ -427,6 +427,16 @@ def moe_ffn(x_sorted, wi_gate, wi_up, wo, group_sizes, *,
     return fn(x_sorted, wi_gate, wi_up, wo, scales, dest, tile_group)
 
 
+def chunk_capacity(C: int, n_chunks: int) -> tuple:
+    """Pad a per-expert capacity so it splits into ``n_chunks`` equal,
+    sublane-aligned slices (the zebra engines' chunked-dispatch layout).
+    Returns (C_padded, C_chunk) with C_padded == n_chunks * C_chunk and
+    C_chunk a multiple of 8 (pad rows are zero and inert end to end)."""
+    q = max(int(n_chunks), 1)
+    cq = _round_up(max(-(-C // q), 1), 8)
+    return cq * q, cq
+
+
 def moe_ffn_packed(buf, wi_gate, wi_up, wo, *, block_m: int | None = None,
                    block_k: int = 128, block_n: int = 128,
                    interpret: bool | None = None,
@@ -436,26 +446,68 @@ def moe_ffn_packed(buf, wi_gate, wi_up, wo, *, block_m: int | None = None,
     so the buffer IS the packed domain — no sort, no pack scatter, no
     unpack gather. Returns [E, C, d].
     """
-    E, C, d = buf.shape
+    return moe_ffn_packed_multi(
+        [buf], [wi_gate], [wi_up], [wo], block_m=block_m, block_k=block_k,
+        block_n=block_n, interpret=interpret, use_kernel=use_kernel)[0]
+
+
+def moe_ffn_packed_multi(bufs, wi_gates, wi_ups, wos, *,
+                         block_m: int | None = None, block_k: int = 128,
+                         block_n: int = 128, interpret: bool | None = None,
+                         use_kernel: bool | None = None):
+    """ONE grouped-GEMM GLU FFN over SEVERAL capacity-packed buffers.
+
+    bufs[i]: [G_i, C_i, d] (capacities may differ per segment);
+    wi_gates[i]/wi_ups[i]: [G_i, d, f]; wos[i]: [G_i, f, d].
+
+    The segments' weight stacks are concatenated into a single
+    [G_total, ...] stack and their rows into one tile-aligned lhs with
+    unified per-tile group metadata, so the whole call lowers to exactly
+    ONE gate+up fused grouped GEMM plus ONE down-projection grouped GEMM —
+    one grouped GEMM per projection direction covering every group of every
+    segment, under a single custom_vjp (recompute backward). The zebra
+    engines use this to run local (attention-side offloaded / replicated)
+    and remote experts in one call instead of two fragmented GEMM pipelines
+    (DESIGN.md §8). Returns a list of [G_i, C_i, d] outputs.
+    """
+    assert len(bufs) == len(wi_gates) == len(wi_ups) == len(wos)
+    assert bufs, "need at least one packed segment"
+    d = bufs[0].shape[-1]
     interpret = _interpret_default() if interpret is None else interpret
     use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
     # Engines round capacities to multiples of 8; pad odd capacities up
     # rather than degrading to sub-sublane tiles (zero rows are inert in
     # both the outputs and the weight gradients).
-    Cp = _round_up(C, 8)
-    if Cp != C:
-        buf = jnp.pad(buf, ((0, 0), (0, Cp - C), (0, 0)))
+    caps = [_round_up(b.shape[1], 8) for b in bufs]
     if block_m is None:
-        block_m = next(b for b in (128, 64, 32, 16, 8) if Cp % b == 0)
-    assert Cp % block_m == 0, (Cp, block_m)
-    tile_group = jnp.repeat(jnp.arange(E, dtype=jnp.int32), Cp // block_m)
-    fn = _make_moe_ffn(block_m, block_k, block_n, interpret, E, use_kernel,
-                       False, jnp.dtype(buf.dtype).name, False)
+        block_m = next(b for b in (128, 64, 32, 16, 8)
+                       if all(c % b == 0 for c in caps))
+    assert all(c % block_m == 0 for c in caps), (caps, block_m)
+    rows, tiles, n_tot = [], [], 0
+    for buf, cp in zip(bufs, caps):
+        g, c = buf.shape[0], buf.shape[1]
+        if cp != c:
+            buf = jnp.pad(buf, ((0, 0), (0, cp - c), (0, 0)))
+        rows.append(buf.reshape(g * cp, d))
+        tiles.append(jnp.repeat(
+            jnp.arange(n_tot, n_tot + g, dtype=jnp.int32), cp // block_m))
+        n_tot += g
+    lhs = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+    tile_group = tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles)
+    wg = wi_gates[0] if len(bufs) == 1 else jnp.concatenate(wi_gates, axis=0)
+    wu = wi_ups[0] if len(bufs) == 1 else jnp.concatenate(wi_ups, axis=0)
+    wo_ = wos[0] if len(bufs) == 1 else jnp.concatenate(wos, axis=0)
+    fn = _make_moe_ffn(block_m, block_k, block_n, interpret, n_tot,
+                       use_kernel, False, jnp.dtype(lhs.dtype).name, False)
     dest = jnp.zeros((0,), jnp.int32)  # unused in the no-pack variant
-    scales = jnp.zeros((0,), buf.dtype)  # unused in the unscaled variant
-    out = fn(buf.reshape(E * Cp, d), wi_gate, wi_up, wo, scales, dest,
-             tile_group)
-    return out.reshape(E, Cp, d)[:, :C]
+    scales = jnp.zeros((0,), lhs.dtype)  # unused in the unscaled variant
+    out = fn(lhs, wg, wu, wo_, scales, dest, tile_group)
+    outs, off = [], 0
+    for buf, cp in zip(bufs, caps):
+        g, c = buf.shape[0], buf.shape[1]
+        outs.append(out[off:off + g * cp].reshape(g, cp, d)[:, :c])
+        off += g * cp
+    return outs
 
 
 # ---------------------------------------------------------------------------

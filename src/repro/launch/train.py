@@ -47,6 +47,12 @@ def main(argv=None):
     ap.add_argument("--no-zebra", dest="zebra", action="store_false")
     ap.add_argument("--zebra-mode", default="replicated")
     ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--n-chunks", type=int, default=1,
+                    help="capacity chunks for overlapped dispatch "
+                         "(alltoall mode, DESIGN.md §8)")
+    ap.add_argument("--offload-experts", type=int, default=0,
+                    help="experts kept replicated attention-side "
+                         "(alltoall mode Asym-EA offload)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -66,7 +72,9 @@ def main(argv=None):
     zcfg = None
     if args.zebra and cfg.is_moe:
         zcfg = ZebraConfig(mode=args.zebra_mode,
-                           num_microbatches=args.microbatches)
+                           num_microbatches=args.microbatches,
+                           n_chunks=args.n_chunks,
+                           offload_experts=args.offload_experts)
     opt_cfg = opt.OptimizerConfig(peak_lr=args.lr, warmup_steps=20,
                                   total_steps=args.steps)
     program = make_train_program(cfg, mesh, run, shape, opt_cfg=opt_cfg,

@@ -48,7 +48,11 @@ class RunConfig:
 
     policy: Policy = Policy()
     attn_impl: str = "ref"  # ref | chunked | flash (Pallas)
-    moe_impl: str = "dense"  # dense | gather (single-pack fused moe_ffn)
+    # MoE execution path. "gather" (default): the single-pack fused
+    # ops.moe_ffn pipeline — what every serve/train path runs. "dense":
+    # the O(E) every-token-through-every-expert einsum, kept ONLY as the
+    # exact test reference that parity suites compare against.
+    moe_impl: str = "gather"
     # gather mode: True forces the Pallas grouped kernels (interpret mode
     # off-TPU — test vehicle); False lets kernels/ops pick the backend
     # default (Mosaic on TPU, XLA tile-gather fallback elsewhere).
@@ -529,7 +533,10 @@ def apply_moe(params, cfg: ModelConfig, run: RunConfig, x):
     T, k = idx.shape
 
     if run.moe_impl == "dense":
-        # Every expert on every token; exact but O(E) compute. Test-scale only.
+        # Every expert on every token; exact but O(E) compute. TEST
+        # REFERENCE ONLY — serve/train paths ride the fused pipeline below
+        # (the RunConfig default), which is numerically equivalent
+        # (dropless) at O(top_k) compute.
         g = jnp.einsum("td,edf->tef", x2d, params["wi_gate"].astype(cd))
         u = jnp.einsum("td,edf->tef", x2d, params["wi_up"].astype(cd))
         h = jax.nn.silu(g) * u

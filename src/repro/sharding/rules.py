@@ -160,6 +160,24 @@ def shardings_for(axes_tree, rules: ShardingRules, mesh: Mesh):
     return axes_map(lambda a: NamedSharding(mesh, rules.spec(a)), axes_tree)
 
 
+def ep_ffn_specs(ep_axis: str, offload: bool = False) -> dict:
+    """shard_map in_specs for a zebra EP MoE ffn param dict.
+
+    Router replicated; the [E_remote, ...] expert stacks sharded over the
+    EP axis. With Asym-EA offload, the local (attention-side) expert
+    slices ride along under the ``*_loc`` keys REPLICATED across the EP
+    axis: every shard computes its own tokens' local-expert rows (no
+    all-to-all for those tokens), so the weights must be present
+    everywhere — the same placement the MPMD engine realizes by keeping
+    offloaded experts on the attention mesh."""
+    specs = {"router": P(None, None)}
+    for k in ("wi_gate", "wi_up", "wo"):
+        specs[k] = P(ep_axis, None, None)
+        if offload:
+            specs[k + "_loc"] = P(None, None, None)
+    return specs
+
+
 def slot_vector_spec(batch: int, mesh: Mesh, rules: ShardingRules) -> P:
     """Spec for per-slot serving vectors [B] (positions, active mask,
     request ids, sampling parameters). They ride the same batch axes as

@@ -108,6 +108,16 @@ def make_train_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig,
         while R > 1 and (B % R or (B // R) % nsh):
             R -= 1  # microbatches must keep the batch shardable
         zcfg = dataclasses.replace(zcfg, batch_axes=zb, num_microbatches=R)
+        if cfg.is_moe and zcfg.mode == "alltoall":
+            # Chunked-dispatch knobs: the remote expert count must divide
+            # over the EP axis after Asym-EA offload; shrink the offload
+            # until it does rather than failing inside the engine.
+            n_ep = mesh.shape[zcfg.ep_axis]
+            off = max(min(zcfg.offload_experts, cfg.n_experts - n_ep), 0)
+            while off and (cfg.n_experts - off) % n_ep:
+                off -= 1
+            zcfg = dataclasses.replace(zcfg, offload_experts=off,
+                                       n_chunks=max(int(zcfg.n_chunks), 1))
 
     # Abstract shapes + shardings ------------------------------------------------
     from repro.pytree import cast_tree

@@ -103,8 +103,9 @@ def _fused_loss_and_grads(cfg, params, tokens, targets):
     return jax.value_and_grad(loss)(params)
 
 
-@pytest.mark.parametrize("offload", [None, (1, 0)])
-def test_mpmd_engine_matches_fused(offload):
+@pytest.mark.parametrize("offload,n_chunks",
+                         [(None, 1), ((1, 0), 1), (None, 2), ((1, 0), 2)])
+def test_mpmd_engine_matches_fused(offload, n_chunks):
     cfg = moe_cfg("mixtral-w1", n_layers=2)
     params, _ = split_params(stack.init_model(KEY, cfg))
     tokens = jax.random.randint(KEY, (4, 16), 0, cfg.vocab_size)
@@ -114,7 +115,7 @@ def test_mpmd_engine_matches_fused(offload):
 
     devs = jax.devices()
     eng = ZebraMPMD(cfg, RUN, attn_devices=devs[:2], exp_devices=devs[2:6],
-                    num_microbatches=2, offload=offload)
+                    num_microbatches=2, offload=offload, n_chunks=n_chunks)
     attn_side, exp_layers = eng.shard_params(params)
     loss, ga, ge = eng.train_step(attn_side, exp_layers, tokens, targets)
     assert abs(float(loss) - float(loss_ref)) < 1e-5
