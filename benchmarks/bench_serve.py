@@ -5,17 +5,27 @@ inter-token latency across PRs via BENCH_serve.json.
 Reuses launch/serve.py::serve_arch (one engine wiring, two entry points)
 so the benchmark always measures exactly what the driver runs.
 
-No hard gate: absolute numbers are host-dependent; the JSON is the
-trend record (and the run doubles as an integration check — it fails if
-any request is dropped or the engine stalls).
+``--paged`` additionally sweeps the paged-KV engine (DESIGN.md §9) over
+page_size in {16, 32, 64} x paged slot counts at a FIXED simulated HBM
+budget — the cache lines the reservation engine would pin for ``--slots``
+slots (slots x max_len). The pool gets floor(budget / page_size) physical
+pages, the engine gets more decode slots than the reservation engine could
+back, and ``slots_at_fixed_hbm`` records how many requests it actually
+sustained concurrently. ``slot_ratio_best`` (vs the reservation engine's
+slot count) is the SIMULATED gate metric — it is a deterministic function
+of the trace and scheduler, independent of host speed — and must stay
+>= 1.5 (benchmarks/check_regression.py enforces the trend). Throughput
+stays measured/informational.
 
 Usage:
-    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out PATH]
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--paged] \
+        [--out PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import copy
 import json
 import pathlib
 import time
@@ -23,6 +33,8 @@ import time
 import jax
 
 ARCHS = ("qwen3-moe-30b-a3b", "llama3.2-3b")  # MoE + dense
+PAGED_ARCH = "llama3.2-3b"  # sweep arch (dense decode = fastest runner)
+PAGE_SIZES = (16, 32, 64)
 
 
 def bench_arch(arch: str, args) -> dict:
@@ -32,7 +44,8 @@ def bench_arch(arch: str, args) -> dict:
     s = serve_arch(arch, args)
     wall = time.perf_counter() - t0
     assert s["n_requests"] == args.requests, "dropped requests"
-    return {
+    assert s.get("ok", True), f"serve gate failed for {arch}"
+    out = {
         "requests": s["n_requests"],
         "generated_tokens": s["n_generated_tokens"],
         "wall_s": round(wall, 3),
@@ -44,6 +57,66 @@ def bench_arch(arch: str, args) -> dict:
         "queue_depth_max": s["queue_depth"]["max"],
         "max_concurrent_active": s["max_concurrent_active"],
     }
+    if "paged" in s:
+        out["paged"] = s["paged"]
+    return out
+
+
+def bench_paged_sweep(args) -> dict:
+    """page_size x slot-count sweep at fixed simulated HBM (see module
+    docstring). Returns the BENCH_serve.json ``paged`` section."""
+    max_len = args.prompt_len + args.gen
+    slots_ref = args.slots  # reservation engine slots at this HBM budget
+    budget_lines = slots_ref * max_len
+    points = []
+    for page_size in PAGE_SIZES:
+        pool_pages = budget_lines // page_size
+        for mult in (2, 3):
+            a = copy.copy(args)
+            a.paged = True
+            a.page_size = page_size
+            a.pool_pages = pool_pages
+            a.slots = slots_ref * mult
+            a.requests = args.paged_requests
+            a.rate = args.paged_rate
+            try:
+                s = bench_arch(PAGED_ARCH, a)
+            except AssertionError as e:  # pool too tight for the trace
+                points.append({"page_size": page_size,
+                               "pool_pages": pool_pages,
+                               "n_slots": a.slots, "error": str(e)})
+                continue
+            points.append({
+                "page_size": page_size,
+                "pool_pages": pool_pages,
+                "pool_lines": pool_pages * page_size,
+                "n_slots": a.slots,
+                "slots_at_fixed_hbm": s["max_concurrent_active"],
+                "slot_ratio": round(s["max_concurrent_active"] / slots_ref,
+                                    3),
+                "tokens_per_s": s["tokens_per_s"],
+                "page_peak": s["paged"]["page_peak"],
+                "mean_lines_per_active_slot":
+                    s["paged"]["mean_lines_per_active_slot"],
+                "n_preempted": s["paged"]["n_preempted"],
+            })
+    ok = [p for p in points if "error" not in p]
+    assert ok, f"no paged sweep point completed; per-point errors: {points}"
+    best = max(ok, key=lambda p: p["slot_ratio"])
+    section = {
+        "arch": PAGED_ARCH,
+        "slots_ref": slots_ref,
+        "budget_lines": budget_lines,
+        "paged_requests": args.paged_requests,
+        "paged_rate": args.paged_rate,
+        "points": points,
+        "slot_ratio_best": best["slot_ratio"],
+        "best_config": {k: best[k] for k in ("page_size", "n_slots")},
+    }
+    assert best["slot_ratio"] >= 1.5, \
+        f"paged engine sustained only {best['slot_ratio']}x the " \
+        f"reservation slots at equal HBM (need >= 1.5x)"
+    return section
 
 
 def main():
@@ -54,6 +127,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--paged", action="store_true",
+                    help="run the paged-KV sweep (page_size x slots at "
+                         "fixed simulated HBM)")
+    ap.add_argument("--paged-requests", type=int, default=12)
+    ap.add_argument("--paged-rate", type=float, default=1.5)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     # fixed-trace knobs serve_arch reads beyond the CLI ones above
@@ -65,6 +143,10 @@ def main():
     args.top_k = 0
     args.top_p = 1.0
     args.stream = False
+    args.page_size = 16
+    args.pool_pages = None
+    run_paged = args.paged
+    args.paged = False  # the base ARCHS runs stay on the dense engine
 
     payload = {
         "bench": "serve",
@@ -76,6 +158,11 @@ def main():
                   "seed": args.seed},
         "results": {arch: bench_arch(arch, args) for arch in ARCHS},
     }
+    if run_paged:
+        payload["paged"] = bench_paged_sweep(args)
+        print(f"[bench_serve] paged: slot_ratio_best="
+              f"{payload['paged']['slot_ratio_best']} "
+              f"(config {payload['paged']['best_config']})")
     out = pathlib.Path(args.out) if args.out else \
         pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
     out.write_text(json.dumps(payload, indent=2) + "\n")

@@ -1,0 +1,115 @@
+"""Benchmark regression gate: compare a fresh smoke-run BENCH_*.json
+against the committed JSON and fail on >25% regression of the SIMULATED
+metrics. Measured (wall-clock) metrics are host-dependent — CI runners
+vary 2-3x — so they are printed as informational deltas only; the
+simulated metrics are deterministic functions of the trace/model and gate
+hard.
+
+Gated metrics (higher is better):
+  serve: paged.slot_ratio_best           (slots at fixed HBM vs reservation)
+  zebra: gate.speedup                    (simulated overlapped vs serialized)
+
+Usage:
+    python benchmarks/check_regression.py --bench serve \
+        --fresh /tmp/BENCH_serve.json [--committed BENCH_serve.json]
+    python benchmarks/check_regression.py --bench zebra \
+        --fresh /tmp/BENCH_zebra.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# bench -> (committed file, simulated gate keys, informational keys).
+# Keys are dotted paths; higher is better for every gated key.
+BENCHES = {
+    "serve": {
+        "file": "BENCH_serve.json",
+        "simulated": ["paged.slot_ratio_best"],
+        "measured": ["results.qwen3-moe-30b-a3b.tokens_per_s",
+                     "results.llama3.2-3b.tokens_per_s"],
+    },
+    "zebra": {
+        "file": "BENCH_zebra.json",
+        "simulated": ["gate.speedup"],
+        "measured": ["measured.points.1.step_ms",
+                     "measured.points.2.step_ms"],
+    },
+}
+
+
+def lookup(tree, dotted: str):
+    """Resolve a dotted path, longest-key-first so keys containing dots
+    (arch names like "llama3.2-3b") resolve too."""
+    node = tree
+    while dotted:
+        if not isinstance(node, dict):
+            return None
+        for k in sorted(node, key=len, reverse=True):
+            if dotted == k:
+                return node[k]
+            if dotted.startswith(k + "."):
+                node, dotted = node[k], dotted[len(k) + 1:]
+                break
+        else:
+            return None
+    return node
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", choices=sorted(BENCHES), required=True)
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--committed", default=None,
+                    help="baseline JSON (default: the repo-committed one)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional regression (default 0.25)")
+    args = ap.parse_args(argv)
+
+    spec = BENCHES[args.bench]
+    committed_path = pathlib.Path(args.committed) if args.committed \
+        else REPO / spec["file"]
+    fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    committed = json.loads(committed_path.read_text())
+
+    failures = []
+    for key in spec["simulated"]:
+        new, old = lookup(fresh, key), lookup(committed, key)
+        if old is None:
+            print(f"[gate] {args.bench}.{key}: no committed baseline "
+                  f"({committed_path.name}) — recording only, new={new}")
+            continue
+        if new is None:
+            failures.append(f"{key}: missing from fresh run (baseline {old})")
+            continue
+        floor = old * (1.0 - args.threshold)
+        status = "OK" if new >= floor else "REGRESSION"
+        print(f"[gate] {args.bench}.{key}: committed={old} fresh={new} "
+              f"floor={floor:.4f} -> {status}")
+        if new < floor:
+            failures.append(f"{key}: {new} < {floor:.4f} "
+                            f"(committed {old}, -{args.threshold:.0%} floor)")
+
+    for key in spec["measured"]:
+        new, old = lookup(fresh, key), lookup(committed, key)
+        if new is not None and old not in (None, 0):
+            print(f"[info] {args.bench}.{key}: committed={old} fresh={new} "
+                  f"({new / old:.0%} of baseline; informational)")
+
+    if failures:
+        print(f"[gate] FAIL ({args.bench}):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"[gate] PASS ({args.bench})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

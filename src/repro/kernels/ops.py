@@ -99,6 +99,99 @@ def _round_up(x: int, m: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Paged decode attention (serving, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def paged_kv_positions(page_table, page_size: int):
+    """Structural key positions of a paged cache view.
+
+    page_table: [B, MP] int32 (-1 = unallocated). Returns [B, MP*page_size]
+    int32: line l of table slot j is position j*page_size + l; lines of
+    unallocated slots are -1 (masked out by `attention_mask`). Positions are
+    NEVER read from the pool — stale lines in recycled pages carry arbitrary
+    stored positions, but their structural position exceeds the new owner's
+    causal frontier, which is what keeps them unreachable (§9.2).
+    """
+    B, MP = page_table.shape
+    pos = (jnp.arange(MP, dtype=jnp.int32)[:, None] * page_size
+           + jnp.arange(page_size, dtype=jnp.int32)[None, :])  # [MP, ps]
+    pos = jnp.broadcast_to(pos[None], (B, MP, page_size))
+    return jnp.where(page_table[:, :, None] >= 0, pos, -1).reshape(B, -1)
+
+
+def paged_gather_kv(k_pool, v_pool, page_table):
+    """Gather a per-slot contiguous KV view from the paged pool.
+
+    k_pool/v_pool: [P, page_size, KH, hd]; page_table: [B, MP].
+    Returns (k [B, MP*ps, KH, hd], v, kv_pos [B, MP*ps]) — the XLA fallback
+    view consumed by the masked reference attention; the Pallas kernel
+    reads the same pages block-by-block without materializing it.
+    """
+    B, MP = page_table.shape
+    ps, KH, hd = k_pool.shape[1], k_pool.shape[2], k_pool.shape[3]
+    ptc = jnp.maximum(page_table, 0)
+    k = jnp.take(k_pool, ptc, axis=0).reshape(B, MP * ps, KH, hd)
+    v = jnp.take(v_pool, ptc, axis=0).reshape(B, MP * ps, KH, hd)
+    return k, v, paged_kv_positions(page_table, ps)
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, q_pos, *,
+                           scale: float | None = None, softcap: float = 0.0,
+                           window: int = 0, use_kernel: bool | None = None,
+                           interpret: bool | None = None):
+    """Single-token decode attention over the paged KV pool.
+
+    q: [B, H, hd] (one query per slot); k_pool/v_pool: [P, ps, KH, hd];
+    page_table: [B, MP] int32; q_pos: [B] int32 (current write position of
+    each slot; < 0 = dead slot, output row is zeros). Returns [B, H, hd].
+
+    use_kernel=None picks the Pallas kernel on TPU and the XLA
+    gather-then-mask fallback elsewhere (interpret-mode Pallas stays a test
+    vehicle, forced via use_kernel=True off-TPU).
+    """
+    B, H, hd = q.shape
+    KH = k_pool.shape[2]
+    G = H // KH
+    scale = hd ** -0.5 if scale is None else scale
+    use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
+
+    if not use_kernel:
+        k, v, kv_pos = paged_gather_kv(k_pool, v_pool, page_table)
+        qf = q.reshape(B, KH, G, hd).astype(jnp.float32)
+        s = jnp.einsum("bkgh,btkh->bkgt", qf, k.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+        if window > 0:
+            mask &= (q_pos[:, None] - kv_pos) < window
+        s = jnp.where(mask[:, None, None, :], s,
+                      -0.7 * float(jnp.finfo(jnp.float32).max))
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgt,btkh->bkgh", p.astype(q.dtype), v)
+        out = jnp.where((q_pos >= 0)[:, None, None, None], out, 0)
+        return out.reshape(B, H, hd)
+
+    from repro.kernels import paged_attention as pa
+    interpret = _interpret_default() if interpret is None else interpret
+    # Pad the GQA group to a sublane multiple and head_dim to the lane width.
+    Gp = _round_up(G, 8)
+    hdp = _round_up(hd, 128)
+    qk = q.reshape(B, KH, G, hd)
+    if Gp != G:
+        qk = jnp.pad(qk, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    if hdp != hd:
+        qk = jnp.pad(qk, ((0, 0), (0, 0), (0, 0), (0, hdp - hd)))
+        k_pool = jnp.pad(k_pool, ((0, 0), (0, 0), (0, 0), (0, hdp - hd)))
+        v_pool = jnp.pad(v_pool, ((0, 0), (0, 0), (0, 0), (0, hdp - hd)))
+    out = pa.paged_decode_forward(qk, k_pool, v_pool, page_table, q_pos,
+                                  scale=scale, softcap=softcap,
+                                  window=window, interpret=interpret)
+    out = out[:, :, :G, :hd].reshape(B, H, hd)
+    return jnp.where((q_pos >= 0)[:, None, None], out, 0)
+
+
+# ---------------------------------------------------------------------------
 # Grouped matmul (MoE experts)
 # ---------------------------------------------------------------------------
 

@@ -1,11 +1,20 @@
 """Continuous-batching serving driver: Poisson arrivals, chunked prefill,
 per-slot sampled decode, streaming per-request output (DESIGN.md §7).
+``--paged`` switches the engine to paged KV-cache mode (DESIGN.md §9):
+block-granular pool admission, page-table decode, preemption on pool OOM.
 
     # MoE + dense smoke archs through a mixed-length Poisson trace:
     PYTHONPATH=src python -m repro.launch.serve --smoke --mesh 1x1
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
         --smoke --slots 4 --requests 8 --prompt-len 64 --gen 32 --mesh 1x2
+
+    # paged smoke with an overcommitted pool (preemption exercised):
+    PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
+        --page-size 16 --pool-pages 12
+
+Exit status: non-zero when any request is rejected, dropped, or left
+unfinished — the CI serve-smoke step gates on it.
 """
 
 from __future__ import annotations
@@ -22,8 +31,9 @@ from repro.launch.mesh import make_mesh
 from repro.models import registry, stack
 from repro.models.modules import Policy, RunConfig
 from repro.pytree import split_params
-from repro.serve import (ContinuousBatchingEngine, Request, SamplingParams,
-                         Scheduler, ServeMetrics, make_continuous_program)
+from repro.serve import (BlockAllocator, ContinuousBatchingEngine, Request,
+                         SamplingParams, Scheduler, ServeMetrics,
+                         make_continuous_program)
 
 SMOKE_ARCHS = ("qwen3-moe-30b-a3b", "llama3.2-3b")  # MoE + dense
 
@@ -82,7 +92,8 @@ def serve_arch_lockstep(cfg, mesh, run, args) -> dict:
     tps = round(args.slots * args.gen / dt, 2)
     print(f"[serve] arch={cfg.name} lockstep fallback generated "
           f"{toks.shape} in {dt:.2f}s ({tps} tok/s)")
-    return {"tokens_per_s": tps, "lockstep": True}
+    return {"tokens_per_s": tps, "lockstep": True,
+            "ok": toks.shape == (args.slots, args.gen)}
 
 
 def serve_arch(arch: str, args) -> dict:
@@ -95,8 +106,12 @@ def serve_arch(arch: str, args) -> dict:
     if cfg.is_encdec or cfg.vision_seq > 0:
         return serve_arch_lockstep(cfg, mesh, run, args)
     max_len = args.prompt_len + args.gen
+    paged_kw = {}
+    if args.paged:
+        paged_kw = dict(page_size=args.page_size, n_pages=args.pool_pages)
     program = make_continuous_program(cfg, mesh, run, n_slots=args.slots,
-                                      max_len=max_len, seed=args.seed)
+                                      max_len=max_len, seed=args.seed,
+                                      **paged_kw)
 
     key = jax.random.PRNGKey(0)
     with mesh:
@@ -108,8 +123,12 @@ def serve_arch(arch: str, args) -> dict:
                               top_k=args.top_k, top_p=args.top_p)
     trace = build_trace(args.seed, args.requests, args.rate,
                         args.prompt_len, args.gen, cfg.vocab_size, sampling)
+    allocator = None
+    if args.paged:
+        allocator = BlockAllocator(program.n_pages, program.page_size,
+                                   program.max_pages)
     sched = Scheduler(args.slots, max_len, prefill_chunk=args.prefill_chunk,
-                      token_budget=args.prefill_budget)
+                      token_budget=args.prefill_budget, allocator=allocator)
     metrics = ServeMetrics()
     stream = None
     if args.stream:
@@ -123,7 +142,11 @@ def serve_arch(arch: str, args) -> dict:
     dt = time.perf_counter() - t0
 
     for req in trace:
-        tr = metrics.requests[req.rid]
+        tr = metrics.requests.get(req.rid)
+        if tr is None:  # rejected at submit — never entered the engine
+            print(f"[{cfg.name}] rid={req.rid} prompt={len(req.prompt)} "
+                  f"REJECTED")
+            continue
         toks = results[req.rid]
         print(f"[{cfg.name}] rid={req.rid} prompt={len(req.prompt)} "
               f"gen={len(toks)}/{req.max_new_tokens} "
@@ -136,6 +159,25 @@ def serve_arch(arch: str, args) -> dict:
           f"itl p50 {s['itl_s']['p50']:.4f}s, "
           f"queue depth max {s['queue_depth']['max']}, "
           f"max concurrent {s['max_concurrent_active']})")
+    if args.paged:
+        s["paged"] = eng_occ = engine.page_occupancy()
+        print(f"[serve] arch={cfg.name} paged: page_size={args.page_size} "
+              f"pool={program.n_pages} peak={eng_occ['page_peak']} "
+              f"preempted={eng_occ['n_preempted']}")
+    # Gate: every traced request must finish with its full token budget
+    # spent (traces carry no EOS) and nothing may be rejected or dropped.
+    # Rejected rids never reach metrics (submit raises before on_submit);
+    # they count as unfinished here AND appear in engine.rejected.
+    unfinished = [r.rid for r in trace
+                  if metrics.requests.get(r.rid) is None
+                  or metrics.requests[r.rid].finish_tick is None
+                  or len(results.get(r.rid, [])) != r.max_new_tokens]
+    s["ok"] = not engine.rejected and not unfinished \
+        and s["n_requests"] == len(trace)
+    if not s["ok"]:
+        print(f"[serve] FAIL arch={cfg.name}: rejected={engine.rejected} "
+              f"unfinished={unfinished} finished={s['n_requests']}"
+              f"/{len(trace)}", file=sys.stderr)
     return s
 
 
@@ -164,12 +206,27 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (block allocator + page-table "
+                         "decode, DESIGN.md §9)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache lines per page (paged mode)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical pool size in pages (default: full "
+                         "reservation capacity; smaller values overcommit "
+                         "and exercise preemption)")
     args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else \
         (list(SMOKE_ARCHS) if args.smoke else ["llama3.2-3b"])
+    failed = []
     for arch in archs:
-        serve_arch(arch, args)
+        s = serve_arch(arch, args)
+        if not s.get("ok", True):
+            failed.append(arch)
+    if failed:
+        print(f"[serve] FAILED archs: {failed}", file=sys.stderr)
+        return 1
     return 0
 
 

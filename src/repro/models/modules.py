@@ -305,24 +305,9 @@ def _attention_inner(q, k, v, cfg: ModelConfig, run: RunConfig, *,
     return ref_attention(q, k, v, mask, scale, softcap, run.policy)
 
 
-def apply_attention(params, cfg: ModelConfig, run: RunConfig, x, positions,
-                    *, causal: bool, window: int = 0, kv=None, kv_positions=None,
-                    cache=None, cache_index=None, rope: bool = True,
-                    attend_to_cache: bool = False):
-    """Full/local/cross attention with optional KV cache (decode).
-
-    x: [B, S, d]; positions: [B, S].
-    kv: cross-attention memory [B, T, d] (rope disabled for cross).
-    cache: dict(k=[B, C, KH, hd], v=..., pos=[B, C]) -> returns updated cache.
-    cache_index: scalar (lockstep decode / prefill offset) or per-slot [B]
-        vector (continuous batching, DESIGN.md §7.2): row b writes its own
-        cache line at cache_index[b]; rows with negative positions write
-        nothing, so dead slots never touch their cache.
-    attend_to_cache: with S > 1, attend over the full (just-updated) cache
-        instead of assuming it empty — chunked prefill, where earlier
-        chunks' keys live in the cache. Unwritten lines (pos == -1) are
-        masked out.
-    """
+def _project_qkv(params, cfg: ModelConfig, run: RunConfig, x, positions,
+                 kv=None, kv_positions=None, rope: bool = True):
+    """Shared q/k/v projection + qk-norm + rope. Returns (q, k, v, kv_pos)."""
     B, S, _ = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     pol = run.policy
@@ -343,6 +328,116 @@ def apply_attention(params, cfg: ModelConfig, run: RunConfig, x, positions,
     if rope and cfg.rope_theta > 0 and kv is None:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, kv_pos, cfg.rope_theta)
+    return q, k, v, kv_pos
+
+
+def _apply_attention_paged(params, cfg: ModelConfig, run: RunConfig, x,
+                           positions, *, causal: bool, window: int, cache,
+                           cache_index, rope: bool, page_table):
+    """Paged-cache attention (DESIGN.md §9): scatter this step's K/V through
+    the page table into the shared pool, then attend over the slot's pages.
+
+    cache: k/v [P, ps, KH, hd] + pos [P, ps] — the POOL, no batch dim.
+    Vector ``cache_index`` = per-slot decode (S == 1); scalar = chunked
+    prefill at batch 1 writing lines [offset, offset + S). Key positions
+    are computed structurally from the table (never read back from the
+    pool), so stale lines of recycled pages sit beyond the new owner's
+    causal frontier and are unreachable (§9.2).
+    """
+    B, S, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cd = run.policy.compute_dtype
+    q, k, v, _ = _project_qkv(params, cfg, run, x, positions, rope=rope)
+
+    P, ps = cache["k"].shape[0], cache["k"].shape[1]
+    MP = page_table.shape[1]
+    ptype = cache["pos"].dtype
+    if jnp.ndim(cache_index) == 1:
+        # Per-slot decode: row b writes line cache_index[b] of its own page
+        # run. Dead slots (index < 0) and unallocated table slots map to
+        # the out-of-bounds sentinel P and are dropped.
+        p = cache_index
+        pslot = jnp.minimum(jnp.maximum(p, 0) // ps, MP - 1)
+        page = jnp.take_along_axis(page_table, pslot[:, None], axis=1,
+                                   mode="clip")[:, 0]
+        page = jnp.where((p >= 0) & (page >= 0), page, P)
+        line = jnp.where(p >= 0, p % ps, 0)
+        ck = cache["k"].at[page, line].set(k[:, 0], mode="drop")
+        cv = cache["v"].at[page, line].set(v[:, 0], mode="drop")
+        cpos = cache["pos"].at[page, line].set(
+            positions[:, 0].astype(ptype), mode="drop")
+    else:
+        # Chunked prefill at batch 1: per-position scatter through the
+        # single request's table (pages need not be physically contiguous).
+        lines = cache_index + jnp.arange(S, dtype=jnp.int32)
+        pslot = jnp.minimum(lines // ps, MP - 1)
+        page = jnp.take(page_table[0], pslot, mode="clip")
+        page = jnp.where(page >= 0, page, P)
+        ck = cache["k"].at[page, lines % ps].set(k[0], mode="drop")
+        cv = cache["v"].at[page, lines % ps].set(v[0], mode="drop")
+        cpos = cache["pos"].at[page, lines % ps].set(
+            positions[0].astype(ptype), mode="drop")
+    new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    from repro.kernels import ops as kops  # lazy: avoid cycles
+    scale = hd ** -0.5
+    softcap = cfg.attn_logit_softcap
+    if S == 1 and causal and (run.use_gmm_kernel
+                              or jax.default_backend() == "tpu"):
+        # Block-gathered flash decode over the pool (XLA gather fallback
+        # is the use_kernel=False branch inside ops).
+        out = kops.paged_decode_attention(
+            q[:, 0], ck, cv, page_table, positions[:, 0], scale=scale,
+            softcap=softcap, window=window,
+            use_kernel=True if run.use_gmm_kernel else None)[:, None]
+    else:
+        kg, vg, kv_pos = kops.paged_gather_kv(ck, cv, page_table)
+        out = _attention_inner(q, kg, vg, cfg, run, positions=positions,
+                               kv_pos=kv_pos, causal=causal, window=window,
+                               structural=False)
+    out = run.constrain(out, ("batch", None, "q_heads", None))
+    y = out.reshape(B, S, h * hd) @ params["wo"].astype(cd)
+    y = run.constrain(y, ("batch", None, None))
+    return y, new_cache
+
+
+def apply_attention(params, cfg: ModelConfig, run: RunConfig, x, positions,
+                    *, causal: bool, window: int = 0, kv=None, kv_positions=None,
+                    cache=None, cache_index=None, rope: bool = True,
+                    attend_to_cache: bool = False, page_table=None):
+    """Full/local/cross attention with optional KV cache (decode).
+
+    x: [B, S, d]; positions: [B, S].
+    kv: cross-attention memory [B, T, d] (rope disabled for cross).
+    cache: dict(k=[B, C, KH, hd], v=..., pos=[B, C]) -> returns updated cache.
+    cache_index: scalar (lockstep decode / prefill offset) or per-slot [B]
+        vector (continuous batching, DESIGN.md §7.2): row b writes its own
+        cache line at cache_index[b]; rows with negative positions write
+        nothing, so dead slots never touch their cache.
+    attend_to_cache: with S > 1, attend over the full (just-updated) cache
+        instead of assuming it empty — chunked prefill, where earlier
+        chunks' keys live in the cache. Unwritten lines (pos == -1) are
+        masked out.
+    page_table: [B, max_pages] int32 — paged-cache mode (DESIGN.md §9):
+        ``cache`` holds the SHARED physical pool (k/v [P, ps, KH, hd],
+        pos [P, ps]) and row b's cache line p lives at line p % ps of pool
+        page page_table[b, p // ps]. Writes scatter through the table
+        (negative positions / unallocated slots drop); attention gathers
+        the slot's pages with structurally computed key positions, so
+        recycled pages' stale lines stay unreachable. Sliding-window
+        layers use the same linear paged layout with the window enforced
+        by masking (no ring arithmetic).
+    """
+    if page_table is not None and cache is not None:
+        return _apply_attention_paged(
+            params, cfg, run, x, positions, causal=causal, window=window,
+            cache=cache, cache_index=cache_index, rope=rope,
+            page_table=page_table)
+    B, S, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = run.policy.compute_dtype
+    q, k, v, kv_pos = _project_qkv(params, cfg, run, x, positions, kv,
+                                   kv_positions, rope)
 
     new_cache = None
     structural = cache is None
@@ -414,6 +509,20 @@ def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
         "k": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
         "pos": jnp.full((batch, C), -1, jnp.int32),
+    }
+
+
+def init_paged_attention_cache(cfg: ModelConfig, n_pages: int,
+                               page_size: int, dtype):
+    """Shared physical KV pool for ONE attention layer (DESIGN.md §9): no
+    batch dim — slots own disjoint page subsets through their page tables.
+    Sliding-window layers share the layout (window enforced by masking)."""
+    return {
+        "k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "pos": jnp.full((n_pages, page_size), -1, jnp.int32),
     }
 
 
@@ -773,7 +882,7 @@ def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
 def apply_mixer_part(params, cfg: ModelConfig, run: RunConfig, spec: LayerSpec,
                      x, positions, state=None, encoder_out=None,
                      encoder_positions=None, cache_index=None,
-                     attend_to_cache: bool = False):
+                     attend_to_cache: bool = False, page_table=None):
     """Pre-norm mixer + residual (+ cross-attn). Returns (h, new_state)."""
     new_state = dict(state) if state is not None else None
     h = x
@@ -786,7 +895,7 @@ def apply_mixer_part(params, cfg: ModelConfig, run: RunConfig, spec: LayerSpec,
             att, new_kv = apply_attention(
                 params["mixer"], cfg, run, u, positions, causal=causal,
                 window=window, cache=cache, cache_index=cache_index,
-                attend_to_cache=attend_to_cache)
+                attend_to_cache=attend_to_cache, page_table=page_table)
             if new_state is not None:
                 new_state["kv"] = new_kv
             mixed = att
@@ -834,11 +943,12 @@ def apply_layer(params, cfg: ModelConfig, run: RunConfig, spec: LayerSpec,
                 x, positions, state=None, encoder_out=None,
                 encoder_positions=None, cache_index=None,
                 moe_override: Optional[Callable] = None,
-                attend_to_cache: bool = False):
+                attend_to_cache: bool = False, page_table=None):
     h, new_state = apply_mixer_part(
         params, cfg, run, spec, x, positions, state=state,
         encoder_out=encoder_out, encoder_positions=encoder_positions,
-        cache_index=cache_index, attend_to_cache=attend_to_cache)
+        cache_index=cache_index, attend_to_cache=attend_to_cache,
+        page_table=page_table)
     y, aux = apply_ffn_part(params, cfg, run, spec, h,
                             moe_override=moe_override)
     return y, new_state, aux
@@ -851,6 +961,22 @@ def init_layer_state(cfg: ModelConfig, spec: LayerSpec, batch: int,
     if spec.mixer in ("attn", "local_attn"):
         window = cfg.window if spec.mixer == "local_attn" else 0
         state["kv"] = init_attention_cache(cfg, batch, max_len, window, dtype)
+    elif spec.mixer == "rglru":
+        state["rglru"] = init_rglru_state(cfg, batch, dtype)
+    elif spec.mixer == "ssd":
+        state["ssd"] = init_ssd_state(cfg, batch, dtype)
+    return state
+
+
+def init_paged_layer_state(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                           n_pages: int, page_size: int, dtype):
+    """Paged decode-state pytree for one layer (DESIGN.md §9): attention KV
+    becomes the SHARED pool (no batch dim); recurrent states stay per-slot
+    (they are O(d) per slot — paging buys nothing there)."""
+    state = {}
+    if spec.mixer in ("attn", "local_attn"):
+        state["kv"] = init_paged_attention_cache(cfg, n_pages, page_size,
+                                                 dtype)
     elif spec.mixer == "rglru":
         state["rglru"] = init_rglru_state(cfg, batch, dtype)
     elif spec.mixer == "ssd":

@@ -97,7 +97,7 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
                  encoder_out=None, encoder_positions=None, cache_index=None,
                  layer_override: Optional[Callable] = None,
                  moe_override: Optional[Callable] = None,
-                 attend_to_cache: bool = False):
+                 attend_to_cache: bool = False, page_table=None):
     """Run the scanned pattern stack + tail. Returns (x, new_states, aux)."""
     aux = _zero_aux()
     decode = states is not None
@@ -121,7 +121,7 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
                     encoder_out=encoder_out,
                     encoder_positions=encoder_positions,
                     cache_index=cache_index, moe_override=moe_override,
-                    attend_to_cache=attend_to_cache)
+                    attend_to_cache=attend_to_cache, page_table=page_table)
             x = y
             a = _acc_aux(a, laux)
             if decode:
@@ -168,7 +168,8 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
         x, ns, a = one_block_single(tp, cfg, run, spec, x, positions, st,
                                     encoder_out, encoder_positions,
                                     cache_index, layer_override, decode,
-                                    moe_override, attend_to_cache)
+                                    moe_override, attend_to_cache,
+                                    page_table)
         aux = _acc_aux(aux, a)
         new_tail_states.append(ns)
 
@@ -180,7 +181,8 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
 
 def one_block_single(p, cfg, run, spec, x, positions, st, encoder_out,
                      encoder_positions, cache_index, layer_override, decode,
-                     moe_override=None, attend_to_cache=False):
+                     moe_override=None, attend_to_cache=False,
+                     page_table=None):
     if layer_override is not None and spec.ffn == "moe" and not decode:
         y, laux = layer_override(p, spec, x, positions)
         return y, None, laux
@@ -189,7 +191,8 @@ def one_block_single(p, cfg, run, spec, x, positions, st, encoder_out,
                                encoder_positions=encoder_positions,
                                cache_index=cache_index,
                                moe_override=moe_override,
-                               attend_to_cache=attend_to_cache)
+                               attend_to_cache=attend_to_cache,
+                               page_table=page_table)
 
 
 def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
@@ -198,7 +201,7 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
                 layer_override: Optional[Callable] = None,
                 moe_override: Optional[Callable] = None,
                 return_hidden: bool = False,
-                attend_to_cache: bool = False):
+                attend_to_cache: bool = False, page_table=None):
     """Forward pass.
 
     tokens: [B, S] int32.
@@ -208,6 +211,9 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
         (continuous batching — each sequence at its own position).
     attend_to_cache: S > 1 prefill attends over the existing cache instead
         of assuming it empty (chunked prefill, DESIGN.md §7).
+    page_table: [B, max_pages] int32 — paged-KV mode (DESIGN.md §9); the
+        decode_state must come from init_paged_decode_state. Shared by
+        every attention layer (one table, per-layer physical pools).
     encoder_embeds: [B, T_enc, d] stub audio-frontend output (whisper).
     vision_embeds: [B, vision_seq, vision_dim] stub patch embeddings (VLM).
 
@@ -263,7 +269,8 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
         states=decode_state, tail_states=tail_states,
         encoder_out=encoder_out, encoder_positions=encoder_positions,
         cache_index=cache_index, layer_override=layer_override,
-        moe_override=moe_override, attend_to_cache=attend_to_cache)
+        moe_override=moe_override, attend_to_cache=attend_to_cache,
+        page_table=page_table)
 
     x = modules.apply_norm(params["final_norm"], x, pol)
     if return_hidden:
@@ -296,3 +303,66 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype):
                                                dtype)
                       for spec in cfg.tail_specs]
     return state
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int, n_pages: int,
+                            page_size: int, dtype):
+    """Paged decode state (DESIGN.md §9): per-layer KV pools of ``n_pages``
+    shared physical pages (no batch dim) + per-slot recurrent states, in
+    the same scan-stacked layout as :func:`init_decode_state`."""
+    def stacked(spec):
+        one = modules.init_paged_layer_state(cfg, spec, batch, n_pages,
+                                             page_size, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_pattern_repeats,) + x.shape),
+            one)
+
+    state = {}
+    if cfg.n_pattern_repeats > 0:
+        state["blocks"] = {f"pos{p}": stacked(spec)
+                           for p, spec in enumerate(cfg.pattern)}
+    else:
+        state["blocks"] = None
+    state["tails"] = [modules.init_paged_layer_state(cfg, spec, batch,
+                                                     n_pages, page_size,
+                                                     dtype)
+                      for spec in cfg.tail_specs]
+    return state
+
+
+# -- paged-state tree surgery (engine helpers, DESIGN.md §9.4) --------------
+#
+# The paged engine splits a decode-state tree into its pooled-KV part
+# (shared pages, written by prefill AND decode) and its per-slot recurrent
+# part (batch-indexed, inserted on admission like the dense engine). The
+# layer dicts are keyed "kv" / "rglru" / "ssd", so the split is a key
+# partition applied layer-wise.
+
+def map_layer_states(state, fn):
+    """Apply ``fn`` to every per-layer state dict of a decode-state tree."""
+    out = {"blocks": None, "tails": [fn(s) for s in state["tails"]]}
+    if state["blocks"] is not None:
+        out["blocks"] = {k: fn(v) for k, v in state["blocks"].items()}
+    return out
+
+
+def split_kv_state(state):
+    """(kv_tree, rec_tree): pooled attention caches vs per-slot recurrent
+    states. Both keep the full blocks/tails skeleton (layers without the
+    respective part hold empty dicts) so jit signatures stay stable."""
+    kv = map_layer_states(
+        state, lambda d: {k: v for k, v in d.items() if k == "kv"})
+    rec = map_layer_states(
+        state, lambda d: {k: v for k, v in d.items() if k != "kv"})
+    return kv, rec
+
+
+def merge_kv_state(kv_tree, rec_tree):
+    """Inverse of :func:`split_kv_state` (layer-wise dict union)."""
+    out = {"blocks": None,
+           "tails": [{**a, **b} for a, b in zip(kv_tree["tails"],
+                                                rec_tree["tails"])]}
+    if kv_tree["blocks"] is not None:
+        out["blocks"] = {k: {**kv_tree["blocks"][k], **rec_tree["blocks"][k]}
+                         for k in kv_tree["blocks"]}
+    return out

@@ -34,6 +34,36 @@ from repro.sharding.rules import (ShardingRules, rules_for,
 from repro.train.step import abstract_params, fit_batch_axes
 
 
+def _state_spec_for(cfg: ModelConfig, mesh: Mesh, b, kv_bodies):
+    """Shared decode-state leaf-spec mapper.
+
+    Recurrent leaves (conv/lru/ssm) have ONE mapping — batch over "data",
+    channel/head dims over "model" — used by both the dense and the paged
+    state trees; only the attention-cache leaves (k/v/pos) differ, so the
+    caller passes their bodies via ``kv_bodies(tail)`` (per-slot dense
+    caches vs shared paged pools). ``b`` is the fitted batch-axis tuple.
+    """
+    from repro.sharding.rules import fit_spec
+    mdl = "model"
+
+    def spec_for(name: str, leaf) -> P:
+        stacked = leaf.ndim and leaf.shape[0] == cfg.n_pattern_repeats \
+            and cfg.n_pattern_repeats > 1
+        lead = (None,) if stacked else ()
+        tail = name.rsplit("/", 1)[-1]
+        if tail in ("k", "v", "pos"):
+            body = (*lead, *kv_bodies(tail, leaf.ndim - len(lead)))
+        else:
+            body = {
+                "conv": (*lead, b, None, mdl),
+                "lru": (*lead, b, mdl),
+                "ssm": (*lead, b, mdl, None, None),
+            }.get(tail, (*lead, *([None] * (leaf.ndim - len(lead)))))
+        return fit_spec(leaf.shape, mesh, body)
+
+    return spec_for
+
+
 def decode_state_specs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
                        batch: int, max_len: int, dtype=jnp.bfloat16):
     """PartitionSpecs for the decode-state tree (by leaf role).
@@ -42,27 +72,12 @@ def decode_state_specs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
     kv-head counts rarely divide the TP axis, sequence always does at these
     lengths) plus batch over "data"; recurrent states shard their channel /
     head dims over "model"."""
-    from repro.sharding.rules import fit_spec
     baxes = fit_batch_axes(batch, mesh, rules.batch_axes)
     b = baxes if baxes else None
     mdl = "model"
-
-    def spec_for(name: str, leaf) -> P:
-        stacked = leaf.ndim and leaf.shape[0] == cfg.n_pattern_repeats \
-            and cfg.n_pattern_repeats > 1
-        lead = (None,) if stacked else ()
-        tail = name.rsplit("/", 1)[-1]
-        body = {
-            "k": (*lead, b, mdl, None, None),
-            "v": (*lead, b, mdl, None, None),
-            "pos": (*lead, b, mdl),
-            "conv": (*lead, b, None, mdl),
-            "lru": (*lead, b, mdl),
-            "ssm": (*lead, b, mdl, None, None),
-        }.get(tail)
-        if body is None:
-            body = (*lead, *([None] * (leaf.ndim - len(lead))))
-        return fit_spec(leaf.shape, mesh, body)
+    kv = {"k": (b, mdl, None, None), "v": (b, mdl, None, None),
+          "pos": (b, mdl)}
+    spec_for = _state_spec_for(cfg, mesh, b, lambda tail, nd: kv[tail])
 
     state_shapes = jax.eval_shape(
         lambda: stack.init_decode_state(cfg, batch, max_len, dtype))
@@ -197,7 +212,23 @@ class BatchedServer:
 
 @dataclasses.dataclass
 class ContinuousProgram:
-    """Compiled pieces of the continuous-batching engine."""
+    """Compiled pieces of the continuous-batching engine.
+
+    Two builds share this container (DESIGN.md §7 / §9):
+
+    * dense (``paged=False``): per-slot contiguous KV reservations; prefill
+      runs on a separate batch-1 state inserted wholesale on admission.
+    * paged (``paged=True``): KV lives in shared physical pools addressed
+      through per-slot page tables; prefill writes its pages DIRECTLY into
+      the pool (pages are disjoint from live slots'), so the insert step
+      copies only the batch-1 recurrent carry and slot recycling is a
+      host-side page-table reset. Step signatures:
+        prefill_step(params, state, prec, tokens[1,c], offset, ptrow[1,MP])
+            -> (state, prec, last_logits)
+        insert_step(state, prec, slot) -> state
+        decode_step(params, state, tok, pos, ptabs[B,MP], active, rids,
+                    ngen, temp, topk, topp) -> (state, next, last_logits)
+    """
 
     cfg: ModelConfig
     run: RunConfig
@@ -215,12 +246,49 @@ class ContinuousProgram:
     init_pstate: Callable    # () -> batch-1 prefill decode state
     param_shardings: object
     state_shardings: object
+    paged: bool = False
+    page_size: int = 0
+    n_pages: int = 0
+    max_pages: int = 0       # page-table slots per request
+    init_prec: Callable = None  # () -> batch-1 prefill recurrent carry
+
+
+def paged_state_specs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
+                      batch: int, n_pages: int, page_size: int,
+                      dtype=jnp.bfloat16):
+    """PartitionSpecs for the PAGED decode-state tree (DESIGN.md §9).
+
+    KV pools shard their page dim over "model" (`paged_pool_spec` — the
+    paged analogue of the dense cache sharding its sequence dim there);
+    per-slot recurrent states keep the dense layout (batch over "data",
+    channels over "model") via the shared `_state_spec_for` mapper."""
+    from repro.sharding.rules import paged_pool_spec
+    baxes = fit_batch_axes(batch, mesh, rules.batch_axes)
+    b = baxes if baxes else None
+    spec_for = _state_spec_for(
+        cfg, mesh, b,
+        lambda tail, nd: paged_pool_spec(n_pages, mesh, rules, ndim=nd))
+
+    state_shapes = jax.eval_shape(
+        lambda: stack.init_paged_decode_state(cfg, batch, n_pages,
+                                              page_size, dtype))
+    from repro.pytree import tree_map_with_path_names
+    return state_shapes, tree_map_with_path_names(spec_for, state_shapes)
 
 
 def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
-                            n_slots: int, max_len: int,
-                            seed: int = 0) -> ContinuousProgram:
+                            n_slots: int, max_len: int, seed: int = 0,
+                            page_size: int | None = None,
+                            n_pages: int | None = None) -> ContinuousProgram:
     """Build the jit'd steps of the continuous-batching engine.
+
+    ``page_size`` switches on the paged-KV build (DESIGN.md §9): KV moves
+    into shared ``[n_pages, page_size, ...]`` pools addressed through
+    per-slot page tables, prefill writes its allocated pages directly into
+    the pool, and admission copies only the recurrent carry. ``n_pages``
+    defaults to full reservation capacity (n_slots x pages-per-sequence);
+    benchmarks pass smaller pools to measure paging's slot lift at fixed
+    HBM (bench_serve.py --paged).
 
     Decode carries a per-slot position vector ``pos [B]`` (the next cache
     line of each slot; -1 for dead slots, whose cache writes are dropped
@@ -238,6 +306,10 @@ def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
     """
     assert not cfg.is_encdec and cfg.vision_seq == 0, \
         "continuous batching supports decoder-only LMs"
+    if page_size is not None:
+        return _make_paged_program(cfg, mesh, run, n_slots=n_slots,
+                                   max_len=max_len, seed=seed,
+                                   page_size=page_size, n_pages=n_pages)
     rules = rules_for(cfg, mesh, variant="serve")
     B = n_slots
     from repro.sharding.rules import fitted_shardings, make_constrainer
@@ -328,6 +400,129 @@ def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
         param_shardings=psh, state_shardings=ssh)
 
 
+def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
+                        n_slots: int, max_len: int, seed: int,
+                        page_size: int,
+                        n_pages: int | None) -> ContinuousProgram:
+    """Paged-KV build of the continuous program (DESIGN.md §9.4).
+
+    KV never moves at admission or recycling: prefill scatters straight
+    into the request's allocated pool pages (disjoint from every live
+    slot's), the insert step copies only the batch-1 recurrent carry into
+    the slot row, and freeing is the allocator's page-table reset. Decode
+    carries ``pos [B]`` plus page tables ``[B, max_pages]``.
+    """
+    rules = rules_for(cfg, mesh, variant="serve")
+    B = n_slots
+    from repro.sharding.rules import (fitted_shardings, make_constrainer,
+                                      page_table_spec)
+    pshapes, paxes = abstract_params(cfg)
+    psh = fitted_shardings(pshapes, paxes, rules, mesh)
+    dtype = run.policy.compute_dtype
+    max_pages = -(-max_len // page_size)
+    n_pages = n_pages if n_pages is not None else B * max_pages
+    assert n_pages >= max_pages, "pool smaller than one sequence"
+
+    _, sspecs = paged_state_specs(cfg, mesh, rules, B, n_pages, page_size,
+                                  dtype)
+    ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    # Prefill recurrent carry: the non-KV part of a batch-1 dense state
+    # (recurrent shapes are max_len-independent).
+    _, pspecs = decode_state_specs(cfg, mesh, rules, 1, 1, dtype)
+    prec_specs = stack.split_kv_state(pspecs)[1]
+    prec_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), prec_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    baxes = fit_batch_axes(B, mesh, rules.batch_axes)
+    run_b = dataclasses.replace(run, constrain=make_constrainer(
+        dataclasses.replace(rules, batch_axes=baxes), mesh))
+    run_p = dataclasses.replace(run, constrain=make_constrainer(
+        dataclasses.replace(rules, batch_axes=()), mesh))
+    vec_sh = NamedSharding(mesh, slot_vector_spec(B, mesh, rules))
+    ptab_sh = NamedSharding(mesh, page_table_spec(B, mesh, rules))
+    tok_sh = NamedSharding(mesh, P(baxes if baxes else None, None))
+    base_key = jax.random.PRNGKey(seed)
+
+    from repro.models import modules
+
+    def prefill(params, state, prec, tokens, offset, ptrow):
+        """One prompt chunk at batch 1, scattered through the request's
+        page table straight into the shared pools; recurrent layers carry
+        their batch-1 state in ``prec``."""
+        kv_s, rec_s = stack.split_kv_state(state)
+        merged = stack.merge_kv_state(kv_s, prec)
+        hidden, new_merged, _ = stack.apply_model(
+            params, cfg, run_p, tokens, decode_state=merged,
+            cache_index=offset, attend_to_cache=True, return_hidden=True,
+            page_table=ptrow)
+        kv_n, prec_n = stack.split_kv_state(new_merged)
+        last = modules.apply_unembedding(
+            params["embed"], params.get("lm_head"), cfg, run.policy,
+            hidden[:, -1])
+        return (stack.merge_kv_state(kv_n, rec_s), prec_n,
+                last.astype(jnp.float32))
+
+    def insert(state, prec, slot):
+        """Admission copies ONLY the recurrent carry into the slot row —
+        the KV pages are already in the pool (written by prefill) and are
+        exposed by the host updating the slot's page-table row."""
+        kv_s, rec_s = stack.split_kv_state(state)
+
+        def ins(axis):
+            return lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), slot, axis=axis)
+        new_rec = {"blocks": None, "tails":
+                   jax.tree.map(ins(0), rec_s["tails"], prec["tails"])}
+        if rec_s["blocks"] is not None:
+            new_rec["blocks"] = jax.tree.map(ins(1), rec_s["blocks"],
+                                             prec["blocks"])
+        return stack.merge_kv_state(kv_s, new_rec)
+
+    def decode(params, state, tok, pos, ptabs, active, rids, ngen, temp,
+               topk, topp):
+        logits, state, _ = stack.apply_model(
+            params, cfg, run_b, tok, decode_state=state, cache_index=pos,
+            page_table=ptabs)
+        last = logits[:, -1].astype(jnp.float32)
+        keys = sampling.request_keys(base_key, rids, ngen)
+        nxt = sampling.sample_tokens(last, keys, temp, topk, topp)
+        return state, jnp.where(active, nxt, 0), last
+
+    def sample(logits, rids, ngen, temp, topk, topp):
+        keys = sampling.request_keys(base_key, rids, ngen)
+        return sampling.sample_tokens(logits.astype(jnp.float32), keys,
+                                      temp, topk, topp)
+
+    jit_prefill = jax.jit(prefill,
+                          in_shardings=(psh, ssh, prec_sh, None, None, None),
+                          out_shardings=(ssh, prec_sh, None),
+                          donate_argnums=(1, 2))
+    jit_insert = jax.jit(insert, in_shardings=(ssh, prec_sh, None),
+                         out_shardings=ssh, donate_argnums=(0,))
+    jit_decode = jax.jit(
+        decode,
+        in_shardings=(psh, ssh, tok_sh, vec_sh, ptab_sh) + (vec_sh,) * 6,
+        out_shardings=(ssh, None, None), donate_argnums=(1,))
+
+    return ContinuousProgram(
+        cfg=cfg, run=run, mesh=mesh, n_slots=B, max_len=max_len,
+        prefill_step=jit_prefill, insert_step=jit_insert,
+        decode_step=jit_decode, sample_step=jax.jit(sample),
+        init_state=jax.jit(
+            lambda: stack.init_paged_decode_state(cfg, B, n_pages,
+                                                  page_size, dtype),
+            out_shardings=ssh),
+        init_pstate=None,
+        param_shardings=psh, state_shardings=ssh,
+        paged=True, page_size=page_size, n_pages=n_pages,
+        max_pages=max_pages,
+        init_prec=jax.jit(
+            lambda: stack.split_kv_state(
+                stack.init_decode_state(cfg, 1, 1, dtype))[1],
+            out_shardings=prec_sh))
+
+
 class ContinuousBatchingEngine:
     """Continuous-batching serving loop (DESIGN.md §7).
 
@@ -336,6 +531,12 @@ class ContinuousBatchingEngine:
     by ONE batched decode step over all live slots. Requests finish and
     free their slot on EOS or length limit while other slots keep
     decoding; generated tokens land in ``results[rid]``.
+
+    With a paged program (DESIGN.md §9.4) the scheduler must carry a
+    ``BlockAllocator``; the engine mirrors each slot's page table, claims
+    a page whenever a slot's next write position crosses a page boundary,
+    and relieves pool OOM by preempting the newest running request
+    (``scheduler.preempt_newest``) before the decode step runs.
     """
 
     def __init__(self, program: ContinuousProgram, params,
@@ -354,6 +555,7 @@ class ContinuousBatchingEngine:
         with program.mesh:
             self.state = program.init_state()
         self.pstate = None
+        self.prec = None  # paged mode: batch-1 prefill recurrent carry
         # Host mirrors of the per-slot decode inputs.
         self._tok = np.zeros((B,), np.int32)
         self._pos = np.full((B,), -1, np.int32)
@@ -363,6 +565,17 @@ class ContinuousBatchingEngine:
         self._temp = np.zeros((B,), np.float32)
         self._topk = np.zeros((B,), np.int32)
         self._topp = np.ones((B,), np.float32)
+        if program.paged:
+            alloc = scheduler.allocator
+            assert alloc is not None, "paged program needs an allocator"
+            assert alloc.page_size == program.page_size \
+                and alloc.n_pages == program.n_pages \
+                and alloc.max_pages_per_seq >= program.max_pages, \
+                "allocator geometry disagrees with the program"
+            self._ptab = np.full((B, program.max_pages), -1, np.int32)
+            # page-pool occupancy stats (simulated-HBM benchmark inputs)
+            self.page_peak = 0
+            self._page_ticks: List[tuple] = []  # (pages_in_use, n_active)
 
     @property
     def results(self) -> Dict[int, List[int]]:
@@ -382,66 +595,127 @@ class ContinuousBatchingEngine:
                 break
             self._run_prefill_chunk(chunk)
             budget -= chunk.length
+        if self.p.paged:
+            self._ensure_pages()
         if self._active.any():
             self._decode_once()
         self.metrics.on_tick(self.sched.queue_depth, self.sched.n_active)
+        if self.p.paged:
+            in_use = self.sched.allocator.pages_in_use
+            self.page_peak = max(self.page_peak, in_use)
+            self._page_ticks.append((in_use, self.sched.n_active))
         self.tick_count += 1
 
     def _run_prefill_chunk(self, chunk: PrefillChunk) -> None:
         req = chunk.request
-        if chunk.start == 0:  # fresh request -> fresh prefill cache
-            with self.p.mesh:
-                self.pstate = self.p.init_pstate()
         toks = np.asarray(
-            req.prompt[chunk.start:chunk.start + chunk.length],
+            chunk.tokens[chunk.start:chunk.start + chunk.length],
             np.int32)[None, :]
-        with self.p.mesh:
-            self.pstate, logits = self.p.prefill_step(
-                self.params, self.pstate, toks,
-                jnp.asarray(chunk.start, jnp.int32))
+        if self.p.paged:
+            if chunk.start == 0:  # fresh (or resumed) -> fresh rec carry
+                with self.p.mesh:
+                    self.prec = self.p.init_prec()
+            ptrow = jnp.asarray(self.sched.allocator.table(
+                req.rid, self.p.max_pages))[None, :]
+            with self.p.mesh:
+                self.state, self.prec, logits = self.p.prefill_step(
+                    self.params, self.state, self.prec, toks,
+                    jnp.asarray(chunk.start, jnp.int32), ptrow)
+        else:
+            if chunk.start == 0:  # fresh request -> fresh prefill cache
+                with self.p.mesh:
+                    self.pstate = self.p.init_pstate()
+            with self.p.mesh:
+                self.pstate, logits = self.p.prefill_step(
+                    self.params, self.pstate, toks,
+                    jnp.asarray(chunk.start, jnp.int32))
         if self.sched.finish_prefill_chunk(chunk):
             self._admit(chunk, logits)
 
     def _admit(self, chunk: PrefillChunk, last_logits) -> None:
-        """Sample the first token from the prefill logits and insert the
-        prefilled cache into the freed slot."""
+        """Sample the next token from the prefill logits and insert the
+        prefilled state into the freed slot. For a preemption resume
+        (``chunk.n_done > 0``) the re-prefill replayed prompt + generated
+        tokens, so the sample index continues at ``n_done`` — key(rid, n)
+        makes the continuation token-exact (§7.4)."""
         req, slot = chunk.request, chunk.slot
         sp = req.sampling
         with self.p.mesh:
             first = self.p.sample_step(
                 last_logits, np.asarray([req.rid], np.int32),
-                np.zeros((1,), np.int32),
+                np.asarray([chunk.n_done], np.int32),
                 np.asarray([sp.temperature], np.float32),
                 np.asarray([sp.top_k], np.int32),
                 np.asarray([sp.top_p], np.float32))
-            self.state = self.p.insert_step(self.state, self.pstate,
-                                            jnp.asarray(slot, jnp.int32))
-        self.pstate = None
+            if self.p.paged:
+                self.state = self.p.insert_step(self.state, self.prec,
+                                                jnp.asarray(slot, jnp.int32))
+                self.prec = None
+                self._ptab[slot] = self.sched.allocator.table(
+                    req.rid, self.p.max_pages)
+            else:
+                self.state = self.p.insert_step(self.state, self.pstate,
+                                                jnp.asarray(slot, jnp.int32))
+                self.pstate = None
         first = int(np.asarray(first)[0])
         if self.record_logits:
-            self.logits[req.rid] = [np.asarray(last_logits)[0]]
+            if chunk.n_done == 0:
+                self.logits[req.rid] = [np.asarray(last_logits)[0]]
+            else:
+                self.logits[req.rid].append(np.asarray(last_logits)[0])
         self.metrics.on_token(req.rid, self.tick_count)
         finished = self.sched.activate(chunk, first)
         if self.on_token:
             self.on_token(req.rid, first, finished)
         if finished:
             self.metrics.on_finish(req.rid, self.tick_count)
+            if self.p.paged:
+                self._ptab[slot] = -1
             return
         self._tok[slot] = first
-        self._pos[slot] = len(req.prompt)
+        self._pos[slot] = len(chunk.tokens)
         self._active[slot] = True
         self._rid[slot] = req.rid
-        self._ngen[slot] = 1
+        self._ngen[slot] = chunk.n_done + 1
         self._temp[slot] = sp.temperature
         self._topk[slot] = sp.top_k
         self._topp[slot] = sp.top_p
 
+    def _ensure_pages(self) -> None:
+        """Claim a pool page for every live slot whose next write position
+        has crossed its allocated frontier; on pool OOM, preempt the newest
+        running request (oldest slots are served first so eviction order is
+        newest-first and the loop always converges — down to one live
+        request, which submit() guaranteed fits the pool)."""
+        alloc = self.sched.allocator
+        order = sorted((int(s) for s in np.nonzero(self._active)[0]),
+                       key=lambda s: self.sched.running[s].seq)
+        for slot in order:
+            if not self._active[slot]:
+                continue  # evicted by an earlier slot's OOM relief
+            rid = int(self._rid[slot])
+            while not alloc.covers(rid, int(self._pos[slot])):
+                if alloc.extend(rid):
+                    self._ptab[slot] = alloc.table(rid, self.p.max_pages)
+                    continue
+                victim = self.sched.preempt_newest()
+                assert victim is not None, "OOM with nothing to preempt"
+                self._clear_slot(victim)
+                if victim == slot:
+                    break  # this slot itself was evicted; it will resume
+
     def _decode_once(self) -> None:
         with self.p.mesh:
-            self.state, nxt, logits = self.p.decode_step(
-                self.params, self.state, self._tok[:, None], self._pos,
-                self._active, self._rid, self._ngen, self._temp,
-                self._topk, self._topp)
+            if self.p.paged:
+                self.state, nxt, logits = self.p.decode_step(
+                    self.params, self.state, self._tok[:, None], self._pos,
+                    self._ptab, self._active, self._rid, self._ngen,
+                    self._temp, self._topk, self._topp)
+            else:
+                self.state, nxt, logits = self.p.decode_step(
+                    self.params, self.state, self._tok[:, None], self._pos,
+                    self._active, self._rid, self._ngen, self._temp,
+                    self._topk, self._topp)
         nxt = np.asarray(nxt)
         if self.record_logits:
             logits = np.asarray(logits)
@@ -464,6 +738,9 @@ class ContinuousBatchingEngine:
                 self._ngen[slot] += 1
 
     def _release(self, slot: int) -> None:
+        self._clear_slot(slot)
+
+    def _clear_slot(self, slot: int) -> None:
         self._active[slot] = False
         self._pos[slot] = -1
         self._tok[slot] = 0
@@ -471,6 +748,25 @@ class ContinuousBatchingEngine:
         self._temp[slot] = 0.0
         self._topk[slot] = 0
         self._topp[slot] = 1.0
+        if self.p.paged:
+            self._ptab[slot] = -1
+
+    def page_occupancy(self) -> dict:
+        """Simulated-HBM occupancy stats over the run (paged mode): peak
+        pages in use and the time-averaged cache lines held per active
+        slot — the quantities bench_serve.py --paged turns into the
+        slots-at-fixed-HBM comparison against the reservation engine."""
+        assert self.p.paged
+        ticks = [t for t in self._page_ticks if t[1] > 0]
+        lines = [p * self.p.page_size / a for p, a in ticks]
+        return {
+            "page_size": self.p.page_size,
+            "n_pages": self.p.n_pages,
+            "page_peak": self.page_peak,
+            "mean_lines_per_active_slot":
+                round(sum(lines) / len(lines), 2) if lines else 0.0,
+            "n_preempted": self.sched.n_preempted,
+        }
 
     # -- trace driver -------------------------------------------------------
 

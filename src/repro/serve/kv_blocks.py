@@ -1,0 +1,121 @@
+"""Paged KV-cache block allocator (DESIGN.md §9).
+
+vLLM-style block-granular cache management, host-side only (mirrors the
+scheduler: the allocator decides WHICH physical pages a request owns; the
+engine's jitted steps consume the decision as `[B, max_pages]` page-table
+arrays). The device-side pool is `[n_pages, page_size, ...]` per attention
+layer; a page id indexes the same physical slot in every layer's pool.
+
+Contracts:
+
+* a physical page is owned by AT MOST one live request at a time
+  (``check()`` asserts it; tests drive it every engine tick);
+* freeing is a **page-table reset** — pages return to the free list and
+  the request's table entry is dropped, with no device traffic. Stale KV
+  lines in recycled pages are unreachable because the paged attention
+  paths compute key positions structurally from the page-table slot
+  (line ``j`` of table slot ``p`` is position ``p * page_size + j``) and
+  mask everything beyond the owner's causal frontier (DESIGN.md §9.2);
+* allocation is all-or-nothing: ``allocate``/``extend`` either hand over
+  every requested page or change nothing (no partial grabs to unwind).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache lines."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over ``n_pages`` fixed-size physical pages."""
+
+    def __init__(self, n_pages: int, page_size: int, max_pages_per_seq: int):
+        assert n_pages >= 1 and page_size >= 1 and max_pages_per_seq >= 1
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))  # pop -> 0
+        self.tables: Dict[int, List[int]] = {}  # rid -> owned page ids
+
+    # -- capacity -----------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.page_size)
+
+    def fits_pool(self, n_tokens: int) -> bool:
+        """Whether a request of ``n_tokens`` total lines can EVER be served
+        (worst-case page need within the whole pool and the per-seq table).
+        Checked at submit so preemption can always make progress down to a
+        single live request."""
+        need = self.pages_for(n_tokens)
+        return need <= min(self.n_pages, self.max_pages_per_seq)
+
+    # -- allocation ---------------------------------------------------------
+
+    def allocate(self, rid: int, n_tokens: int) -> bool:
+        """Fresh table for ``rid`` covering ``n_tokens`` lines.
+
+        All-or-nothing: returns False (and allocates nothing) when the free
+        list cannot cover the request. ``rid`` must not already own pages.
+        """
+        assert rid not in self.tables, f"rid {rid} already owns pages"
+        need = self.pages_for(n_tokens)
+        if need > len(self._free) or need > self.max_pages_per_seq:
+            return False
+        self.tables[rid] = [self._free.pop() for _ in range(need)]
+        return True
+
+    def extend(self, rid: int, n_new: int = 1) -> bool:
+        """Append ``n_new`` pages to ``rid``'s table (decode growth)."""
+        table = self.tables[rid]
+        if n_new > len(self._free) \
+                or len(table) + n_new > self.max_pages_per_seq:
+            return False
+        table.extend(self._free.pop() for _ in range(n_new))
+        return True
+
+    def free(self, rid: int) -> None:
+        """Return every page of ``rid`` to the free list (copy-free recycle:
+        the page-table reset IS the recycle)."""
+        self._free.extend(self.tables.pop(rid, ()))
+
+    # -- introspection ------------------------------------------------------
+
+    def covers(self, rid: int, line: int) -> bool:
+        """Whether cache line ``line`` falls inside ``rid``'s owned pages."""
+        return line < len(self.tables.get(rid, ())) * self.page_size
+
+    def n_lines(self, rid: int) -> int:
+        return len(self.tables.get(rid, ())) * self.page_size
+
+    def table(self, rid: int, pad_to: int | None = None) -> np.ndarray:
+        """``rid``'s page table as int32, -1-padded to ``pad_to`` slots."""
+        pages = self.tables.get(rid, [])
+        pad_to = self.max_pages_per_seq if pad_to is None else pad_to
+        out = np.full((pad_to,), -1, np.int32)
+        out[:len(pages)] = pages
+        return out
+
+    def check(self) -> None:
+        """Assert the no-sharing invariant: every physical page appears
+        exactly once across the free list and all live tables."""
+        seen = list(self._free)
+        for rid, pages in self.tables.items():
+            seen.extend(pages)
+        assert len(seen) == self.n_pages, \
+            f"page leak: {len(seen)} tracked of {self.n_pages}"
+        assert len(set(seen)) == self.n_pages, "page owned twice"

@@ -1,4 +1,4 @@
-"""Continuous-batching request scheduler (DESIGN.md §7.1/§7.3).
+"""Continuous-batching request scheduler (DESIGN.md §7.1/§7.3, §9.4).
 
 Host-side bookkeeping only — no jax. The scheduler decides WHAT runs each
 engine tick (which prefill chunk, which slots decode); the engine owns the
@@ -19,6 +19,16 @@ Admission rules:
     never stalls for more than one chunk;
   * one request prefills at a time (its chunks are sequential — they
     share the single prefill cache); the queue is FIFO.
+
+Paged mode (``allocator`` set, DESIGN.md §9.4) adds page-budget admission:
+the queue head is admitted only when a free slot AND enough free pages for
+its prompt exist (admission budgets PAGES, not slots x max_len — that is
+the whole point of paging); decode growth claims pages one at a time, and
+when the pool runs dry the NEWEST running request is preempted: its pages
+return to the free list (a page-table reset, no device traffic) and it
+re-queues at the queue FRONT with its generated tokens as resume state.
+Re-prefilling prompt+generated reproduces its remaining tokens exactly
+because sampling keys are ``key(rid, n)`` — schedule-independent (§7.4).
 """
 
 from __future__ import annotations
@@ -27,6 +37,7 @@ import collections
 import dataclasses
 from typing import Deque, Dict, List, Optional
 
+from repro.serve.kv_blocks import BlockAllocator
 from repro.serve.sampling import GREEDY, SamplingParams
 
 
@@ -43,41 +54,70 @@ class Request:
 
 
 @dataclasses.dataclass
+class _QueueEntry:
+    """A queued request plus its resume state (non-empty after preemption:
+    the tokens it had already generated, replayed as prompt on re-prefill)."""
+
+    request: Request
+    resume: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens(self) -> List[int]:
+        return self.request.prompt + self.resume
+
+
+@dataclasses.dataclass
 class PrefillChunk:
-    """One scheduled slice of a request's prompt."""
+    """One scheduled slice of a request's (prompt + resume) token list."""
 
     request: Request
     slot: int
     start: int
     length: int
+    tokens: List[int] = None  # full prompt (+ resumed generations)
+    n_done: int = 0           # tokens already generated before this prefill
+
+    def __post_init__(self):
+        if self.tokens is None:
+            self.tokens = self.request.prompt
 
     @property
     def final(self) -> bool:
-        return self.start + self.length >= len(self.request.prompt)
+        return self.start + self.length >= len(self.tokens)
 
 
 @dataclasses.dataclass
 class _Running:
     request: Request
     n_generated: int = 0
+    seq: int = 0  # admission order (monotonic; newest = preemption victim)
 
 
 class Scheduler:
-    """Request queue + slot allocator over ``n_slots`` KV slots."""
+    """Request queue + slot allocator over ``n_slots`` KV slots.
+
+    ``allocator`` switches on paged admission (DESIGN.md §9.4): pages are
+    claimed for the whole prompt at admission, extended one page at a time
+    during decode by the engine, and released on finish/preempt.
+    """
 
     def __init__(self, n_slots: int, max_len: int, *,
-                 prefill_chunk: int = 64, token_budget: Optional[int] = None):
+                 prefill_chunk: int = 64, token_budget: Optional[int] = None,
+                 allocator: Optional[BlockAllocator] = None):
         assert n_slots >= 1 and prefill_chunk >= 1
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.token_budget = token_budget or prefill_chunk
-        self.queue: Deque[Request] = collections.deque()
+        self.allocator = allocator
+        self.queue: Deque[_QueueEntry] = collections.deque()
         self.free: List[int] = list(range(n_slots - 1, -1, -1))  # pop -> 0
         self.running: Dict[int, _Running] = {}  # slot -> live request
-        self._prefilling = None  # (request, slot, next_start) | None
+        self._prefilling = None  # (entry, slot, next_start) | None
         self.results: Dict[int, List[int]] = {}  # rid -> generated tokens
         self.n_rejected = 0
+        self.n_preempted = 0
+        self._admit_seq = 0
 
     # -- submission ---------------------------------------------------------
 
@@ -90,49 +130,74 @@ class Scheduler:
             raise ValueError(
                 f"request {req.rid}: prompt {len(req.prompt)} + "
                 f"max_new {req.max_new_tokens} exceeds max_len {self.max_len}")
-        self.queue.append(req)
+        if self.allocator is not None and not self.allocator.fits_pool(
+                len(req.prompt) + req.max_new_tokens):
+            # Worst-case page need exceeds the whole pool: preemption could
+            # never clear room, so reject up front (keeps OOM-preemption
+            # guaranteed to make progress down to one live request).
+            self.n_rejected += 1
+            raise ValueError(
+                f"request {req.rid}: needs more pages than the pool holds")
+        self.queue.append(_QueueEntry(req))
 
     # -- prefill planning ---------------------------------------------------
 
     def plan_prefill(self, budget: int) -> Optional[PrefillChunk]:
         """Next prompt chunk to run, spending at most ``budget`` tokens.
 
-        Admits the queue head into a free slot when nothing is mid-prefill.
+        Admits the queue head into a free slot when nothing is mid-prefill
+        (in paged mode additionally claiming pages for its full prompt —
+        all-or-nothing, so a half-admitted request never wedges the pool).
         Returns None when there is no admissible work (empty queue, no free
-        slot, or exhausted budget).
+        slot, not enough free pages, or exhausted budget).
         """
         if budget <= 0:
             return None
         if self._prefilling is None:
             if not self.queue or not self.free:
                 return None
-            self._prefilling = (self.queue.popleft(), self.free.pop(), 0)
-        req, slot, start = self._prefilling
-        length = min(self.prefill_chunk, len(req.prompt) - start, budget)
+            entry = self.queue[0]
+            if self.allocator is not None and not self.allocator.allocate(
+                    entry.request.rid, len(entry.tokens)):
+                return None  # wait for pages (decode frees them on finish)
+            self.queue.popleft()
+            self._prefilling = (entry, self.free.pop(), 0)
+        entry, slot, start = self._prefilling
+        length = min(self.prefill_chunk, len(entry.tokens) - start, budget)
         if length <= 0:
             return None
-        return PrefillChunk(request=req, slot=slot, start=start,
-                            length=length)
+        return PrefillChunk(request=entry.request, slot=slot, start=start,
+                            length=length, tokens=entry.tokens,
+                            n_done=len(entry.resume))
 
     def finish_prefill_chunk(self, chunk: PrefillChunk) -> bool:
         """Record a completed chunk; True when the whole prompt is cached."""
-        req, slot, start = self._prefilling
-        assert req is chunk.request and start == chunk.start
+        entry, slot, start = self._prefilling
+        assert entry.request is chunk.request and start == chunk.start
         if chunk.final:
             self._prefilling = None
             return True
-        self._prefilling = (req, slot, start + chunk.length)
+        self._prefilling = (entry, slot, start + chunk.length)
         return False
 
     # -- slot lifecycle -----------------------------------------------------
 
     def activate(self, chunk: PrefillChunk, first_token: int) -> bool:
-        """Admit the fully-prefilled request into its slot with its first
-        sampled token. Returns True if it finished immediately (EOS or
-        max_new_tokens == 1) — the slot is then freed right away."""
+        """Admit the fully-prefilled request into its slot with its next
+        sampled token (the FIRST token for fresh requests; token
+        ``n_done`` when resuming after preemption — earlier tokens are
+        already in ``results``). Returns True if it finished immediately —
+        the slot is then freed right away."""
         req = chunk.request
-        self.results[req.rid] = [first_token]
-        self.running[chunk.slot] = _Running(request=req, n_generated=1)
+        if chunk.n_done == 0:
+            self.results[req.rid] = [first_token]
+        else:
+            assert self.results[req.rid] == list(chunk.tokens[
+                len(req.prompt):]), "resume tokens diverged from results"
+            self.results[req.rid].append(first_token)
+        self._admit_seq += 1
+        self.running[chunk.slot] = _Running(
+            request=req, n_generated=chunk.n_done + 1, seq=self._admit_seq)
         return self._maybe_finish(chunk.slot, first_token)
 
     def note_token(self, slot: int, token: int) -> bool:
@@ -150,7 +215,28 @@ class Scheduler:
         if done:
             del self.running[slot]
             self.free.append(slot)
+            if self.allocator is not None:
+                self.allocator.free(req.rid)  # page-table reset = recycle
         return done
+
+    def preempt_newest(self) -> Optional[int]:
+        """Evict the most recently admitted running request (paged OOM
+        relief, DESIGN.md §9.4): frees its slot and pages and re-queues it
+        at the queue FRONT with its generated tokens as resume state.
+        Returns the freed slot (engine clears its host mirrors), or None
+        when nothing is running."""
+        if not self.running:
+            return None
+        slot = max(self.running, key=lambda s: self.running[s].seq)
+        run = self.running.pop(slot)
+        self.free.append(slot)
+        rid = run.request.rid
+        if self.allocator is not None:
+            self.allocator.free(rid)
+        self.queue.appendleft(
+            _QueueEntry(run.request, resume=list(self.results[rid])))
+        self.n_preempted += 1
+        return slot
 
     # -- introspection ------------------------------------------------------
 

@@ -189,6 +189,29 @@ def slot_vector_spec(batch: int, mesh: Mesh, rules: ShardingRules) -> P:
     return P(_fit_axis(batch, tuple(rules.batch_axes), mesh))
 
 
+def page_table_spec(batch: int, mesh: Mesh, rules: ShardingRules) -> P:
+    """Spec for per-slot page tables [B, max_pages] (paged KV serving,
+    DESIGN.md §9). The slot dim rides the token-batch axes (like
+    ``slot_vector_spec``) so each shard holds its own slots' tables; the
+    page dim is replicated — tables are tiny int32 rows, and every model
+    shard needs the full row to address its page-dim-sharded pool slice."""
+    if not rules.batch_axes:
+        return P(None, None)
+    return P(_fit_axis(batch, tuple(rules.batch_axes), mesh), None)
+
+
+def paged_pool_spec(n_pages: int, mesh: Mesh, rules: ShardingRules,
+                    ndim: int = 4) -> P:
+    """Spec for the physical KV pools [n_pages, page_size, KH, hd] (and the
+    [n_pages, page_size] position pool with ndim=2). The PAGE dim shards
+    over "model" — the paged analogue of the dense cache sharding its
+    sequence dim there (kv-head counts rarely divide the TP axis; page
+    counts are chosen to) — so pool HBM scales down with TP size and the
+    per-page decode gather stays shard-local for owned pages."""
+    del rules
+    return P(_fit_axis(n_pages, "model", mesh), *([None] * (ndim - 1)))
+
+
 def batch_spec(rules: ShardingRules, ndim: int, *, seq_axis=None) -> P:
     """Spec for token-shaped arrays [batch, seq, ...]."""
     parts = [rules.batch_axes] + [None] * (ndim - 1)

@@ -8,6 +8,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core.asym_ea import (AsymEAPlan, asym_ea_offload,
                                 divisibility_ok)
 
+pytestmark = pytest.mark.zebra  # CI job slice (see .github/workflows/ci.yml)
+
 
 def test_divisibility_rule():
     assert divisibility_ok(4, 4) and divisibility_ok(4, 8) \

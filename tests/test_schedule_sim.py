@@ -10,6 +10,8 @@ from repro.core.profiler import LayerTimes
 from repro.core.simulator import (CommTimes, simulate, simulate_distep,
                                   simulate_hetermoe)
 
+pytestmark = pytest.mark.zebra  # CI job slice (see .github/workflows/ci.yml)
+
 
 def times(t_attn=1.0, t_exp=1.0, t_exp_attn=0.75):
     return LayerTimes(t_attn=t_attn, t_exp=t_exp, t_exp_attn=t_exp_attn,

@@ -24,6 +24,8 @@ from repro.serve import (BatchedServer, ContinuousBatchingEngine, GREEDY,
                          make_continuous_program, make_serve_program)
 from repro.serve.sampling import request_keys, sample_tokens
 
+pytestmark = pytest.mark.serve  # CI job slice (see .github/workflows/ci.yml)
+
 RUN = RunConfig(policy=Policy(compute_dtype=jnp.float32), attn_impl="ref",
                 moe_impl="gather")
 

@@ -19,6 +19,8 @@ from repro.serve.engine import BatchedServer, make_serve_program
 from repro.sharding.rules import (fit_spec, fitted_shardings, rules_for)
 from repro.train.step import abstract_params, fit_batch_axes
 
+pytestmark = pytest.mark.serve  # CI job slice (see .github/workflows/ci.yml)
+
 RUN = RunConfig(policy=Policy(compute_dtype=jnp.float32), moe_impl="gather")
 
 

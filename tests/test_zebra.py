@@ -14,6 +14,8 @@ from repro.models import modules, registry, stack
 from repro.models.modules import Policy, RunConfig
 from repro.pytree import split_params
 
+pytestmark = pytest.mark.zebra  # CI job slice (see .github/workflows/ci.yml)
+
 RUN = RunConfig(policy=Policy(compute_dtype=jnp.float32), moe_impl="gather")
 KEY = jax.random.PRNGKey(0)
 
