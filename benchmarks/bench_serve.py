@@ -2,6 +2,16 @@
 continuous-batching engine. Tracks tokens/s, time-to-first-token and
 inter-token latency across PRs via BENCH_serve.json.
 
+``--disagg`` adds the disaggregation section (DESIGN.md §10): the gate
+metric ``disagg.goodput_ratio_sim`` is the SIMULATED goodput of the
+role-split deployment over the unified lockstep engine on the same fixed
+Poisson trace at an A40+V100 speed ratio — the planner sweeps the
+prefill:decode device split and the simulator replays the trace through
+both shapes. The unified baseline keeps BOTH devices' HBM worth of decode
+slots (2x the disagg decode pool), so the ratio under-counts rather than
+flatters disaggregation. A real tiny-engine disagg run rides along as the
+measured/informational row.
+
 Reuses launch/serve.py::serve_arch (one engine wiring, two entry points)
 so the benchmark always measures exactly what the driver runs.
 
@@ -59,6 +69,8 @@ def bench_arch(arch: str, args) -> dict:
     }
     if "paged" in s:
         out["paged"] = s["paged"]
+    if "disagg" in s:
+        out["disagg"] = s["disagg"]
     return out
 
 
@@ -119,6 +131,64 @@ def bench_paged_sweep(args) -> dict:
     return section
 
 
+def bench_disagg(args) -> dict:
+    """BENCH_serve.json ``disagg`` section (see module docstring)."""
+    import numpy as np
+    from repro.core import planner
+    from repro.core import simulator as sim
+    from repro.core.hardware import A40, V100
+    from repro.core.profiler import ZPGroupShape
+    from repro.models import registry
+
+    # -- simulated gate: fixed mixed Poisson load, A40 (attn) + V100 (exp)
+    cfg = registry.get_config("qwen3-moe-30b-a3b")
+    rng = np.random.RandomState(0)
+    t, trace = 0.0, []
+    for _ in range(40):
+        t += float(rng.exponential(0.25))
+        trace.append(sim.ServeRequest(arrival=t,
+                                      prompt=int(rng.randint(512, 4096)),
+                                      gen=int(rng.randint(64, 256))))
+    zp = ZPGroupShape(M=1, N=1, attn_class=A40, exp_class=V100)
+    plan = planner.plan_disagg_group(cfg, zp, trace, prefill_chunk=256,
+                                     ctx=2048, slots_per_device=8)
+    section = {
+        "sim": {
+            "arch": cfg.name,
+            "classes": [zp.attn_class.name, zp.exp_class.name],
+            "n_requests": len(trace),
+            "split": {"prefill_attn": plan.prefill_attn,
+                      "prefill_exp": plan.prefill_exp,
+                      "decode_attn": plan.decode_attn,
+                      "decode_exp": plan.decode_exp},
+            "goodput_disagg": round(plan.predicted.goodput, 2),
+            "goodput_unified": round(plan.predicted_unified.goodput, 2),
+            "ttft_p50_disagg_s": round(plan.predicted.ttft_p50, 3),
+            "ttft_p50_unified_s": round(plan.predicted_unified.ttft_p50, 3),
+            "ttft_ratio": round(plan.ttft_ratio, 3),
+        },
+        "goodput_ratio_sim": round(plan.goodput_ratio, 3),
+    }
+    assert plan.goodput_ratio >= 1.2, \
+        f"disagg goodput only {plan.goodput_ratio:.2f}x unified " \
+        f"(need >= 1.2x at the A40+V100 speed ratio)"
+
+    # -- measured (informational): the real role-split engine end to end
+    a = copy.copy(args)
+    a.disagg = True
+    a.paged = False
+    s = bench_arch(PAGED_ARCH, a)
+    section["measured"] = {
+        "arch": PAGED_ARCH,
+        "tokens_per_s": s["tokens_per_s"],
+        "ttft_s_p50": s["ttft_s_p50"],
+        "kv_transfers": s["disagg"]["kv_transfers"],
+        "kv_pages_shipped": s["disagg"]["kv_pages_shipped"],
+        "kv_bytes_shipped": s["disagg"]["kv_bytes_shipped"],
+    }
+    return section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
@@ -132,6 +202,9 @@ def main():
                          "fixed simulated HBM)")
     ap.add_argument("--paged-requests", type=int, default=12)
     ap.add_argument("--paged-rate", type=float, default=1.5)
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the disaggregation section (simulated "
+                         "goodput-ratio gate + measured role-split run)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     # fixed-trace knobs serve_arch reads beyond the CLI ones above
@@ -145,8 +218,11 @@ def main():
     args.stream = False
     args.page_size = 16
     args.pool_pages = None
+    args.prefill_pool_pages = None
     run_paged = args.paged
-    args.paged = False  # the base ARCHS runs stay on the dense engine
+    run_disagg = args.disagg
+    args.paged = False   # the base ARCHS runs stay on the dense engine
+    args.disagg = False
 
     payload = {
         "bench": "serve",
@@ -163,6 +239,11 @@ def main():
         print(f"[bench_serve] paged: slot_ratio_best="
               f"{payload['paged']['slot_ratio_best']} "
               f"(config {payload['paged']['best_config']})")
+    if run_disagg:
+        payload["disagg"] = bench_disagg(args)
+        print(f"[bench_serve] disagg: goodput_ratio_sim="
+              f"{payload['disagg']['goodput_ratio_sim']} "
+              f"(split {payload['disagg']['sim']['split']})")
     out = pathlib.Path(args.out) if args.out else \
         pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
     out.write_text(json.dumps(payload, indent=2) + "\n")

@@ -7,6 +7,7 @@ hard.
 
 Gated metrics (higher is better):
   serve: paged.slot_ratio_best           (slots at fixed HBM vs reservation)
+  serve: disagg.goodput_ratio_sim        (simulated disagg vs unified goodput)
   zebra: gate.speedup                    (simulated overlapped vs serialized)
 
 Usage:
@@ -30,9 +31,11 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 BENCHES = {
     "serve": {
         "file": "BENCH_serve.json",
-        "simulated": ["paged.slot_ratio_best"],
+        "simulated": ["paged.slot_ratio_best",
+                      "disagg.goodput_ratio_sim"],
         "measured": ["results.qwen3-moe-30b-a3b.tokens_per_s",
-                     "results.llama3.2-3b.tokens_per_s"],
+                     "results.llama3.2-3b.tokens_per_s",
+                     "disagg.measured.tokens_per_s"],
     },
     "zebra": {
         "file": "BENCH_zebra.json",
@@ -70,9 +73,26 @@ def main(argv=None):
                     help="baseline JSON (default: the repo-committed one)")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional regression (default 0.25)")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated top-level section filter (e.g. "
+                         "'paged' or 'disagg'): gate only keys under these "
+                         "sections, so a CI job that benches one slice is "
+                         "not failed for sections it deliberately did not "
+                         "produce. Default: gate every key (a full bench "
+                         "run must carry every section).")
     args = ap.parse_args(argv)
 
     spec = BENCHES[args.bench]
+    if args.sections:
+        keep = tuple(s.strip() for s in args.sections.split(","))
+        spec = dict(spec)
+        for group in ("simulated", "measured"):
+            spec[group] = [k for k in spec[group]
+                           if k.split(".")[0] in keep]
+        if not spec["simulated"]:
+            print(f"[gate] --sections {args.sections} matches no gated "
+                  f"metric for bench '{args.bench}'", file=sys.stderr)
+            return 2
     committed_path = pathlib.Path(args.committed) if args.committed \
         else REPO / spec["file"]
     fresh = json.loads(pathlib.Path(args.fresh).read_text())

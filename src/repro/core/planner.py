@@ -116,6 +116,95 @@ def sweep_ratios(cfg: ModelConfig, attn_class: DeviceClass,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Disaggregated-serving planning (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DisaggPlan:
+    """Role assignment for a heterogeneous serving group: which devices
+    prefill and which decode, plus the simulated evidence for the pick."""
+
+    zp: ZPGroupShape
+    prefill_attn: int   # attention-class devices assigned to prefill
+    prefill_exp: int    # expert-class devices assigned to prefill
+    profile: P.ServeProfile
+    predicted: sim.ServeSimResult
+    predicted_unified: sim.ServeSimResult
+
+    @property
+    def decode_attn(self) -> int:
+        return self.zp.M - self.prefill_attn
+
+    @property
+    def decode_exp(self) -> int:
+        return self.zp.N - self.prefill_exp
+
+    @property
+    def goodput_ratio(self) -> float:
+        u = self.predicted_unified.goodput
+        return self.predicted.goodput / u if u > 0 else float("inf")
+
+    @property
+    def ttft_ratio(self) -> float:
+        d = self.predicted.ttft_p50
+        return self.predicted_unified.ttft_p50 / d if d > 0 else float("inf")
+
+
+def plan_disagg_group(cfg: ModelConfig, zp: ZPGroupShape, trace, *,
+                      prefill_chunk: int = 256, ctx: int = 2048,
+                      slots_per_device: int = 8,
+                      page_size: int = 16) -> DisaggPlan:
+    """Pick the prefill:decode device split maximizing simulated goodput —
+    the serving analogue of Asym-EA's offload sweep (same shape: profile
+    both classes on both roles, sweep assignments, validate candidates in
+    the simulator, keep the best).
+
+    ``trace`` is a list of :class:`~repro.core.simulator.ServeRequest`.
+    The unified baseline runs the whole mixed group as ONE lockstep
+    data-parallel engine (slowest class paces both phases); disagg
+    candidates assign ``a`` attention-class + ``e`` expert-class devices
+    to prefill (that many parallel batch-1 streams) and the rest to
+    decode, paying the page-handoff wire time per migrated request."""
+    prof = P.serve_profile(cfg, zp.attn_class, zp.exp_class,
+                           chunk=prefill_chunk, ctx=ctx,
+                           decode_batch=slots_per_device,
+                           page_size=page_size)
+    avg_prompt = sum(r.prompt for r in trace) / max(len(trace), 1)
+    t_handoff = -(-avg_prompt // page_size) * prof.t_page
+
+    unified = sim.simulate_serve_trace(
+        trace, prefill_chunk=prefill_chunk,
+        t_prefill_chunk=max(prof.t_prefill_chunk_attn,
+                            prof.t_prefill_chunk_exp),
+        t_decode_step=max(prof.t_decode_step_attn, prof.t_decode_step_exp),
+        decode_slots=slots_per_device * (zp.M + zp.N), colocated=True)
+
+    best = None
+    for a in range(zp.M + 1):
+        for e in range(zp.N + 1):
+            n_pre, n_dec = a + e, (zp.M - a) + (zp.N - e)
+            if n_pre < 1 or n_dec < 1:
+                continue
+            t_chunk = max([prof.t_prefill_chunk_attn] * (a > 0) +
+                          [prof.t_prefill_chunk_exp] * (e > 0))
+            t_step = max([prof.t_decode_step_attn] * (zp.M - a > 0) +
+                         [prof.t_decode_step_exp] * (zp.N - e > 0))
+            res = sim.simulate_serve_trace(
+                trace, prefill_chunk=prefill_chunk, t_prefill_chunk=t_chunk,
+                t_decode_step=t_step,
+                decode_slots=slots_per_device * n_dec,
+                n_prefill_streams=n_pre, t_handoff=t_handoff)
+            cand = DisaggPlan(zp=zp, prefill_attn=a, prefill_exp=e,
+                              profile=prof, predicted=res,
+                              predicted_unified=unified)
+            if best is None or res.goodput > best.predicted.goodput \
+                    or (res.goodput == best.predicted.goodput
+                        and res.ttft_p50 < best.predicted.ttft_p50):
+                best = cand
+    return best
+
+
 def replan(cfg: ModelConfig, plan: ZebraPlan, global_batch: int,
            seq_len: int, *, lost_attn: int = 0, lost_exp: int = 0,
            slow_factor: float = 1.0) -> ZebraPlan:

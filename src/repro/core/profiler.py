@@ -158,6 +158,120 @@ def profile_layer(cfg: ModelConfig, zp: ZPGroupShape, global_batch: int,
 
 
 # ---------------------------------------------------------------------------
+# Serving-mode profile (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# The serving analogue of LayerTimes: the two quantities the disaggregation
+# planner trades off are t_prefill_chunk (a chunked-prefill slice — the
+# attention-heavy, compute-bound task the NEWER class dominates, exactly
+# the Fig. 2 attention gap) and t_decode_step (one batched decode step —
+# KV reads + expert/FFN weight reads, memory-bound, where the older class
+# stays efficient). Both are profiled per device class so plan_disagg_group
+# can sweep role splits the same way Asym-EA sweeps expert offload.
+
+@dataclasses.dataclass(frozen=True)
+class ServeProfile:
+    """Per-class serving step times (seconds) + the KV handoff wire time."""
+
+    t_prefill_chunk_attn: float  # one chunk slice on the attention class
+    t_prefill_chunk_exp: float   # ... on the expert class
+    t_decode_step_attn: float    # one batched decode step on the attn class
+    t_decode_step_exp: float     # ... on the expert class
+    t_page: float                # one KV page across the inter-group link
+    chunk: int                   # prefill chunk the times were profiled at
+    decode_batch: int            # decode batch the step times assume
+
+
+def serve_ffn_time(cfg: ModelConfig, tokens: int, dev: DeviceClass) -> float:
+    """Whole-FFN time at serving batch sizes. Small-M MoE decode is weight-
+    read bound (the group-dense regime, DESIGN.md §5.5): HBM traffic covers
+    every ACTIVATED expert's weights, not one expert's."""
+    d = cfg.d_model
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    if cfg.is_moe:
+        f = cfg.d_ff_expert
+        copies = tokens * max(cfg.top_k, 1)
+        n_act = min(cfg.n_experts, max(copies, 1))
+        return gemm_time(2 * copies * d * f * n_mats,
+                         BYTES * n_act * d * f * n_mats, dev)
+    return gemm_time(2 * tokens * d * cfg.d_ff * n_mats,
+                     BYTES * d * cfg.d_ff * n_mats, dev)
+
+
+def prefill_chunk_time(cfg: ModelConfig, chunk: int, ctx: int,
+                       dev: DeviceClass) -> float:
+    """One whole-stack chunked-prefill slice: ``chunk`` new tokens
+    attending over a ``ctx``-line cache. Compute-bound: the SDPA core is
+    chunk x ctx and runs at the class's (un)fused attention efficiency —
+    this is where the generation gap bites (Fig. 2a)."""
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    proj_flops = 2 * chunk * d * (2 * h * hd + 2 * kh * hd)
+    proj_bytes = BYTES * d * (2 * h * hd + 2 * kh * hd)
+    t = gemm_time(proj_flops, proj_bytes, dev)
+    core_flops = 2 * 2 * chunk * ctx * h * hd
+    core_bytes = 4 * h * chunk * ctx * BYTES
+    t += attention_core_time(core_flops, core_bytes, dev)
+    if cfg.is_moe:
+        t += gemm_time(2 * chunk * d * cfg.n_experts,
+                       BYTES * d * cfg.n_experts, dev)
+    t += serve_ffn_time(cfg, chunk, dev)
+    return cfg.n_layers * t
+
+
+def decode_step_time(cfg: ModelConfig, batch: int, ctx: int,
+                     dev: DeviceClass) -> float:
+    """One batched decode step (1 token per slot) at context ``ctx``:
+    KV-cache reads + FFN weight reads dominate, so the roofline's HBM leg
+    binds on both classes — the old generation loses little here."""
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    proj_flops = 2 * batch * d * (2 * h * hd + 2 * kh * hd)
+    proj_bytes = BYTES * d * (2 * h * hd + 2 * kh * hd)
+    t = gemm_time(proj_flops, proj_bytes, dev)
+    core_flops = 2 * 2 * batch * ctx * h * hd
+    kv_bytes = batch * ctx * 2 * kh * hd * BYTES  # the whole cache, once
+    eff = dev.attn_eff if dev.has_flash_attention else dev.attn_eff_nofa
+    t += max(core_flops / (dev.peak_flops * eff), kv_bytes / dev.hbm_bw)
+    if cfg.is_moe:
+        t += gemm_time(2 * batch * d * cfg.n_experts,
+                       BYTES * d * cfg.n_experts, dev)
+    t += serve_ffn_time(cfg, batch, dev)
+    t = cfg.n_layers * t
+    # Unembedding head (decode samples every step; prefill only at the end,
+    # where it is amortized over the whole prompt and left out).
+    t += gemm_time(2 * batch * d * cfg.vocab_size,
+                   BYTES * d * cfg.vocab_size, dev)
+    return t
+
+
+def kv_page_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """Payload bytes of one physical KV page across every attention
+    layer's pools (k + v in bf16 plus the int32 position pool) — what one
+    page costs on the handoff link."""
+    per_layer = 2 * page_size * cfg.n_kv_heads * cfg.head_dim * BYTES \
+        + page_size * 4
+    return cfg.n_layers * per_layer
+
+
+def serve_profile(cfg: ModelConfig, attn_class: DeviceClass,
+                  exp_class: DeviceClass, *, chunk: int, ctx: int,
+                  decode_batch: int, page_size: int = 16,
+                  link_bw: Optional[float] = None) -> ServeProfile:
+    """Profile both classes for both serving roles (the planner needs the
+    off-role times too: a unified deployment runs BOTH phases on the
+    slower class's clock)."""
+    bw = link_bw if link_bw else min(attn_class.link_bw, exp_class.link_bw)
+    return ServeProfile(
+        t_prefill_chunk_attn=prefill_chunk_time(cfg, chunk, ctx, attn_class),
+        t_prefill_chunk_exp=prefill_chunk_time(cfg, chunk, ctx, exp_class),
+        t_decode_step_attn=decode_step_time(cfg, decode_batch, ctx,
+                                            attn_class),
+        t_decode_step_exp=decode_step_time(cfg, decode_batch, ctx,
+                                           exp_class),
+        t_page=kv_page_bytes(cfg, page_size) / bw,
+        chunk=chunk, decode_batch=decode_batch)
+
+
+# ---------------------------------------------------------------------------
 # Memory estimation -> n_min / n_max for Asym-EA
 # ---------------------------------------------------------------------------
 

@@ -235,6 +235,164 @@ def ep_ideal_throughput(cfg, zp, global_batch: int, seq_len: int) -> float:
     return th
 
 
+# ---------------------------------------------------------------------------
+# Serving-mode simulation (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# The serving counterpart of the training schedule simulator: a
+# deterministic replay of a request trace through either deployment shape.
+#
+#   * unified (colocated=True): the continuous-batching engine run
+#     data-parallel lockstep over the WHOLE mixed group — each tick spends
+#     one prefill chunk (when a prompt is mid-flight) plus one decode step,
+#     both paced by the slowest class present, and decode of live slots
+#     stalls behind every prefill chunk (exactly the engine's tick loop).
+#   * disagg (colocated=False): prefill streams drain the queue in
+#     continuous time on the prefill group's clock; decode ticks
+#     independently on the decode group's clock; a finished prefill pays
+#     the page-handoff wire time before it can claim a decode slot.
+#     Migration is FIFO head-of-line, like the controller.
+#
+# Being a function of the trace and the analytic profile only, its outputs
+# gate CI (BENCH_serve.json `disagg`) the way gate.speedup does for zebra.
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One trace entry for the serving simulator."""
+
+    arrival: float  # seconds
+    prompt: int     # prompt tokens
+    gen: int        # tokens to generate
+
+
+@dataclasses.dataclass
+class ServeSimResult:
+    makespan: float
+    goodput: float     # generated tokens of finished requests per second
+    ttft_mean: float
+    ttft_p50: float
+    n_finished: int
+
+
+def _percentile(xs, q):
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(q * (len(s) - 1))))] if s else 0.0
+
+
+def simulate_serve_trace(reqs, *, prefill_chunk: int, t_prefill_chunk: float,
+                         t_decode_step: float, decode_slots: int,
+                         n_prefill_streams: int = 1, t_handoff: float = 0.0,
+                         colocated: bool = False,
+                         max_ticks: int = 10_000_000) -> ServeSimResult:
+    """Replay ``reqs`` (ServeRequest list) through one deployment shape.
+
+    For the unified engine pass the slowest-class times and
+    ``colocated=True`` (streams and handoff are ignored: one engine, one
+    prefill stream, zero-copy admission). For disagg pass each group's own
+    clock plus the per-request page-handoff time."""
+    order = sorted(range(len(reqs)), key=lambda i: (reqs[i].arrival, i))
+    chunks = {i: -(-reqs[i].prompt // prefill_chunk) for i in order}
+    ttft: Dict[int, float] = {}
+    finish: Dict[int, float] = {}
+
+    if colocated:
+        import collections
+        queue = collections.deque(order)
+        t = 0.0
+        free = decode_slots
+        mid = None  # (idx, chunks_left)
+        active: Dict[int, int] = {}
+        for _ in range(max_ticks):
+            if mid is None and queue and reqs[queue[0]].arrival <= t \
+                    and free > 0:
+                idx = queue.popleft()
+                free -= 1
+                mid = [idx, chunks[idx]]
+            dt = 0.0
+            if mid is not None:
+                dt += t_prefill_chunk
+                mid[1] -= 1
+                if mid[1] == 0:
+                    idx = mid[0]
+                    ttft[idx] = t + dt - reqs[idx].arrival
+                    if reqs[idx].gen <= 1:
+                        finish[idx] = t + dt
+                        free += 1
+                    else:
+                        active[idx] = reqs[idx].gen - 1
+                    mid = None
+            if active:
+                dt += t_decode_step
+                for idx in list(active):
+                    active[idx] -= 1
+                    if active[idx] == 0:
+                        finish[idx] = t + dt
+                        free += 1
+                        del active[idx]
+            if dt == 0.0:
+                if not queue:
+                    break
+                t = max(t, reqs[queue[0]].arrival)
+            else:
+                t += dt
+    else:
+        # Prefill group: FIFO over the streams, continuous time.
+        stream_free = [0.0] * max(n_prefill_streams, 1)
+        ready: Dict[int, float] = {}
+        for i in order:
+            s = min(range(len(stream_free)), key=lambda j: stream_free[j])
+            start = max(reqs[i].arrival, stream_free[s])
+            done = start + chunks[i] * t_prefill_chunk
+            stream_free[s] = done
+            ready[i] = done + t_handoff
+        # Decode group: independent tick clock, FIFO head-of-line admits.
+        import collections
+        pending = collections.deque(order)
+        t = 0.0
+        free = decode_slots
+        active: Dict[int, int] = {}
+        for _ in range(max_ticks):
+            while pending and ready[pending[0]] <= t and free > 0:
+                idx = pending.popleft()
+                free -= 1
+                ttft[idx] = t - reqs[idx].arrival
+                if reqs[idx].gen <= 1:
+                    finish[idx] = t
+                    free += 1
+                else:
+                    active[idx] = reqs[idx].gen - 1
+            if not active:
+                if not pending:
+                    break
+                t = max(t, ready[pending[0]])
+                continue
+            t += t_decode_step
+            for idx in list(active):
+                active[idx] -= 1
+                if active[idx] == 0:
+                    finish[idx] = t
+                    free += 1
+                    del active[idx]
+
+    if len(finish) != len(reqs):
+        # Never returns a truncated replay: the outputs feed the CI-gated
+        # disagg.goodput_ratio_sim, which must not pass (or fail) on a
+        # partial trace.
+        raise RuntimeError(
+            f"serve trace did not complete within {max_ticks} ticks "
+            f"({len(finish)}/{len(reqs)} finished)")
+    done_tok = sum(reqs[i].gen for i in finish)
+    t0 = min((r.arrival for r in reqs), default=0.0)
+    makespan = max(finish.values(), default=0.0) - t0
+    tt = list(ttft.values())
+    return ServeSimResult(
+        makespan=makespan,
+        goodput=done_tok / makespan if makespan > 0 else 0.0,
+        ttft_mean=sum(tt) / len(tt) if tt else 0.0,
+        ttft_p50=_percentile(tt, 0.5),
+        n_finished=len(finish))
+
+
 def pp_iter_time(cfg, zp, global_batch: int, seq_len: int,
                  n_microbatches: int = 8) -> float:
     """Heterogeneity-aware pipeline parallelism (Metis/FlashFlex style):

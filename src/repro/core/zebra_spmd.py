@@ -64,6 +64,14 @@ class ZebraConfig:
     # no data dependence on the expert GEMM of chunk k, so XLA's async
     # scheduler double-buffers communication under compute (DESIGN.md §8).
     n_chunks: int = 1
+    # Combine-side chunk count (alltoall mode), decoupled from dispatch:
+    # combine cotangents are f32 in the backward — 2x the wire volume of
+    # the bf16 dispatch at equal chunk count — so the reverse all-to-all
+    # needs finer slicing to hide under the same expert compute. None
+    # defaults to 2x the dispatch chunks (1 when dispatch is serialized);
+    # must be a multiple of n_chunks so every dispatch chunk's output
+    # splits into whole combine sub-chunks.
+    n_chunks_combine: Optional[int] = None
     # Asym-EA-style offload (alltoall mode): experts [0, offload_experts)
     # live replicated on every shard ("attention-side"); their tokens skip
     # the all-to-all entirely and their GEMM is folded into the FIRST
@@ -162,6 +170,11 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
         f"remote experts {E_rem} must divide over {ep}={n_ep}"
     E_loc = E_rem // n_ep
     Q = max(int(zcfg.n_chunks), 1)
+    Qc = zcfg.n_chunks_combine if zcfg.n_chunks_combine \
+        else (2 * Q if Q > 1 else 1)
+    Qc = max(int(Qc), Q)
+    assert Qc % Q == 0, \
+        f"n_chunks_combine {Qc} must be a multiple of n_chunks {Q}"
     cd = run.policy.compute_dtype
 
     ba = tuple(zcfg.batch_axes)
@@ -215,9 +228,11 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
             T, d = x.shape
             weights, idx, aux = local_route(ffn["router"], x)
             C0 = max(_round_up(int(T * k / E * zcfg.capacity_factor), 8), 8)
-            # Capacity padded so it splits into Q equal sublane-aligned
-            # chunk slices (pad rows are zero and inert end to end).
-            C, Cq = kops.chunk_capacity(C0, Q)
+            # Capacity padded so it splits into Qc equal sublane-aligned
+            # COMBINE sub-chunks (pad rows are zero and inert end to end);
+            # each dispatch chunk covers Qc/Q of them.
+            C, Cqc = kops.chunk_capacity(C0, Qc)
+            Cq = C // Q
             buf, meta = _pack(x, idx, E, C)  # [E, C, d] — packed domain
             loc = buf[:n_loc]                # local (offloaded) experts
             rem = buf[n_loc:].reshape(n_ep, E_loc, C, d)
@@ -248,12 +263,19 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
                         use_kernel=uk)
                 else:
                     o = remote_ffn(ffn, r)
-                # Combine: chunk q's reverse all-to-all is issued before
-                # chunk q+1's GEMM — same hiding on the way back.
+                # Combine: chunk q's reverse all-to-alls are issued before
+                # chunk q+1's GEMM — same hiding on the way back, at the
+                # FINER combine granularity (Qc/Q sub-chunks per dispatch
+                # chunk): the backward transposes these into the f32
+                # cotangent dispatch, whose 2x volume is why combine
+                # defaults to twice the dispatch chunk count.
                 o = jnp.swapaxes(o.reshape(E_loc, n_ep, Cq, d), 0, 1)
-                outs.append(jax.lax.all_to_all(o, ep, split_axis=0,
-                                               concat_axis=0, tiled=False))
-            back = outs[0] if Q == 1 else jnp.concatenate(outs, axis=2)
+                for s in range(Qc // Q):
+                    outs.append(jax.lax.all_to_all(
+                        o[:, :, s * Cqc:(s + 1) * Cqc], ep, split_axis=0,
+                        concat_axis=0, tiled=False))
+            back = outs[0] if len(outs) == 1 else \
+                jnp.concatenate(outs, axis=2)
             out_full = back.reshape(E_rem, C, d)
             if n_loc:
                 # Combine consumes ONE packed [E, C, d] output.

@@ -13,8 +13,14 @@ block-granular pool admission, page-table decode, preemption on pool OOM.
     PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
         --page-size 16 --pool-pages 12
 
+    # disaggregated prefill/decode smoke (role-split workers, page-id
+    # KV handoff, DESIGN.md §10); tight decode pool exercises the
+    # preempt -> re-prefill path:
+    PYTHONPATH=src python -m repro.launch.serve --smoke --disagg \
+        --page-size 16 --pool-pages 12
+
 Exit status: non-zero when any request is rejected, dropped, or left
-unfinished — the CI serve-smoke step gates on it.
+unfinished — the CI serve-smoke and disagg-smoke steps gate on it.
 """
 
 from __future__ import annotations
@@ -106,40 +112,60 @@ def serve_arch(arch: str, args) -> dict:
     if cfg.is_encdec or cfg.vision_seq > 0:
         return serve_arch_lockstep(cfg, mesh, run, args)
     max_len = args.prompt_len + args.gen
-    paged_kw = {}
-    if args.paged:
-        paged_kw = dict(page_size=args.page_size, n_pages=args.pool_pages)
-    program = make_continuous_program(cfg, mesh, run, n_slots=args.slots,
-                                      max_len=max_len, seed=args.seed,
-                                      **paged_kw)
-
-    key = jax.random.PRNGKey(0)
-    with mesh:
-        params = jax.jit(
-            lambda: split_params(stack.init_model(key, cfg))[0],
-            out_shardings=program.param_shardings)()
-
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     trace = build_trace(args.seed, args.requests, args.rate,
                         args.prompt_len, args.gen, cfg.vocab_size, sampling)
-    allocator = None
-    if args.paged:
-        allocator = BlockAllocator(program.n_pages, program.page_size,
-                                   program.max_pages)
-    sched = Scheduler(args.slots, max_len, prefill_chunk=args.prefill_chunk,
-                      token_budget=args.prefill_budget, allocator=allocator)
     metrics = ServeMetrics()
     stream = None
     if args.stream:
         def stream(rid, tok, fin):
             print(f"[{cfg.name}] rid={rid} tok={tok}"
                   + (" <done>" if fin else ""))
-    engine = ContinuousBatchingEngine(program, params, sched,
-                                      metrics=metrics, on_token=stream)
-    t0 = time.perf_counter()
-    results = engine.run(trace)
-    dt = time.perf_counter() - t0
+
+    key = jax.random.PRNGKey(0)
+    if getattr(args, "disagg", False):
+        # Disaggregated prefill/decode deployment (DESIGN.md §10): the
+        # decode pool takes --pool-pages, the prefill pool
+        # --prefill-pool-pages; KV crosses between them as pages.
+        from repro.serve.disagg import make_disagg
+        params = split_params(stack.init_model(key, cfg))[0]
+        engine = make_disagg(
+            cfg, mesh, run, params, decode_slots=args.slots,
+            max_len=max_len, page_size=args.page_size,
+            decode_pages=args.pool_pages,
+            prefill_pages=args.prefill_pool_pages,
+            prefill_chunk=args.prefill_chunk,
+            token_budget=args.prefill_budget, seed=args.seed,
+            metrics=metrics, on_token=stream)
+        t0 = time.perf_counter()
+        results = engine.run(trace)
+        dt = time.perf_counter() - t0
+    else:
+        paged_kw = {}
+        if args.paged:
+            paged_kw = dict(page_size=args.page_size,
+                            n_pages=args.pool_pages)
+        program = make_continuous_program(cfg, mesh, run, n_slots=args.slots,
+                                          max_len=max_len, seed=args.seed,
+                                          **paged_kw)
+        with mesh:
+            params = jax.jit(
+                lambda: split_params(stack.init_model(key, cfg))[0],
+                out_shardings=program.param_shardings)()
+        allocator = None
+        if args.paged:
+            allocator = BlockAllocator(program.n_pages, program.page_size,
+                                       program.max_pages)
+        sched = Scheduler(args.slots, max_len,
+                          prefill_chunk=args.prefill_chunk,
+                          token_budget=args.prefill_budget,
+                          allocator=allocator)
+        engine = ContinuousBatchingEngine(program, params, sched,
+                                          metrics=metrics, on_token=stream)
+        t0 = time.perf_counter()
+        results = engine.run(trace)
+        dt = time.perf_counter() - t0
 
     for req in trace:
         tr = metrics.requests.get(req.rid)
@@ -159,7 +185,24 @@ def serve_arch(arch: str, args) -> dict:
           f"itl p50 {s['itl_s']['p50']:.4f}s, "
           f"queue depth max {s['queue_depth']['max']}, "
           f"max concurrent {s['max_concurrent_active']})")
-    if args.paged:
+    if getattr(args, "disagg", False):
+        st = engine.transfer.stats
+        s["disagg"] = {
+            "page_size": args.page_size,
+            "decode_pages": engine.decode.allocator.n_pages,
+            "prefill_pages": engine.prefill.allocator.n_pages,
+            "decode_page_peak": engine.decode.page_peak,
+            "n_preempted": engine.decode.sched.n_preempted,
+            "kv_transfers": st.n_transfers,
+            "kv_pages_shipped": st.n_pages,
+            "kv_bytes_shipped": st.bytes,
+        }
+        print(f"[serve] arch={cfg.name} disagg: page_size={args.page_size} "
+              f"transfers={st.n_transfers} pages={st.n_pages} "
+              f"preempted={engine.decode.sched.n_preempted}")
+        engine.prefill.allocator.check()
+        engine.decode.allocator.check()
+    elif args.paged:
         s["paged"] = eng_occ = engine.page_occupancy()
         print(f"[serve] arch={cfg.name} paged: page_size={args.page_size} "
               f"pool={program.n_pages} peak={eng_occ['page_peak']} "
@@ -215,6 +258,14 @@ def main(argv=None):
                     help="physical pool size in pages (default: full "
                          "reservation capacity; smaller values overcommit "
                          "and exercise preemption)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode deployment "
+                         "(DESIGN.md §10): role-split workers over "
+                         "separate paged pools, KV handed off as pages; "
+                         "--pool-pages sizes the decode pool")
+    ap.add_argument("--prefill-pool-pages", type=int, default=None,
+                    help="prefill-side pool size in pages (disagg mode; "
+                         "default: two max-length sequences)")
     args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else \

@@ -483,9 +483,27 @@ def apply_attention(params, cfg: ModelConfig, run: RunConfig, x, positions,
                 cache["pos"], positions.astype(cache["pos"].dtype), (0, slot))
         new_cache = {"k": ck, "v": cv, "pos": cpos}
         if S == 1 or attend_to_cache:
-            # decode / chunked prefill: attend over the cache contents
-            # (earlier chunks included; pos == -1 lines are masked out).
-            k, v, kv_pos = ck, cv, cpos
+            if window > 0 and S > 1:
+                # Ring-cache chunked prefill attends BEFORE the write
+                # lands: the chunk's own tail evicts ring lines that
+                # earlier queries of the same chunk still need (query j
+                # sees evicted position p iff j < p's ring successor —
+                # the pre-fix approximation dropped those keys). Attention
+                # reads the PRE-write ring plus the fresh chunk keys; the
+                # window mask trims the union to exactly the right lines,
+                # and the write (above) still lands for later chunks.
+                k = jnp.concatenate([cache["k"], k], axis=1)
+                v = jnp.concatenate([cache["v"], v], axis=1)
+                kv_pos = jnp.concatenate(
+                    [cache["pos"], positions.astype(cache["pos"].dtype)],
+                    axis=1)
+            else:
+                # decode / linear-cache chunked prefill: attend over the
+                # cache contents (earlier chunks included; pos == -1 lines
+                # are masked out). Exact: nothing is ever evicted (S == 1
+                # writes only the query's own line; a linear cache never
+                # wraps).
+                k, v, kv_pos = ck, cv, cpos
         else:
             # whole-sequence prefill: the cache is assumed empty at entry,
             # so attention runs structurally over the fresh K/V (never

@@ -366,3 +366,67 @@ def merge_kv_state(kv_tree, rec_tree):
         out["blocks"] = {k: {**kv_tree["blocks"][k], **rec_tree["blocks"][k]}
                          for k in kv_tree["blocks"]}
     return out
+
+
+# -- page-granular pool surgery (disaggregated handoff, DESIGN.md §10) ------
+#
+# The KV handoff between device groups ships a request's ALLOCATED physical
+# pages and nothing else: gather pulls exactly the page ids named by the
+# source page table out of every layer's pool (page-dim take — the payload
+# keeps the [n, page_size, ...] page layout, never a contiguous
+# [tokens, ...] cache), and scatter lands them at the destination pool's
+# imported page ids. Block leaves carry the scan-stacked layer dim in front
+# of the page dim, so the page axis is 1 there and 0 on tails.
+
+def gather_kv_pages(state, page_ids):
+    """Pull physical pages ``page_ids`` of every attention layer's pool out
+    of a PAGED decode-state tree. Returns the kv skeleton with the page dim
+    replaced by ``len(page_ids)`` — the transfer payload."""
+    kv, _ = split_kv_state(state)
+
+    def take(axis):
+        return lambda v: jnp.take(v, page_ids, axis=axis)
+
+    out = {"blocks": None,
+           "tails": [jax.tree.map(take(0), d) for d in kv["tails"]]}
+    if kv["blocks"] is not None:
+        out["blocks"] = {k: jax.tree.map(take(1), v)
+                         for k, v in kv["blocks"].items()}
+    return out
+
+
+def scatter_kv_pages(state, payload, page_ids):
+    """Write a :func:`gather_kv_pages` payload into the pool pages
+    ``page_ids`` of a PAGED decode-state tree (the import half of the
+    handoff). Out-of-range ids (the transfer engine's chunk-padding
+    sentinel) are dropped. Returns the full updated state tree; the
+    per-slot recurrent part passes through untouched."""
+    kv, rec = split_kv_state(state)
+
+    def put(axis):
+        def f(dst, src):
+            if axis == 0:
+                return dst.at[page_ids].set(src.astype(dst.dtype),
+                                            mode="drop")
+            return dst.at[:, page_ids].set(src.astype(dst.dtype),
+                                           mode="drop")
+        return f
+
+    new = {"blocks": None,
+           "tails": [jax.tree.map(put(0), d, p)
+                     for d, p in zip(kv["tails"], payload["tails"])]}
+    if kv["blocks"] is not None:
+        new["blocks"] = {k: jax.tree.map(put(1), kv["blocks"][k],
+                                         payload["blocks"][k])
+                         for k in kv["blocks"]}
+    return merge_kv_state(new, rec)
+
+
+def init_paged_prefill_state(cfg: ModelConfig, n_pages: int, page_size: int,
+                             dtype):
+    """A PAGED prefill state that DETACHES from any serving engine
+    (DESIGN.md §10): the per-layer pools plus a batch-1 recurrent carry,
+    sized independently of decode-side slot counts. This is what a
+    disaggregated PrefillWorker owns — its pool geometry is the prefill
+    group's HBM budget, not the decode engine's."""
+    return init_paged_decode_state(cfg, 1, n_pages, page_size, dtype)

@@ -2,11 +2,15 @@ from repro.serve.engine import (BatchedServer, ContinuousBatchingEngine,
                                 ContinuousProgram, ServeProgram,
                                 make_continuous_program, make_serve_program)
 from repro.serve.kv_blocks import BlockAllocator, pages_for
+from repro.serve.kv_transfer import KVTransferEngine, TransferStats
 from repro.serve.metrics import ServeMetrics
 from repro.serve.sampling import GREEDY, SamplingParams
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import (DecodeScheduler, PrefillScheduler,
+                                   Request, Scheduler)
 
 __all__ = ["BatchedServer", "ServeProgram", "make_serve_program",
            "ContinuousBatchingEngine", "ContinuousProgram",
            "make_continuous_program", "ServeMetrics", "SamplingParams",
-           "GREEDY", "Request", "Scheduler", "BlockAllocator", "pages_for"]
+           "GREEDY", "Request", "Scheduler", "PrefillScheduler",
+           "DecodeScheduler", "BlockAllocator", "pages_for",
+           "KVTransferEngine", "TransferStats"]

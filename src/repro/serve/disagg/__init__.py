@@ -1,0 +1,6 @@
+from repro.serve.disagg.controller import DisaggController, make_disagg
+from repro.serve.disagg.workers import (DecodeWorker, MigrationTicket,
+                                        PrefillWorker)
+
+__all__ = ["DisaggController", "make_disagg", "PrefillWorker",
+           "DecodeWorker", "MigrationTicket"]

@@ -17,12 +17,18 @@ Contracts:
   (line ``j`` of table slot ``p`` is position ``p * page_size + j``) and
   mask everything beyond the owner's causal frontier (DESIGN.md §9.2);
 * allocation is all-or-nothing: ``allocate``/``extend`` either hand over
-  every requested page or change nothing (no partial grabs to unwind).
+  every requested page or change nothing (no partial grabs to unwind);
+* ownership transfer (disaggregated serving, DESIGN.md §10) is a
+  three-state machine per request: live -> exported (pages owned by the
+  in-flight KV transfer, reachable by neither side's engines) ->
+  released (back on the free list once the destination pool holds the
+  data). ``check()`` counts exported pages, so exactly-once ownership is
+  asserted ACROSS the handoff, not just within one pool.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -42,6 +48,7 @@ class BlockAllocator:
         self.max_pages_per_seq = max_pages_per_seq
         self._free: List[int] = list(range(n_pages - 1, -1, -1))  # pop -> 0
         self.tables: Dict[int, List[int]] = {}  # rid -> owned page ids
+        self.exported: Dict[int, List[int]] = {}  # rid -> in-transit pages
 
     # -- capacity -----------------------------------------------------------
 
@@ -93,6 +100,43 @@ class BlockAllocator:
         the page-table reset IS the recycle)."""
         self._free.extend(self.tables.pop(rid, ()))
 
+    # -- ownership transfer (disaggregated handoff, DESIGN.md §10) ----------
+
+    def export_pages(self, rid: int) -> List[int]:
+        """Detach ``rid``'s pages from the live table for an outbound KV
+        transfer. The pages leave the table but do NOT return to the free
+        list: they are owned by the in-flight transfer (readable source
+        data, unreachable by any engine-side page table) until
+        ``release_exported`` lands them back. Returns the page ids in
+        logical (page-slot) order."""
+        assert rid not in self.exported, f"rid {rid} already exporting"
+        pages = self.tables.pop(rid)
+        self.exported[rid] = pages
+        return list(pages)
+
+    def release_exported(self, rid: int) -> None:
+        """Finish an export: the destination pool holds the data, so the
+        source pages recycle to the free list (a list move — no device
+        traffic, like ``free``)."""
+        self._free.extend(self.exported.pop(rid))
+
+    def abort_export(self, rid: int) -> None:
+        """Undo ``export_pages`` (failed transfer): the pages return to the
+        live table untouched — the source pool still holds valid KV."""
+        assert rid not in self.tables, f"rid {rid} re-allocated mid-export"
+        self.tables[rid] = self.exported.pop(rid)
+
+    def import_pages(self, rid: int, n_tokens: int) -> Optional[List[int]]:
+        """Destination half of the handoff: claim pages covering
+        ``n_tokens`` lines for the inbound request. All-or-nothing like
+        ``allocate``; returns the destination page ids in logical order
+        (the transfer engine scatters the shipped payload into them and
+        the worker rewrites the request's page table to point at them),
+        or None when the pool cannot cover the request."""
+        if not self.allocate(rid, n_tokens):
+            return None
+        return list(self.tables[rid])
+
     # -- introspection ------------------------------------------------------
 
     def covers(self, rid: int, line: int) -> bool:
@@ -112,9 +156,12 @@ class BlockAllocator:
 
     def check(self) -> None:
         """Assert the no-sharing invariant: every physical page appears
-        exactly once across the free list and all live tables."""
+        exactly once across the free list, all live tables, and all
+        in-transit exports."""
         seen = list(self._free)
         for rid, pages in self.tables.items():
+            seen.extend(pages)
+        for rid, pages in self.exported.items():
             seen.extend(pages)
         assert len(seen) == self.n_pages, \
             f"page leak: {len(seen)} tracked of {self.n_pages}"

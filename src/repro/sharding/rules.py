@@ -212,6 +212,16 @@ def paged_pool_spec(n_pages: int, mesh: Mesh, rules: ShardingRules,
     return P(_fit_axis(n_pages, "model", mesh), *([None] * (ndim - 1)))
 
 
+def transfer_payload_spec(ndim: int) -> P:
+    """Spec for a KV-handoff page payload ``[n, page_size, ...]``
+    (disaggregated serving, DESIGN.md §10): fully replicated. The gathered
+    pages are about to cross the group boundary, so pinning them to the
+    source pool's page-dim sharding would force a resharding mid-transfer;
+    chunks are a handful of pages, and the destination scatter re-lands
+    them into the decode pool's own ``paged_pool_spec`` sharding."""
+    return P(*([None] * ndim))
+
+
 def batch_spec(rules: ShardingRules, ndim: int, *, seq_axis=None) -> P:
     """Spec for token-shaped arrays [batch, seq, ...]."""
     parts = [rules.batch_axes] + [None] * (ndim - 1)

@@ -1,0 +1,385 @@
+"""Disaggregated prefill/decode serving (DESIGN.md §10).
+
+Covers the handoff contract end to end: allocator exactly-once page
+ownership ACROSS export/import (the live -> exported -> released state
+machine), the page-granular transfer path (structural pages-only
+guarantee — no contiguous cache ever materializes), stale-line
+unreachability in the destination pool after a transfer, greedy
+token-exact parity of the disagg deployment against the unified
+``ContinuousBatchingEngine`` on a Poisson trace, mid-stream decode-pool
+OOM -> preempt + re-prefill determinism under REAL sampling, the
+serving-mode planner picking the role split, and the simulated goodput
+acceptance at an A40+V100-style speed ratio.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core import simulator as sim
+from repro.core.hardware import A40, V100
+from repro.core.profiler import (ZPGroupShape, decode_step_time,
+                                 prefill_chunk_time, serve_profile)
+from repro.launch.mesh import make_mesh
+from repro.launch.serve import build_trace
+from repro.models import stack
+from repro.models.config import ModelConfig
+from repro.models.modules import Policy, RunConfig
+from repro.pytree import split_params
+from repro.serve import (BlockAllocator, ContinuousBatchingEngine, GREEDY,
+                         Request, SamplingParams, Scheduler,
+                         make_continuous_program, pages_for)
+from repro.serve.disagg import make_disagg
+
+pytestmark = pytest.mark.disagg  # CI disagg-smoke job slice
+
+RUN = RunConfig(policy=Policy(compute_dtype=jnp.float32), attn_impl="ref",
+                moe_impl="gather")
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64)
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return split_params(stack.init_model(jax.random.PRNGKey(0), TINY))[0]
+
+
+def _prompt(seed, n, vocab=64):
+    return np.random.RandomState(seed).randint(0, vocab, size=(n,)).tolist()
+
+
+def _disagg(cfg, mesh, params, **kw):
+    kw.setdefault("decode_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 6)
+    return make_disagg(cfg, mesh, RUN, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Allocator ownership transfer (host-side, no jax)
+# ---------------------------------------------------------------------------
+
+def test_allocator_exactly_once_across_export_import():
+    """The three-state ownership machine: live -> exported -> released.
+    check() holds at every step of the handoff, on both allocators."""
+    src = BlockAllocator(n_pages=6, page_size=8, max_pages_per_seq=4)
+    dst = BlockAllocator(n_pages=5, page_size=8, max_pages_per_seq=4)
+    assert src.allocate(7, 20)  # 3 pages
+    pages = src.export_pages(7)
+    assert len(pages) == 3 and 7 not in src.tables
+    src.check()  # exported pages still tracked exactly once
+    assert src.n_free == 3  # NOT freed while the transfer is in flight
+    got = dst.import_pages(7, 20)
+    assert got is not None and len(got) == 3
+    dst.check()
+    src.release_exported(7)
+    src.check()
+    assert src.n_free == 6 and not src.exported
+    # double export / double import are programming errors
+    assert dst.n_lines(7) == 24
+    dst.free(7)
+    dst.check()
+    assert dst.n_free == 5
+
+
+def test_allocator_abort_export_restores_live_table():
+    a = BlockAllocator(n_pages=4, page_size=8, max_pages_per_seq=4)
+    assert a.allocate(1, 17)
+    before = list(a.tables[1])
+    a.export_pages(1)
+    a.abort_export(1)
+    assert a.tables[1] == before
+    a.check()
+
+
+def test_import_pages_all_or_nothing():
+    dst = BlockAllocator(n_pages=2, page_size=8, max_pages_per_seq=4)
+    assert dst.import_pages(0, 24) is None  # 3 pages > pool
+    dst.check()
+    assert dst.n_free == 2 and 0 not in dst.tables
+    assert dst.import_pages(0, 16) is not None
+    dst.check()
+
+
+# ---------------------------------------------------------------------------
+# Transfer path: pages only, structurally
+# ---------------------------------------------------------------------------
+
+def test_transfer_ships_pages_only_no_contiguous_cache(mesh1, tiny_params):
+    """STRUCTURAL acceptance: every array that crosses the transfer path
+    is page-granular [k <= chunk_pages, page_size, ...] — the handoff
+    never re-materializes a contiguous [tokens, ...] cache — and exactly
+    the request's allocated pages ship, not max_len worth."""
+    max_len, ps = 32, 8
+    ctl = _disagg(TINY, mesh1, tiny_params, max_len=max_len, page_size=ps,
+                  transfer_chunk_pages=2)
+    prompt = _prompt(3, 11)  # 11 tokens -> 2 pages (NOT max_len/ps = 4)
+    res = ctl.run([Request(rid=0, prompt=prompt, max_new_tokens=4)])
+    assert len(res[0]) == 4
+    st = ctl.transfer.stats
+    assert st.n_transfers == 1
+    assert st.n_pages == pages_for(len(prompt), ps) == 2
+    assert st.shipped_shapes, "nothing crossed the transfer engine"
+    for shape in st.shipped_shapes:
+        # tails: [k, page_size, ...]; scan-stacked blocks: [L, k, ps, ...]
+        page_dims = shape if len(shape) in (2, 4) else shape[1:]
+        assert page_dims[0] <= ctl.transfer.chunk_pages, shape
+        assert page_dims[1] == ps, shape
+        assert max_len not in shape, \
+            f"contiguous max_len-sized buffer on the transfer path: {shape}"
+    ctl.prefill.allocator.check()
+    ctl.decode.allocator.check()
+    assert ctl.prefill.allocator.n_free == ctl.prefill.allocator.n_pages
+    assert ctl.decode.allocator.n_free == ctl.decode.allocator.n_pages
+
+
+def test_stale_lines_unreachable_after_transfer(mesh1, tiny_params):
+    """Serve A then B through the SAME destination pages (decode pool of
+    exactly one sequence): B's tokens must match a fresh controller even
+    though its imported pages overwrite only B's lines and A's stale KV
+    sits beyond B's frontier in the same physical pages."""
+    req_a = Request(rid=0, prompt=_prompt(21, 10), max_new_tokens=4)
+    req_b = Request(rid=1, prompt=_prompt(22, 7), max_new_tokens=6)
+    ctl = _disagg(TINY, mesh1, tiny_params, decode_slots=1, max_len=24,
+                  decode_pages=3, record_logits=True)
+    res = ctl.run([req_a, req_b])
+    assert ctl.decode.allocator.pages_in_use == 0  # B reused A's pages
+    fresh = _disagg(TINY, mesh1, tiny_params, decode_slots=1, max_len=24,
+                    decode_pages=3, record_logits=True)
+    res_f = fresh.run([Request(rid=1, prompt=req_b.prompt,
+                               max_new_tokens=6)])
+    assert res[1] == res_f[1]
+    for a, b in zip(ctl.logits[1], fresh.logits[1]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: disagg vs unified continuous batching
+# ---------------------------------------------------------------------------
+
+def test_disagg_greedy_parity_with_unified_poisson(mesh1, tiny_params):
+    """Token-exact greedy parity between the role-split deployment and the
+    unified paged ContinuousBatchingEngine on a mixed Poisson trace."""
+    trace = build_trace(seed=5, n=6, rate=0.7, prompt_len=14, gen=8,
+                        vocab=TINY.vocab_size, sampling=GREEDY)
+
+    prog = make_continuous_program(TINY, mesh1, RUN, n_slots=2, max_len=32,
+                                   page_size=8)
+    with mesh1:
+        p = jax.device_put(tiny_params, prog.param_shardings)
+    alloc = BlockAllocator(prog.n_pages, prog.page_size, prog.max_pages)
+    unified = ContinuousBatchingEngine(
+        prog, p, Scheduler(2, 32, prefill_chunk=6, allocator=alloc))
+    res_u = unified.run([Request(rid=r.rid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 arrival=r.arrival) for r in trace])
+
+    ctl = _disagg(TINY, mesh1, tiny_params)
+    res_d = ctl.run(trace)
+    assert res_d == res_u
+    assert not ctl.rejected and sorted(res_d) == [r.rid for r in trace]
+
+
+def test_disagg_moe_poisson_matches_reference(mesh1):
+    """Smoke MoE arch through the disagg deployment: every request
+    completes and matches the unbatched greedy reference."""
+    from repro.models import registry
+    cfg = registry.smoke_config(registry.get_config("qwen3-moe-30b-a3b"))
+    params0 = split_params(stack.init_model(jax.random.PRNGKey(0), cfg))[0]
+    ctl = _disagg(cfg, mesh1, params0, max_len=30, prefill_chunk=4)
+    trace = build_trace(seed=0, n=4, rate=0.6, prompt_len=16, gen=10,
+                        vocab=cfg.vocab_size, sampling=GREEDY)
+    res = ctl.run(trace)
+    assert sorted(res) == [r.rid for r in trace]
+    for r in trace:
+        seq = jnp.asarray(r.prompt, jnp.int32)[None]
+        want = []
+        for _ in range(r.max_new_tokens):
+            logits, _, _ = stack.apply_model(params0, cfg, RUN, seq)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            want.append(nxt)
+            seq = jnp.concatenate([seq, jnp.asarray([[nxt]], jnp.int32)], 1)
+        assert res[r.rid] == want, (r.rid, res[r.rid], want)
+
+
+def test_decode_pool_oom_preempts_and_reprefills(mesh1, tiny_params):
+    """Mid-stream decode-pool OOM: the newest request is preempted, its
+    decode pages free, and it REPLAYS prompt+generated through the prefill
+    worker — token-for-token equal to the ample-pool run under real
+    sampling (temperature/top-k/top-p), not just greedy."""
+    sp = SamplingParams(temperature=0.8, top_k=5, top_p=0.9)
+    reqs = [Request(rid=i, prompt=_prompt(60 + i, 9 + i),
+                    max_new_tokens=12, sampling=sp) for i in range(3)]
+    ample = _disagg(TINY, mesh1, tiny_params)
+    res_a = ample.run([Request(rid=r.rid, prompt=r.prompt,
+                               max_new_tokens=r.max_new_tokens,
+                               sampling=sp) for r in reqs])
+    assert ample.decode.sched.n_preempted == 0
+
+    tight = _disagg(TINY, mesh1, tiny_params, decode_pages=5)
+    res_t = tight.run(reqs)
+    assert tight.decode.sched.n_preempted > 0, "pool was not tight enough"
+    assert res_t == res_a
+    # a preempted request's second trip re-exports fresh prefill pages
+    assert tight.transfer.stats.n_transfers \
+        >= len(reqs) + tight.decode.sched.n_preempted
+    tight.decode.allocator.check()
+    tight.prefill.allocator.check()
+
+
+def test_disagg_per_tick_ownership_invariant(mesh1, tiny_params):
+    """Drive a tight trace tick by tick and assert exactly-once page
+    ownership on BOTH pools at every step, plus the decode-side device
+    page-table mirror matching the decode allocator."""
+    ctl = _disagg(TINY, mesh1, tiny_params, decode_pages=6)
+    for i in range(4):
+        ctl.submit(Request(rid=i, prompt=_prompt(i, 9 + i),
+                           max_new_tokens=8))
+    dec = ctl.decode
+    while ctl.has_work() or dec.any_active():
+        ctl.tick()
+        ctl.prefill.allocator.check()
+        dec.allocator.check()
+        for slot in np.nonzero(dec._active)[0]:
+            rid = int(dec._rid[slot])
+            np.testing.assert_array_equal(
+                dec._ptab[slot], dec.allocator.table(rid, dec.p.max_pages))
+        assert ctl.tick_count < 500
+    assert dec.allocator.pages_in_use == 0
+    assert ctl.prefill.allocator.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Serving-mode planner + simulator
+# ---------------------------------------------------------------------------
+
+def _sim_trace(n=40, seed=0):
+    rng = np.random.RandomState(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(0.25))
+        out.append(sim.ServeRequest(arrival=t,
+                                    prompt=int(rng.randint(512, 4096)),
+                                    gen=int(rng.randint(64, 256))))
+    return out
+
+
+def test_serve_profile_matches_fig2_asymmetry():
+    """The serving profile reproduces the paper's asymmetry: the newer
+    class wins big on (attention-heavy) prefill, while decode — memory
+    bound — is close, so the split prefill->new / decode->old follows."""
+    from repro.models import registry
+    cfg = registry.get_config("qwen3-moe-30b-a3b")
+    long_ctx = 16384
+    pre_a = prefill_chunk_time(cfg, 256, long_ctx, A40)
+    pre_v = prefill_chunk_time(cfg, 256, long_ctx, V100)
+    assert pre_v / pre_a > 1.5  # V100 lacks flash: attention gap grows
+    dec_a = decode_step_time(cfg, 8, 2048, A40)
+    dec_v = decode_step_time(cfg, 8, 2048, V100)
+    assert dec_v / dec_a < 1.3  # decode stays efficient on the old class
+    prof = serve_profile(cfg, A40, V100, chunk=256, ctx=long_ctx,
+                         decode_batch=8)
+    assert prof.t_page > 0 and prof.t_prefill_chunk_attn == pre_a
+
+
+def test_plan_disagg_group_picks_role_split_and_goodput():
+    """ACCEPTANCE: at an A40+V100 speed ratio the planner assigns prefill
+    to the attention-strong class, decode to the expert class, and the
+    simulated goodput of the split beats the unified lockstep engine by
+    >= 1.2x on a mixed Poisson load (even though the unified baseline
+    keeps BOTH devices' HBM worth of decode slots)."""
+    from repro.models import registry
+    cfg = registry.get_config("qwen3-moe-30b-a3b")
+    zp = ZPGroupShape(M=1, N=1, attn_class=A40, exp_class=V100)
+    plan = planner.plan_disagg_group(cfg, zp, _sim_trace(),
+                                     prefill_chunk=256, ctx=2048,
+                                     slots_per_device=8)
+    assert (plan.prefill_attn, plan.prefill_exp) == (1, 0)
+    assert (plan.decode_attn, plan.decode_exp) == (0, 1)
+    assert plan.predicted.n_finished == 40
+    assert plan.goodput_ratio >= 1.2
+    assert plan.predicted.ttft_p50 < plan.predicted_unified.ttft_p50
+
+
+def test_serve_simulator_conservation_and_monotonicity():
+    """Sanity invariants: every request finishes exactly once; slower
+    decode or prefill never raises goodput; the handoff cost only hurts."""
+    trace = _sim_trace(20, seed=1)
+    base = sim.simulate_serve_trace(trace, prefill_chunk=256,
+                                    t_prefill_chunk=0.05,
+                                    t_decode_step=0.03, decode_slots=8)
+    assert base.n_finished == 20 and base.goodput > 0
+    slower = sim.simulate_serve_trace(trace, prefill_chunk=256,
+                                      t_prefill_chunk=0.05,
+                                      t_decode_step=0.06, decode_slots=8)
+    assert slower.goodput <= base.goodput
+    shipped = sim.simulate_serve_trace(trace, prefill_chunk=256,
+                                       t_prefill_chunk=0.05,
+                                       t_decode_step=0.03, decode_slots=8,
+                                       t_handoff=0.5)
+    assert shipped.ttft_mean >= base.ttft_mean
+    uni = sim.simulate_serve_trace(trace, prefill_chunk=256,
+                                   t_prefill_chunk=0.05,
+                                   t_decode_step=0.03, decode_slots=8,
+                                   colocated=True)
+    assert uni.n_finished == 20
+
+
+# ---------------------------------------------------------------------------
+# Dense ring-cache chunked prefill (pre-existing ROADMAP bug, fixed here)
+# ---------------------------------------------------------------------------
+
+def test_dense_ring_chunked_prefill_matches_whole_at_ring_crossings():
+    """REGRESSION (ROADMAP): a prefill chunk crossing the ring edge used
+    to evict lines earlier queries of the SAME chunk still needed
+    (write-then-attend). Now attention reads the pre-write ring plus the
+    fresh chunk keys, so dense chunked == whole prefill at every
+    ring-crossing chunking, including chunks larger than the ring."""
+    from repro.models.config import LayerSpec
+    cfg = ModelConfig(name="tiny-win", family="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=64,
+                      pattern=(LayerSpec(mixer="local_attn"),), window=8)
+    params = split_params(stack.init_model(jax.random.PRNGKey(2), cfg))[0]
+    prompt = jnp.asarray(_prompt(7, 21), jnp.int32)[None]
+    whole, _, _ = stack.apply_model(params, cfg, RUN, prompt)
+    whole = whole[:, -1]
+
+    def chunked(chunks):
+        state = stack.init_decode_state(cfg, 1, 32, jnp.float32)
+        off = 0
+        for c in chunks:
+            logits, state, _ = stack.apply_model(
+                params, cfg, RUN, prompt[:, off:off + c],
+                decode_state=state, cache_index=jnp.asarray(off, jnp.int32),
+                attend_to_cache=True)
+            off += c
+        return logits[:, -1]
+
+    # ring C = window = 8; [6,6,6,3] crosses the edge mid-chunk, [13,8]
+    # exercises the S >= C roll path with a non-empty cache.
+    for chunks in ([6, 6, 6, 3], [5, 5, 5, 5, 1], [13, 8]):
+        got = chunked(chunks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(whole),
+                                   rtol=2e-4, atol=2e-4, err_msg=str(chunks))
+
+
+def test_disagg_driver_exits_nonzero_on_unfinished(monkeypatch):
+    """launch/serve.py --disagg must FAIL (non-zero) when any request is
+    dropped or unfinished, so the CI disagg-smoke step actually gates."""
+    from repro.launch import serve as serve_mod
+    monkeypatch.setattr(serve_mod, "serve_arch",
+                        lambda arch, args: {"ok": False})
+    assert serve_mod.main(["--smoke", "--disagg"]) == 1
+    monkeypatch.setattr(serve_mod, "serve_arch",
+                        lambda arch, args: {"ok": True})
+    assert serve_mod.main(["--smoke", "--disagg"]) == 0
