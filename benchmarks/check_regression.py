@@ -8,6 +8,8 @@ hard.
 Gated metrics (higher is better):
   serve: paged.slot_ratio_best           (slots at fixed HBM vs reservation)
   serve: disagg.goodput_ratio_sim        (simulated disagg vs unified goodput)
+  serve: ep.placement_ratio_sim          (simulated uniform vs planned EP
+                                          placement makespan on a Zipf trace)
   zebra: gate.speedup                    (simulated overlapped vs serialized)
 
 Usage:
@@ -32,10 +34,12 @@ BENCHES = {
     "serve": {
         "file": "BENCH_serve.json",
         "simulated": ["paged.slot_ratio_best",
-                      "disagg.goodput_ratio_sim"],
+                      "disagg.goodput_ratio_sim",
+                      "ep.placement_ratio_sim"],
         "measured": ["results.qwen3-moe-30b-a3b.tokens_per_s",
                      "results.llama3.2-3b.tokens_per_s",
-                     "disagg.measured.tokens_per_s"],
+                     "disagg.measured.tokens_per_s",
+                     "ep.measured.tokens_per_s"],
     },
     "zebra": {
         "file": "BENCH_zebra.json",

@@ -149,6 +149,51 @@ def _clamp_total(O: List[int], n_min: int, n_max: int, n2: int,
     return O
 
 
+# ---------------------------------------------------------------------------
+# Serving-mode extension: expert placement across a decode group (§11)
+# ---------------------------------------------------------------------------
+
+def round_robin_placement(n_experts: int, ep_size: int) -> tuple:
+    """Uniform baseline placement: expert e -> shard e % ep_size. Returns
+    a tuple of per-shard expert-id tuples with equal cardinality."""
+    if ep_size < 1 or n_experts % ep_size:
+        raise ValueError(f"ep_size {ep_size} must divide "
+                         f"n_experts {n_experts}")
+    return tuple(tuple(range(j, n_experts, ep_size))
+                 for j in range(ep_size))
+
+
+def asym_ea_place(load, speeds, cap: int) -> tuple:
+    """Heterogeneity-aware expert placement: greedy LPT with fixed shard
+    cardinality — the serving-mode analogue of Algorithm 1's offload
+    sweep. ``load[e]`` is expert e's cost mass (for decode: its expected
+    weight-read activation at the target batch), ``speeds[j]`` shard j's
+    relative service rate (HBM bandwidth for the weight-read-bound decode
+    regime), ``cap`` the exact experts per shard (EP layout needs equal
+    shards). Experts are assigned heaviest-first to the feasible shard
+    minimizing its resulting finish time (load + l) / speed, which lands
+    hot experts on the strong class and cold ones on the weak class."""
+    if len(load) != cap * len(speeds):
+        raise ValueError(f"{len(load)} experts != {len(speeds)} shards "
+                         f"x cap {cap}")
+    if any(s <= 0 for s in speeds):
+        raise ValueError("speeds must be positive")
+    order = sorted(range(len(load)), key=lambda e: (-load[e], e))
+    bins = [[] for _ in speeds]
+    mass = [0.0] * len(speeds)
+    for e in order:
+        best, best_t = None, None
+        for j, s in enumerate(speeds):
+            if len(bins[j]) >= cap:
+                continue
+            t = (mass[j] + load[e]) / s
+            if best_t is None or t < best_t:
+                best, best_t = j, t
+        bins[best].append(e)
+        mass[best] += load[e]
+    return tuple(tuple(sorted(b)) for b in bins)
+
+
 def apply_offload_to_times(times: LayerTimes, offload_l: int, n: int, N: int,
                            M: int) -> tuple:
     """Per-layer durations after offloading o_l experts per expert GPU.

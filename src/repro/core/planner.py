@@ -205,6 +205,107 @@ def plan_disagg_group(cfg: ModelConfig, zp: ZPGroupShape, trace, *,
     return best
 
 
+# ---------------------------------------------------------------------------
+# EP decode-group placement planning (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EPDecodePlan:
+    """Heterogeneity-aware expert placement for an EP-sharded decode
+    group: which experts live on which device, plus the analytical and
+    simulated evidence for the pick."""
+
+    shard_classes: tuple
+    hist: tuple
+    placement: tuple          # asym_ea_place under the routing histogram
+    uniform: tuple            # round-robin baseline
+    t_step_planned: float
+    t_step_uniform: float
+    predicted: sim.ServeSimResult          # trace under planned placement
+    predicted_uniform: sim.ServeSimResult  # same trace, round-robin
+    expert_bytes_total: int
+    expert_bytes_per_device: int
+
+    @property
+    def ep_size(self) -> int:
+        return len(self.shard_classes)
+
+    @property
+    def placement_ratio(self) -> float:
+        """Uniform / planned decode-step time (>1: planning won)."""
+        return self.t_step_uniform / self.t_step_planned \
+            if self.t_step_planned > 0 else float("inf")
+
+    @property
+    def placement_ratio_sim(self) -> float:
+        """Uniform / planned simulated trace makespan (>1: planning won)."""
+        p = self.predicted.makespan
+        return self.predicted_uniform.makespan / p if p > 0 else float("inf")
+
+    @property
+    def hbm_reduction(self) -> float:
+        """Replicated / per-device expert-weight residency (~ep_size)."""
+        return self.expert_bytes_total / max(self.expert_bytes_per_device, 1)
+
+
+def plan_ep_decode_group(cfg: ModelConfig, shard_classes: Sequence,
+                         hist: Sequence[float], trace, *,
+                         decode_batch: int = 8, ctx: int = 2048,
+                         prefill_chunk: int = 256, n_chunks: int = 1,
+                         link_bw: Optional[float] = None) -> EPDecodePlan:
+    """Asym-EA for serving (DESIGN.md §11): place experts across a
+    heterogeneous decode group under an observed routing histogram.
+
+    Decode is weight-read bound, so an expert's load is its probability of
+    being ACTIVATED by a batched step — ``1-(1-p_e)^(B*k)`` — and a shard's
+    speed for that load is its class's HBM bandwidth. Greedy LPT
+    (asym_ea_place) sends hot experts to the high-bandwidth class; the
+    round-robin baseline and the planned placement are then priced by
+    ``profiler.ep_decode_step_time`` and replayed through
+    ``simulate_serve_trace`` on the same trace, so ``placement_ratio_sim``
+    carries end-to-end (not just per-step) evidence."""
+    from repro.core.asym_ea import asym_ea_place, round_robin_placement
+    if not cfg.is_moe:
+        raise ValueError("EP decode planning needs a MoE config")
+    ep_size = len(shard_classes)
+    if ep_size < 1 or cfg.n_experts % ep_size:
+        raise ValueError(
+            f"ep_size={ep_size} must divide n_experts={cfg.n_experts}")
+    tot = sum(hist) or 1.0
+    p = [x / tot for x in hist]
+    bk = decode_batch * max(cfg.top_k, 1)
+    loads = [1.0 - (1.0 - pe) ** bk for pe in p]
+    placement = asym_ea_place(loads, [c.hbm_bw for c in shard_classes],
+                              cfg.n_experts // ep_size)
+    uniform = round_robin_placement(cfg.n_experts, ep_size)
+
+    def step_time(pl):
+        return P.ep_decode_step_time(cfg, decode_batch, ctx, pl,
+                                     shard_classes, p, n_chunks=n_chunks,
+                                     link_bw=link_bw)
+
+    t_planned, t_uniform = step_time(placement), step_time(uniform)
+    # Shared prefill clock: both deployments prefill identically (EP only
+    # reshapes the decode-time expert hop), so any consistent chunk time
+    # keeps the simulated comparison placement-only.
+    t_chunk = max(P.prefill_chunk_time(cfg, prefill_chunk, ctx, c)
+                  for c in shard_classes)
+
+    def replay(t_step):
+        return sim.simulate_serve_trace(
+            trace, prefill_chunk=prefill_chunk, t_prefill_chunk=t_chunk,
+            t_decode_step=t_step, decode_slots=decode_batch, colocated=True)
+
+    total = P.expert_param_bytes(cfg)
+    return EPDecodePlan(
+        shard_classes=tuple(shard_classes), hist=tuple(p),
+        placement=placement, uniform=uniform,
+        t_step_planned=t_planned, t_step_uniform=t_uniform,
+        predicted=replay(t_planned), predicted_uniform=replay(t_uniform),
+        expert_bytes_total=total,
+        expert_bytes_per_device=-(-total // ep_size))
+
+
 def replan(cfg: ModelConfig, plan: ZebraPlan, global_batch: int,
            seq_len: int, *, lost_attn: int = 0, lost_exp: int = 0,
            slow_factor: float = 1.0) -> ZebraPlan:

@@ -243,6 +243,75 @@ def decode_step_time(cfg: ModelConfig, batch: int, ctx: int,
     return t
 
 
+def ep_decode_step_time(cfg: ModelConfig, batch: int, ctx: int,
+                        placement, shard_classes, hist, *,
+                        n_chunks: int = 1,
+                        link_bw: Optional[float] = None) -> float:
+    """One EP-sharded batched decode step (DESIGN.md §11).
+
+    The attention / router / head legs run replicated, so the slowest
+    class present paces them. The expert hop is the max over shards of
+    each shard's time for ITS experts under the observed routing
+    distribution ``hist``: expected token copies give the FLOP leg and
+    expected ACTIVATED experts give the weight-read leg — decode is
+    weight-read bound (serve_ffn_time's regime), and a hot expert is read
+    every step while a cold one is rarely touched, which is the lever
+    heterogeneity-aware placement pulls (hot -> high-HBM-bandwidth class).
+    With ``link_bw`` the dispatch+combine all-to-alls price only their
+    EXPOSED residue after ``n_chunks`` double-buffered capacity chunks
+    (simulator.exposed_comm), mirroring the zebra training cost model.
+    """
+    from repro.core.simulator import exposed_comm  # lazy: avoid cycle
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k = max(cfg.top_k, 1)
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    f = cfg.d_ff_expert
+    tot = sum(hist) or 1.0
+    p = [x / tot for x in hist]
+    # P(expert activated by >= 1 of the batch*k routed copies).
+    a = [1.0 - (1.0 - pe) ** (batch * k) for pe in p]
+
+    def attn_leg(dev):
+        proj_flops = 2 * batch * d * (2 * h * hd + 2 * kh * hd)
+        proj_bytes = BYTES * d * (2 * h * hd + 2 * kh * hd)
+        t = gemm_time(proj_flops, proj_bytes, dev)
+        core_flops = 2 * 2 * batch * ctx * h * hd
+        kv_bytes = batch * ctx * 2 * kh * hd * BYTES
+        eff = dev.attn_eff if dev.has_flash_attention else dev.attn_eff_nofa
+        t += max(core_flops / (dev.peak_flops * eff), kv_bytes / dev.hbm_bw)
+        t += gemm_time(2 * batch * d * cfg.n_experts,
+                       BYTES * d * cfg.n_experts, dev)
+        return t
+
+    t_attn = max(attn_leg(c) for c in shard_classes)
+    t_exp = 0.0
+    for experts, dev in zip(placement, shard_classes):
+        copies = sum(p[e] for e in experts) * batch * k
+        n_act = sum(a[e] for e in experts)
+        t_exp = max(t_exp, gemm_time(2 * copies * d * f * n_mats,
+                                     BYTES * n_act * d * f * n_mats, dev))
+    t_comm = 0.0
+    if link_bw:
+        ep_size = max(len(placement), 1)
+        t_wire = a2a_time(cfg, batch, link_bw, ep_size, ep_size)
+        t_comm = 2 * exposed_comm(t_wire, t_exp, n_chunks)
+    t = cfg.n_layers * (t_attn + t_exp + t_comm)
+    t += max(gemm_time(2 * batch * d * cfg.vocab_size,
+                       BYTES * d * cfg.vocab_size, c)
+             for c in shard_classes)
+    return t
+
+
+def expert_param_bytes(cfg: ModelConfig) -> int:
+    """Expert weight residency (wi_gate+wi_up+wo, every layer, bf16) —
+    what replicated serving charges EVERY decode device and EP sharding
+    divides by ep_size (assumes every layer is MoE, like the serve-mode
+    step-time models above)."""
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    return cfg.n_layers * cfg.n_experts * n_mats * cfg.d_model \
+        * cfg.d_ff_expert * BYTES
+
+
 def kv_page_bytes(cfg: ModelConfig, page_size: int) -> int:
     """Payload bytes of one physical KV page across every attention
     layer's pools (k + v in bf16 plus the int32 position pool) — what one

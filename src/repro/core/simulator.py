@@ -274,6 +274,29 @@ class ServeSimResult:
     n_finished: int
 
 
+def zipf_poisson_trace(seed: int, n: int, rate: float, prompt: int,
+                       gen: int, n_experts: int, zipf_s: float = 1.2):
+    """Skewed serving workload for EP-placement planning (DESIGN.md §11):
+    Poisson arrivals with fixed prompt/gen lengths, plus a Zipf routing
+    histogram over a seed-shuffled expert order (rank-r expert gets mass
+    1/(r+1)^s) — the distribution the placement planner consumes. Returns
+    ``(requests, hist)`` with ``hist`` a normalized n_experts-tuple. Pure
+    python so the simulator stays dependency-free."""
+    import random
+    rng = random.Random(seed)
+    reqs, t = [], 0.0
+    for _ in range(n):
+        t += rng.expovariate(rate)
+        reqs.append(ServeRequest(arrival=t, prompt=prompt, gen=gen))
+    order = list(range(n_experts))
+    rng.shuffle(order)
+    w = [0.0] * n_experts
+    for r, e in enumerate(order):
+        w[e] = 1.0 / (r + 1) ** zipf_s
+    tot = sum(w)
+    return reqs, tuple(x / tot for x in w)
+
+
 def _percentile(xs, q):
     s = sorted(xs)
     return s[min(len(s) - 1, int(round(q * (len(s) - 1))))] if s else 0.0

@@ -481,7 +481,8 @@ def moe_ffn_group_dense(x_sorted, wi_gate, wi_up, wo, group_sizes, *,
 def moe_ffn(x_sorted, wi_gate, wi_up, wo, group_sizes, *,
             row_scales=None, block_m: int = 128, block_k: int = 128,
             block_n: int = 128, interpret: bool | None = None,
-            use_kernel: bool | None = None, small_m: bool | None = None):
+            use_kernel: bool | None = None, small_m: bool | None = None,
+            ep_size: int = 1):
     """Whole GLU expert FFN over expert-sorted rows, packed once.
 
     x_sorted: [M, d] rows sorted by group (M == sum(group_sizes));
@@ -501,11 +502,18 @@ def moe_ffn(x_sorted, wi_gate, wi_up, wo, group_sizes, *,
     at mixtral-w1/4 ratios the crossover sits between 128 and 256 rows
     (BENCH_moe_ffn.json `small_m`). Decode shapes (M = slots · top_k) sit
     far below it.
+
+    ep_size: number of expert-parallel shards the G groups are spread
+    over. Under EP each shard computes only G/ep_size groups, so the
+    auto-route crossover is evaluated at the PER-SHARD group count — at
+    the global G the pad-row cost ratio is over-estimated by ~ep_size and
+    sharded decode would always take the packed path.
     """
     M, _ = x_sorted.shape
     G = wi_gate.shape[0]
     if small_m is None:
-        small_m = M * (G - 1) <= G * block_m
+        Gs = max(G // max(int(ep_size), 1), 1)
+        small_m = M * (Gs - 1) <= Gs * block_m
     if small_m:
         return moe_ffn_group_dense(x_sorted, wi_gate, wi_up, wo,
                                    group_sizes, row_scales=row_scales)
@@ -533,7 +541,8 @@ def chunk_capacity(C: int, n_chunks: int) -> tuple:
 def moe_ffn_packed(buf, wi_gate, wi_up, wo, *, block_m: int | None = None,
                    block_k: int = 128, block_n: int = 128,
                    interpret: bool | None = None,
-                   use_kernel: bool | None = None):
+                   use_kernel: bool | None = None,
+                   small_m: bool | None = False, ep_size: int = 1):
     """moe_ffn for ALREADY capacity-packed [E, C, d] buffers (the zebra
     engines' dispatch layout): every expert owns exactly C contiguous rows,
     so the buffer IS the packed domain — no sort, no pack scatter, no
@@ -541,13 +550,39 @@ def moe_ffn_packed(buf, wi_gate, wi_up, wo, *, block_m: int | None = None,
     """
     return moe_ffn_packed_multi(
         [buf], [wi_gate], [wi_up], [wo], block_m=block_m, block_k=block_k,
-        block_n=block_n, interpret=interpret, use_kernel=use_kernel)[0]
+        block_n=block_n, interpret=interpret, use_kernel=use_kernel,
+        small_m=small_m, ep_size=ep_size)[0]
+
+
+def _packed_group_dense(bufs, wi_gates, wi_ups, wos):
+    """Group-dense evaluation of capacity-packed segments (small-M route).
+
+    Flattens every [G_i, C_i, d] segment to rows with UNIFORM group sizes
+    (capacity C_i per group) and evaluates via `moe_ffn_group_dense` —
+    autodiff-native, no custom_vjp, no tile padding. Returns the same
+    list-of-[G_i, C_i, d] as the packed pipeline."""
+    d = bufs[0].shape[-1]
+    rows = [b.reshape(-1, d) for b in bufs]
+    lhs = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+    sizes = jnp.concatenate(
+        [jnp.full((b.shape[0],), b.shape[1], jnp.int32) for b in bufs])
+    wg = wi_gates[0] if len(bufs) == 1 else jnp.concatenate(wi_gates, axis=0)
+    wu = wi_ups[0] if len(bufs) == 1 else jnp.concatenate(wi_ups, axis=0)
+    wo_ = wos[0] if len(bufs) == 1 else jnp.concatenate(wos, axis=0)
+    out = moe_ffn_group_dense(lhs, wg, wu, wo_, sizes)
+    outs, off = [], 0
+    for b in bufs:
+        g, c = b.shape[0], b.shape[1]
+        outs.append(out[off:off + g * c].reshape(g, c, d))
+        off += g * c
+    return outs
 
 
 def moe_ffn_packed_multi(bufs, wi_gates, wi_ups, wos, *,
                          block_m: int | None = None, block_k: int = 128,
                          block_n: int = 128, interpret: bool | None = None,
-                         use_kernel: bool | None = None):
+                         use_kernel: bool | None = None,
+                         small_m: bool | None = False, ep_size: int = 1):
     """ONE grouped-GEMM GLU FFN over SEVERAL capacity-packed buffers.
 
     bufs[i]: [G_i, C_i, d] (capacities may differ per segment);
@@ -562,10 +597,25 @@ def moe_ffn_packed_multi(bufs, wi_gates, wi_ups, wos, *,
     engines use this to run local (attention-side offloaded / replicated)
     and remote experts in one call instead of two fragmented GEMM pipelines
     (DESIGN.md §8). Returns a list of [G_i, C_i, d] outputs.
+
+    small_m: None auto-routes to the group-dense evaluation
+    (`_packed_group_dense`) using the same crossover as `moe_ffn` —
+    total rows vs per-shard group count, with `ep_size` discounting the
+    group count the way `moe_ffn` does. The EP decode hop passes
+    small_m=None so tiny decode buffers skip the tile-padded pipeline;
+    the default (False) preserves the training engines' recompute-backward
+    custom_vjp path unconditionally.
     """
     assert len(bufs) == len(wi_gates) == len(wi_ups) == len(wos)
     assert bufs, "need at least one packed segment"
     d = bufs[0].shape[-1]
+    if small_m is None:
+        G_tot = sum(b.shape[0] for b in bufs)
+        n_rows = sum(b.shape[0] * b.shape[1] for b in bufs)
+        Gs = max(G_tot // max(int(ep_size), 1), 1)
+        small_m = n_rows * (Gs - 1) <= Gs * (block_m or 128)
+    if small_m:
+        return _packed_group_dense(bufs, wi_gates, wi_ups, wos)
     interpret = _interpret_default() if interpret is None else interpret
     use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
     # Engines round capacities to multiples of 8; pad odd capacities up

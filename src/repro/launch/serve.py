@@ -19,8 +19,19 @@ block-granular pool admission, page-table decode, preemption on pool OOM.
     PYTHONPATH=src python -m repro.launch.serve --smoke --disagg \
         --page-size 16 --pool-pages 12
 
+``--ep-size N`` shards MoE expert weights across N devices of the mesh
+``model`` axis for the decode-time expert hop (DESIGN.md §11); dense
+archs ignore it. ``--ep-placement planned`` turns on online
+heterogeneity-aware re-placement from the observed routing EMA:
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke \
+        --arch qwen3-moe-30b-a3b --mesh 1x2 --ep-size 2 \
+        --ep-placement planned
+
 Exit status: non-zero when any request is rejected, dropped, or left
-unfinished — the CI serve-smoke and disagg-smoke steps gate on it.
+unfinished — the CI serve-smoke, disagg-smoke and ep-smoke steps gate on
+it. An ``--ep-size`` that does not divide the expert count (or exceed
+the mesh axis) is REJECTED with a non-zero exit, never truncated.
 """
 
 from __future__ import annotations
@@ -124,6 +135,27 @@ def serve_arch(arch: str, args) -> dict:
                   + (" <done>" if fin else ""))
 
     key = jax.random.PRNGKey(0)
+    ep = None
+    if getattr(args, "ep_size", 0):
+        if cfg.is_moe:
+            from repro.serve.ep_decode import (EPDecodeConfig,
+                                               validate_ep_config)
+            planned = args.ep_placement == "planned"
+            ep = EPDecodeConfig(ep_size=args.ep_size, n_chunks=2,
+                                rebalance_every=8 if planned else 0,
+                                drift_threshold=0.05)
+            try:
+                validate_ep_config(cfg, mesh, ep)
+            except ValueError as e:
+                # Rejected, never truncated: a non-dividing --ep-size (or
+                # a mesh without the EP axis) fails the run outright.
+                print(f"[serve] FAIL arch={cfg.name}: bad EP config: {e}",
+                      file=sys.stderr)
+                return {"ok": False, "n_requests": 0,
+                        "ep_error": str(e)}
+        else:
+            print(f"[serve] arch={cfg.name} is dense; --ep-size ignored")
+
     if getattr(args, "disagg", False):
         # Disaggregated prefill/decode deployment (DESIGN.md §10): the
         # decode pool takes --pool-pages, the prefill pool
@@ -137,7 +169,7 @@ def serve_arch(arch: str, args) -> dict:
             prefill_pages=args.prefill_pool_pages,
             prefill_chunk=args.prefill_chunk,
             token_budget=args.prefill_budget, seed=args.seed,
-            metrics=metrics, on_token=stream)
+            metrics=metrics, on_token=stream, ep=ep)
         t0 = time.perf_counter()
         results = engine.run(trace)
         dt = time.perf_counter() - t0
@@ -148,11 +180,7 @@ def serve_arch(arch: str, args) -> dict:
                             n_pages=args.pool_pages)
         program = make_continuous_program(cfg, mesh, run, n_slots=args.slots,
                                           max_len=max_len, seed=args.seed,
-                                          **paged_kw)
-        with mesh:
-            params = jax.jit(
-                lambda: split_params(stack.init_model(key, cfg))[0],
-                out_shardings=program.param_shardings)()
+                                          ep=ep, **paged_kw)
         allocator = None
         if args.paged:
             allocator = BlockAllocator(program.n_pages, program.page_size,
@@ -161,8 +189,22 @@ def serve_arch(arch: str, args) -> dict:
                           prefill_chunk=args.prefill_chunk,
                           token_budget=args.prefill_budget,
                           allocator=allocator)
-        engine = ContinuousBatchingEngine(program, params, sched,
-                                          metrics=metrics, on_token=stream)
+        if ep is not None:
+            # The EP engine places (permutes + shards) the replicated
+            # init params itself, so no out_shardings jit here.
+            from repro.serve.ep_decode import EPContinuousBatchingEngine
+            params = split_params(stack.init_model(key, cfg))[0]
+            engine = EPContinuousBatchingEngine(program, params, sched,
+                                                metrics=metrics,
+                                                on_token=stream)
+        else:
+            with mesh:
+                params = jax.jit(
+                    lambda: split_params(stack.init_model(key, cfg))[0],
+                    out_shardings=program.param_shardings)()
+            engine = ContinuousBatchingEngine(program, params, sched,
+                                              metrics=metrics,
+                                              on_token=stream)
         t0 = time.perf_counter()
         results = engine.run(trace)
         dt = time.perf_counter() - t0
@@ -207,6 +249,17 @@ def serve_arch(arch: str, args) -> dict:
         print(f"[serve] arch={cfg.name} paged: page_size={args.page_size} "
               f"pool={program.n_pages} peak={eng_occ['page_peak']} "
               f"preempted={eng_occ['n_preempted']}")
+    if ep is not None and not getattr(args, "disagg", False):
+        s["ep"] = {
+            "ep_size": ep.ep_size,
+            "placement_mode": args.ep_placement,
+            "n_rebalances": engine.n_rebalances,
+            "ema_updates": engine.ema.n_updates,
+        }
+        print(f"[serve] arch={cfg.name} ep: ep_size={ep.ep_size} "
+              f"placement={args.ep_placement} "
+              f"rebalances={engine.n_rebalances} "
+              f"ema_updates={engine.ema.n_updates}")
     # Gate: every traced request must finish with its full token budget
     # spent (traces carry no EOS) and nothing may be rejected or dropped.
     # Rejected rids never reach metrics (submit raises before on_submit);
@@ -266,6 +319,16 @@ def main(argv=None):
     ap.add_argument("--prefill-pool-pages", type=int, default=None,
                     help="prefill-side pool size in pages (disagg mode; "
                          "default: two max-length sequences)")
+    ap.add_argument("--ep-size", type=int, default=0,
+                    help="shard MoE expert weights across this many "
+                         "devices of the mesh 'model' axis for decode "
+                         "(DESIGN.md §11); must divide the expert count — "
+                         "rejected otherwise, never truncated; 0 = off")
+    ap.add_argument("--ep-placement", choices=("uniform", "planned"),
+                    default="uniform",
+                    help="uniform: static round-robin expert placement; "
+                         "planned: online heterogeneity-aware re-placement "
+                         "from the observed routing EMA")
     args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else \

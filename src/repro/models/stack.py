@@ -24,13 +24,21 @@ from repro.pytree import Param, fan_in_init, merge_params, split_params
 AUX_KEYS = ("moe_aux_loss", "moe_z_loss")
 
 
-def _zero_aux():
-    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+def _zero_aux(extras=()):
+    """Zero aux accumulator. ``extras`` adds fixed-shape keys — e.g. the
+    serve EP engine's per-expert routing counts — so the scan carry keeps a
+    static tree while layers contribute vector-valued aux entries."""
+    z = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    for k, shape in extras:
+        z[k] = jnp.zeros(shape, jnp.float32)
+    return z
 
 
 def _acc_aux(acc, aux):
+    # iterate the ACCUMULATOR's keys: layers may emit extra aux entries
+    # (they are dropped unless the caller registered them via extras)
     return {k: acc[k] + jnp.asarray(aux.get(k, 0.0), jnp.float32)
-            for k in AUX_KEYS}
+            for k in acc}
 
 
 # ---------------------------------------------------------------------------
@@ -97,15 +105,26 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
                  encoder_out=None, encoder_positions=None, cache_index=None,
                  layer_override: Optional[Callable] = None,
                  moe_override: Optional[Callable] = None,
-                 attend_to_cache: bool = False, page_table=None):
-    """Run the scanned pattern stack + tail. Returns (x, new_states, aux)."""
-    aux = _zero_aux()
+                 attend_to_cache: bool = False, page_table=None,
+                 aux_extras=(), layer_aux: bool = False):
+    """Run the scanned pattern stack + tail. Returns (x, new_states, aux).
+
+    ``aux_extras`` registers extra fixed-shape aux keys (``(key, shape)``
+    pairs) accumulated across layers alongside the aux losses. With
+    ``layer_aux`` the returned aux dict additionally carries
+    ``aux["per_layer"]``: each key stacked per layer row (scan steps first
+    — pattern positions within a block summed — then one row per tail),
+    collected through the scan's per-step outputs so the carry stays
+    fixed-shape. The serve EP engine uses this for per-layer routing
+    histograms."""
+    aux = _zero_aux(aux_extras)
     decode = states is not None
+    layer_rows = None
 
     def one_block(x, block_params, block_states):
         """Apply all pattern positions once. Returns (x, new_states, aux)."""
         new_states = {}
-        a = _zero_aux()
+        a = _zero_aux(aux_extras)
         # sequence-parallel layer boundary (no-op unless act rule 'seq' set)
         x = run.constrain(x, ("batch", "seq", None))
         for pos, spec in enumerate(pattern):
@@ -133,7 +152,8 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
             x, aux_acc = carry
             bp, bs = xs
             x, ns, a = one_block(x, bp, bs)
-            return (x, _acc_aux(aux_acc, a)), ns
+            ys = (ns, a) if layer_aux else ns
+            return (x, _acc_aux(aux_acc, a)), ys
 
         if run.remat != "none" and not decode:
             policy = None
@@ -144,21 +164,32 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
 
         block_states = states.get("blocks") if decode else None
         if cfg.unroll:
-            new_bs = []
+            new_bs, rows = [], []
             carry = (x, aux)
             n_rep = cfg.n_pattern_repeats
             for i in range(n_rep):
                 bp = jax.tree.map(lambda v: v[i], blocks)
                 bs = (jax.tree.map(lambda v: v[i], block_states)
                       if block_states is not None else None)
-                carry, ns = scan_body(carry, (bp, bs))
+                carry, ys = scan_body(carry, (bp, bs))
+                if layer_aux:
+                    ns, a_i = ys
+                    rows.append(a_i)
+                else:
+                    ns = ys
                 new_bs.append(ns)
             (x, aux) = carry
+            if layer_aux:
+                layer_rows = jax.tree.map(lambda *vs: jnp.stack(vs), *rows)
             new_block_states = (jax.tree.map(
                 lambda *vs: jnp.stack(vs), *new_bs) if decode else None)
         else:
-            (x, aux), new_block_states = jax.lax.scan(
+            (x, aux), ys = jax.lax.scan(
                 scan_body, (x, aux), (blocks, block_states))
+            if layer_aux:
+                new_block_states, layer_rows = ys
+            else:
+                new_block_states = ys
     else:
         new_block_states = None
 
@@ -171,11 +202,19 @@ def _apply_stack(blocks, tails, cfg: ModelConfig, run: RunConfig, pattern,
                                     moe_override, attend_to_cache,
                                     page_table)
         aux = _acc_aux(aux, a)
+        if layer_aux:
+            row = jax.tree.map(lambda v: v[None],
+                               _acc_aux(_zero_aux(aux_extras), a))
+            layer_rows = row if layer_rows is None else jax.tree.map(
+                lambda s, r: jnp.concatenate([s, r], axis=0),
+                layer_rows, row)
         new_tail_states.append(ns)
 
     new_states = None
     if decode:
         new_states = {"blocks": new_block_states, "tails": new_tail_states}
+    if layer_aux and layer_rows is not None:
+        aux = dict(aux, per_layer=layer_rows)
     return x, new_states, aux
 
 
@@ -201,7 +240,8 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
                 layer_override: Optional[Callable] = None,
                 moe_override: Optional[Callable] = None,
                 return_hidden: bool = False,
-                attend_to_cache: bool = False, page_table=None):
+                attend_to_cache: bool = False, page_table=None,
+                aux_extras=(), layer_aux: bool = False):
     """Forward pass.
 
     tokens: [B, S] int32.
@@ -216,6 +256,9 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
         every attention layer (one table, per-layer physical pools).
     encoder_embeds: [B, T_enc, d] stub audio-frontend output (whisper).
     vision_embeds: [B, vision_seq, vision_dim] stub patch embeddings (VLM).
+    aux_extras / layer_aux: extra fixed-shape aux keys accumulated across
+        the stack, optionally also stacked per layer under
+        ``aux["per_layer"]`` (see ``_apply_stack``; serve EP histograms).
 
     Returns (logits [B,S,vocab], new_decode_state, aux).
     """
@@ -270,7 +313,7 @@ def apply_model(params, cfg: ModelConfig, run: RunConfig, tokens,
         encoder_out=encoder_out, encoder_positions=encoder_positions,
         cache_index=cache_index, layer_override=layer_override,
         moe_override=moe_override, attend_to_cache=attend_to_cache,
-        page_table=page_table)
+        page_table=page_table, aux_extras=aux_extras, layer_aux=layer_aux)
 
     x = modules.apply_norm(params["final_norm"], x, pol)
     if return_hidden:

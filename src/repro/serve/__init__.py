@@ -2,8 +2,10 @@ from repro.serve.engine import (BatchedServer, ContinuousBatchingEngine,
                                 ContinuousProgram, ServeProgram,
                                 make_continuous_program, make_serve_program)
 from repro.serve.kv_blocks import BlockAllocator, pages_for
+from repro.serve.ep_decode import (EPContinuousBatchingEngine,
+                                   EPDecodeConfig)
 from repro.serve.kv_transfer import KVTransferEngine, TransferStats
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import RoutingEMA, ServeMetrics
 from repro.serve.sampling import GREEDY, SamplingParams
 from repro.serve.scheduler import (DecodeScheduler, PrefillScheduler,
                                    Request, Scheduler)
@@ -13,4 +15,5 @@ __all__ = ["BatchedServer", "ServeProgram", "make_serve_program",
            "make_continuous_program", "ServeMetrics", "SamplingParams",
            "GREEDY", "Request", "Scheduler", "PrefillScheduler",
            "DecodeScheduler", "BlockAllocator", "pages_for",
-           "KVTransferEngine", "TransferStats"]
+           "KVTransferEngine", "TransferStats", "EPDecodeConfig",
+           "EPContinuousBatchingEngine", "RoutingEMA"]

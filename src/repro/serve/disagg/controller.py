@@ -142,7 +142,8 @@ def make_disagg(cfg: ModelConfig, mesh, run: RunConfig, params, *,
                 link_bw: Optional[float] = None, latency_s: float = 0.0,
                 metrics: Optional[ServeMetrics] = None,
                 on_token: Optional[Callable] = None,
-                record_logits: bool = False) -> DisaggController:
+                record_logits: bool = False, ep=None,
+                ep_placement=None) -> DisaggController:
     """Wire up the full disaggregated deployment over one mesh.
 
     Both workers get their own paged program + pool + allocator (the
@@ -151,16 +152,31 @@ def make_disagg(cfg: ModelConfig, mesh, run: RunConfig, params, *,
     to full reservation capacity). The
     role split is logical on this container; the inter-group link lives
     in the transfer engine's cost model.
+
+    ``ep`` (a ``serve.ep_decode.EPDecodeConfig``) shards the decode
+    group's expert weights over the EP axis (DESIGN.md §11): BOTH
+    programs are built with EP (the prefill worker shares the mesh here,
+    so its expert hop must use the sharded weights too), params are
+    placed under ``ep_placement`` (default round-robin), and the decode
+    worker's routed-copy histograms feed a RoutingEMA exposed at
+    ``controller.decode.routing_ema``.
     """
     max_pages = -(-max_len // page_size)
     prefill_pages = prefill_pages if prefill_pages is not None \
         else 2 * max_pages
     pre_prog = make_continuous_program(
         cfg, mesh, run, n_slots=1, max_len=max_len, seed=seed,
-        page_size=page_size, n_pages=max(prefill_pages, max_pages))
+        page_size=page_size, n_pages=max(prefill_pages, max_pages), ep=ep)
     dec_prog = make_continuous_program(
         cfg, mesh, run, n_slots=decode_slots, max_len=max_len, seed=seed,
-        page_size=page_size, n_pages=decode_pages)
+        page_size=page_size, n_pages=decode_pages, ep=ep)
+    if ep is not None:
+        from repro.core.asym_ea import round_robin_placement
+        from repro.serve.ep_decode import place_params
+        pl = ep_placement if ep_placement is not None else ep.placement
+        if pl is None:
+            pl = round_robin_placement(cfg.n_experts, ep.ep_size)
+        params = place_params(params, cfg, pl)
     with mesh:
         pre_params = jax.device_put(params, pre_prog.param_shardings)
         dec_params = jax.device_put(params, dec_prog.param_shardings)
@@ -175,6 +191,9 @@ def make_disagg(cfg: ModelConfig, mesh, run: RunConfig, params, *,
     prefill = PrefillWorker(pre_prog, pre_params, pre_sched)
     decode = DecodeWorker(dec_prog, dec_params, dec_sched, metrics=metrics,
                           on_token=on_token, record_logits=record_logits)
+    if ep is not None:
+        from repro.serve.metrics import RoutingEMA
+        decode.routing_ema = RoutingEMA(cfg.n_experts, decay=ep.ema_decay)
     transfer = KVTransferEngine(chunk_pages=transfer_chunk_pages,
                                 link_bw=link_bw, latency_s=latency_s)
     return DisaggController(prefill, decode, transfer, metrics=metrics)

@@ -251,6 +251,11 @@ class ContinuousProgram:
     n_pages: int = 0
     max_pages: int = 0       # page-table slots per request
     init_prec: Callable = None  # () -> batch-1 prefill recurrent carry
+    # EP decode (DESIGN.md §11): when set, expert weights are sharded over
+    # ep.ep_axis, params must be placed (serve/ep_decode.place_params) and
+    # decode_step returns a 4th output — the per-layer routed-copy
+    # histogram [n_rows, n_experts] feeding the placement EMA.
+    ep: object = None
 
 
 def paged_state_specs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
@@ -279,7 +284,8 @@ def paged_state_specs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
 def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
                             n_slots: int, max_len: int, seed: int = 0,
                             page_size: int | None = None,
-                            n_pages: int | None = None) -> ContinuousProgram:
+                            n_pages: int | None = None,
+                            ep=None) -> ContinuousProgram:
     """Build the jit'd steps of the continuous-batching engine.
 
     ``page_size`` switches on the paged-KV build (DESIGN.md §9): KV moves
@@ -301,21 +307,35 @@ def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
     MoE FFNs take the dropless gather path (``apply_moe`` -> single-pack
     ``ops.moe_ffn``): no capacity, so dead-slot tokens can never displace
     live tokens, and decode shapes auto-route to the group-dense small-M
-    fallback (DESIGN.md §5.5). Expert-parallel decode (EP sharding at pod
-    scale) stays future work.
+    fallback (DESIGN.md §5.5). With ``ep`` (an
+    ``serve.ep_decode.EPDecodeConfig``) expert weights are instead sharded
+    over the EP axis and the MoE hop runs the chunked all-to-all dispatch
+    (DESIGN.md §11); ``decode_step`` then returns a 4th output, the
+    per-layer routed-copy histogram.
     """
     assert not cfg.is_encdec and cfg.vision_seq == 0, \
         "continuous batching supports decoder-only LMs"
     if page_size is not None:
         return _make_paged_program(cfg, mesh, run, n_slots=n_slots,
                                    max_len=max_len, seed=seed,
-                                   page_size=page_size, n_pages=n_pages)
+                                   page_size=page_size, n_pages=n_pages,
+                                   ep=ep)
     rules = rules_for(cfg, mesh, variant="serve")
     B = n_slots
     from repro.sharding.rules import fitted_shardings, make_constrainer
     pshapes, paxes = abstract_params(cfg)
     psh = fitted_shardings(pshapes, paxes, rules, mesh)
     dtype = run.policy.compute_dtype
+
+    ep_moe = None
+    if ep is not None:
+        from repro.serve import ep_decode as epd
+        epd.validate_ep_config(cfg, mesh, ep)
+        psh = epd.ep_param_shardings(psh, pshapes, mesh, ep)
+        ep_moe = epd.make_ep_moe_decode(mesh, cfg, run, ep)
+        ep_extras = (("ep_counts", (cfg.n_experts,)),)
+        ep_prefill_ov = epd.moe_override_for(ep_moe)
+        ep_decode_ov = epd.moe_override_for
 
     _, sspecs = decode_state_specs(cfg, mesh, rules, B, max_len, dtype)
     ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
@@ -341,7 +361,8 @@ def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
         included), returns f32 logits of the chunk's last position."""
         hidden, pstate, _ = stack.apply_model(
             params, cfg, run_p, tokens, decode_state=pstate,
-            cache_index=offset, attend_to_cache=True, return_hidden=True)
+            cache_index=offset, attend_to_cache=True, return_hidden=True,
+            moe_override=ep_prefill_ov if ep_moe is not None else None)
         last = modules.apply_unembedding(
             params["embed"], params.get("lm_head"), cfg, run.policy,
             hidden[:, -1])
@@ -365,12 +386,23 @@ def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
     def decode(params, state, tok, pos, active, rids, ngen, temp, topk,
                topp):
         """One decode step for every slot; dead slots (pos < 0) write no
-        cache lines and emit token 0."""
-        logits, state, _ = stack.apply_model(
-            params, cfg, run_b, tok, decode_state=state, cache_index=pos)
+        cache lines and emit token 0. Under EP the per-layer routed-copy
+        histogram rides along as a 4th output."""
+        if ep_moe is not None:
+            logits, state, aux = stack.apply_model(
+                params, cfg, run_b, tok, decode_state=state,
+                cache_index=pos, moe_override=ep_decode_ov(ep_moe, active),
+                aux_extras=ep_extras, layer_aux=True)
+        else:
+            logits, state, _ = stack.apply_model(
+                params, cfg, run_b, tok, decode_state=state,
+                cache_index=pos)
         last = logits[:, -1].astype(jnp.float32)
         keys = sampling.request_keys(base_key, rids, ngen)
         nxt = sampling.sample_tokens(last, keys, temp, topk, topp)
+        if ep_moe is not None:
+            return (state, jnp.where(active, nxt, 0), last,
+                    aux["per_layer"]["ep_counts"])
         return state, jnp.where(active, nxt, 0), last
 
     def sample(logits, rids, ngen, temp, topk, topp):
@@ -382,10 +414,12 @@ def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
                           out_shardings=(pssh, None), donate_argnums=(1,))
     jit_insert = jax.jit(insert, in_shardings=(ssh, pssh, None),
                          out_shardings=ssh, donate_argnums=(0,))
+    dec_out = (ssh, None, None) if ep_moe is None else (ssh, None, None,
+                                                        None)
     jit_decode = jax.jit(
         decode,
         in_shardings=(psh, ssh, tok_sh) + (vec_sh,) * 7,
-        out_shardings=(ssh, None, None), donate_argnums=(1,))
+        out_shardings=dec_out, donate_argnums=(1,))
 
     return ContinuousProgram(
         cfg=cfg, run=run, mesh=mesh, n_slots=B, max_len=max_len,
@@ -397,13 +431,13 @@ def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
         init_pstate=jax.jit(
             lambda: stack.init_decode_state(cfg, 1, max_len, dtype),
             out_shardings=pssh),
-        param_shardings=psh, state_shardings=ssh)
+        param_shardings=psh, state_shardings=ssh, ep=ep)
 
 
 def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
                         n_slots: int, max_len: int, seed: int,
-                        page_size: int,
-                        n_pages: int | None) -> ContinuousProgram:
+                        page_size: int, n_pages: int | None,
+                        ep=None) -> ContinuousProgram:
     """Paged-KV build of the continuous program (DESIGN.md §9.4).
 
     KV never moves at admission or recycling: prefill scatters straight
@@ -419,6 +453,17 @@ def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
     pshapes, paxes = abstract_params(cfg)
     psh = fitted_shardings(pshapes, paxes, rules, mesh)
     dtype = run.policy.compute_dtype
+
+    ep_moe = None
+    if ep is not None:
+        from repro.serve import ep_decode as epd
+        epd.validate_ep_config(cfg, mesh, ep)
+        psh = epd.ep_param_shardings(psh, pshapes, mesh, ep)
+        ep_moe = epd.make_ep_moe_decode(mesh, cfg, run, ep)
+        ep_extras = (("ep_counts", (cfg.n_experts,)),)
+        ep_prefill_ov = epd.moe_override_for(ep_moe)
+        ep_decode_ov = epd.moe_override_for
+
     max_pages = -(-max_len // page_size)
     n_pages = n_pages if n_pages is not None else B * max_pages
     assert n_pages >= max_pages, "pool smaller than one sequence"
@@ -455,7 +500,8 @@ def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
         hidden, new_merged, _ = stack.apply_model(
             params, cfg, run_p, tokens, decode_state=merged,
             cache_index=offset, attend_to_cache=True, return_hidden=True,
-            page_table=ptrow)
+            page_table=ptrow,
+            moe_override=ep_prefill_ov if ep_moe is not None else None)
         kv_n, prec_n = stack.split_kv_state(new_merged)
         last = modules.apply_unembedding(
             params["embed"], params.get("lm_head"), cfg, run.policy,
@@ -481,12 +527,22 @@ def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
 
     def decode(params, state, tok, pos, ptabs, active, rids, ngen, temp,
                topk, topp):
-        logits, state, _ = stack.apply_model(
-            params, cfg, run_b, tok, decode_state=state, cache_index=pos,
-            page_table=ptabs)
+        if ep_moe is not None:
+            logits, state, aux = stack.apply_model(
+                params, cfg, run_b, tok, decode_state=state,
+                cache_index=pos, page_table=ptabs,
+                moe_override=ep_decode_ov(ep_moe, active),
+                aux_extras=ep_extras, layer_aux=True)
+        else:
+            logits, state, _ = stack.apply_model(
+                params, cfg, run_b, tok, decode_state=state,
+                cache_index=pos, page_table=ptabs)
         last = logits[:, -1].astype(jnp.float32)
         keys = sampling.request_keys(base_key, rids, ngen)
         nxt = sampling.sample_tokens(last, keys, temp, topk, topp)
+        if ep_moe is not None:
+            return (state, jnp.where(active, nxt, 0), last,
+                    aux["per_layer"]["ep_counts"])
         return state, jnp.where(active, nxt, 0), last
 
     def sample(logits, rids, ngen, temp, topk, topp):
@@ -500,10 +556,12 @@ def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
                           donate_argnums=(1, 2))
     jit_insert = jax.jit(insert, in_shardings=(ssh, prec_sh, None),
                          out_shardings=ssh, donate_argnums=(0,))
+    dec_out = (ssh, None, None) if ep_moe is None else (ssh, None, None,
+                                                        None)
     jit_decode = jax.jit(
         decode,
         in_shardings=(psh, ssh, tok_sh, vec_sh, ptab_sh) + (vec_sh,) * 6,
-        out_shardings=(ssh, None, None), donate_argnums=(1,))
+        out_shardings=dec_out, donate_argnums=(1,))
 
     return ContinuousProgram(
         cfg=cfg, run=run, mesh=mesh, n_slots=B, max_len=max_len,
@@ -516,7 +574,7 @@ def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
         init_pstate=None,
         param_shardings=psh, state_shardings=ssh,
         paged=True, page_size=page_size, n_pages=n_pages,
-        max_pages=max_pages,
+        max_pages=max_pages, ep=ep,
         init_prec=jax.jit(
             lambda: stack.split_kv_state(
                 stack.init_decode_state(cfg, 1, 1, dtype))[1],
@@ -707,15 +765,20 @@ class ContinuousBatchingEngine:
     def _decode_once(self) -> None:
         with self.p.mesh:
             if self.p.paged:
-                self.state, nxt, logits = self.p.decode_step(
+                out = self.p.decode_step(
                     self.params, self.state, self._tok[:, None], self._pos,
                     self._ptab, self._active, self._rid, self._ngen,
                     self._temp, self._topk, self._topp)
             else:
-                self.state, nxt, logits = self.p.decode_step(
+                out = self.p.decode_step(
                     self.params, self.state, self._tok[:, None], self._pos,
                     self._active, self._rid, self._ngen, self._temp,
                     self._topk, self._topp)
+        if self.p.ep is not None:
+            self.state, nxt, logits, counts = out
+            self._on_ep_counts(counts)
+        else:
+            self.state, nxt, logits = out
         nxt = np.asarray(nxt)
         if self.record_logits:
             logits = np.asarray(logits)
@@ -736,6 +799,11 @@ class ContinuousBatchingEngine:
                 self._tok[slot] = tok
                 self._pos[slot] += 1
                 self._ngen[slot] += 1
+
+    def _on_ep_counts(self, counts) -> None:
+        """Routing-histogram hook (EP decode): overridden by
+        serve.ep_decode.EPContinuousBatchingEngine to feed the placement
+        EMA; a plain engine driving an EP program just drops the counts."""
 
     def _release(self, slot: int) -> None:
         self._clear_slot(slot)

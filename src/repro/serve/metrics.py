@@ -13,6 +13,8 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class RequestTrace:
@@ -111,3 +113,55 @@ class ServeMetrics:
 
 def _mean(xs: List[float]) -> float:
     return sum(xs) / len(xs) if xs else float("nan")
+
+
+class RoutingEMA:
+    """Per-layer EMA of observed MoE routing histograms (DESIGN.md §11).
+
+    The EP decode engine feeds it one ``[n_layers, n_experts]`` count
+    matrix per decode step (dead-slot copies already masked out inside the
+    step). Each layer keeps an exponential moving average of its NORMALIZED
+    histogram — normalizing per update keeps the EMA a distribution, so
+    drift is comparable across load levels — and ``merged()`` is the
+    layer-mean distribution the placement planner consumes.
+    """
+
+    def __init__(self, n_experts: int, decay: float = 0.9):
+        assert 0.0 <= decay < 1.0
+        self.n_experts = n_experts
+        self.decay = decay
+        self.hist: Dict[int, np.ndarray] = {}  # layer -> EMA distribution
+        self.n_updates = 0
+
+    def update(self, counts) -> None:
+        """counts: [n_layers, n_experts] (or [n_experts] for one layer)."""
+        counts = np.atleast_2d(np.asarray(counts, np.float64))
+        assert counts.shape[-1] == self.n_experts, counts.shape
+        for layer, row in enumerate(counts):
+            tot = row.sum()
+            if tot <= 0:
+                continue
+            p = row / tot
+            old = self.hist.get(layer)
+            self.hist[layer] = p if old is None \
+                else self.decay * old + (1.0 - self.decay) * p
+        self.n_updates += 1
+
+    def layer(self, layer: int) -> Optional[np.ndarray]:
+        return self.hist.get(layer)
+
+    def merged(self) -> np.ndarray:
+        """Layer-mean routing distribution [n_experts] (uniform if no
+        updates yet — a cold planner sees no skew rather than garbage)."""
+        if not self.hist:
+            return np.full((self.n_experts,), 1.0 / self.n_experts)
+        m = np.mean(list(self.hist.values()), axis=0)
+        tot = m.sum()
+        return m / tot if tot > 0 else np.full_like(m, 1.0 / len(m))
+
+    def drift(self, reference) -> float:
+        """Total-variation distance between ``merged()`` and a reference
+        distribution — the online re-balance trigger."""
+        ref = np.asarray(reference, np.float64)
+        ref = ref / max(ref.sum(), 1e-12)
+        return 0.5 * float(np.abs(self.merged() - ref).sum())
