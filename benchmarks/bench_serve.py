@@ -34,9 +34,16 @@ placement on a fixed Zipf-routed Poisson trace at an A40+V100 decode
 group, and the ``hbm`` row records the per-device expert-weight residency
 reduction (>= ep_size by construction — the shard is an exact partition).
 
+``--fleet`` adds the elastic fleet section (DESIGN.md §12): the gate
+metric ``fleet.goodput_ratio_sim`` is the SIMULATED goodput-under-SLO of
+the elastic fleet over the BEST static prefill:decode role split of the
+same 2xA40 + 2xV100 groups on a fixed diurnal trace whose bottleneck
+role shifts — and must stay >= 1.2. The measured row runs a real tiny
+fleet with a decode group killed mid-trace, gating zero-loss recovery.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--paged] \
-        [--disagg] [--ep] [--out PATH]
+        [--disagg] [--ep] [--fleet] [--out PATH]
 """
 
 from __future__ import annotations
@@ -68,9 +75,12 @@ def bench_arch(arch: str, args) -> dict:
         "wall_s": round(wall, 3),
         "tokens_per_s": s["tokens_per_s"],
         "ttft_s_p50": round(s["ttft_s"]["p50"], 4),
+        "ttft_s_p95": round(s["ttft_s"]["p95"], 4),
+        "ttft_s_p99": round(s["ttft_s"]["p99"], 4),
         "ttft_s_max": round(s["ttft_s"]["max"], 4),
         "itl_s_p50": round(s["itl_s"]["p50"], 5),
         "itl_s_p95": round(s["itl_s"]["p95"], 5),
+        "itl_s_p99": round(s["itl_s"]["p99"], 5),
         "queue_depth_max": s["queue_depth"]["max"],
         "max_concurrent_active": s["max_concurrent_active"],
     }
@@ -80,6 +90,8 @@ def bench_arch(arch: str, args) -> dict:
         out["disagg"] = s["disagg"]
     if "ep" in s:
         out["ep"] = s["ep"]
+    if "fleet" in s:
+        out["fleet"] = s["fleet"]
     return out
 
 
@@ -281,6 +293,83 @@ def bench_ep(args) -> dict:
     return section
 
 
+def bench_fleet(args) -> dict:
+    """BENCH_serve.json ``fleet`` section (DESIGN.md §12): the gate
+    metric ``fleet.goodput_ratio_sim`` is the SIMULATED
+    goodput-under-SLO of the elastic fleet over the BEST static
+    prefill:decode role split of the same four groups (2xA40 + 2xV100)
+    on a fixed diurnal production trace whose bottleneck role shifts
+    between an interactive (decode-bound) peak and a batch
+    (prefill-bound) trough — the planner sweeps every static split, so
+    the baseline is as strong as a static answer can be. A real tiny
+    fleet run with a mid-trace decode-group kill rides along as the
+    measured/informational row and doubles as the zero-loss recovery
+    check (driver exits non-zero on any dropped request)."""
+    from repro.core import planner
+    from repro.core import simulator as sim
+    from repro.core.hardware import A40, V100
+
+    from repro.models import registry
+    cfg = registry.get_config("qwen3-moe-30b-a3b")
+    trace = sim.production_trace(
+        0, 3000, base_rate=26.0, diurnal_amp=0.5, period_s=90.0,
+        prompt_med=1650, prompt_sigma=0.9, gen_med=64, gen_sigma=0.8,
+        interactive_frac_amp=0.45, prompt_cap=8192, gen_cap=1024)
+    plan = planner.plan_fleet(
+        cfg, (A40, A40, V100, V100), trace, prefill_chunk=256, ctx=2048,
+        decode_slots=8, page_size=16, slo_ttft=2.0, slo_itl=1.0)
+    st, el = plan.predicted_static, plan.predicted_elastic
+    section = {
+        "sim": {
+            "arch": cfg.name,
+            "classes": list(plan.classes),
+            "n_requests": len(trace),
+            "slo_ttft_s": plan.slo_ttft,
+            "slo_itl_s": plan.slo_itl,
+            "best_static_roles": list(plan.roles),
+            "goodput_under_slo_static": round(st.goodput_under_slo, 2),
+            "goodput_under_slo_elastic": round(el.goodput_under_slo, 2),
+            "good_requests_static": st.n_good,
+            "good_requests_elastic": el.n_good,
+            "ttft_p99_static_s": round(st.ttft_p99, 3),
+            "ttft_p99_elastic_s": round(el.ttft_p99, 3),
+            "n_flips_elastic": el.n_flips,
+        },
+        "goodput_ratio_sim": round(plan.goodput_ratio_sim, 3),
+    }
+    assert el.n_flips > 0, "elastic fleet sim never flipped a role"
+    assert plan.goodput_ratio_sim >= 1.2, \
+        f"elastic fleet goodput only {plan.goodput_ratio_sim:.2f}x the " \
+        f"best static split (need >= 1.2x on the diurnal trace)"
+
+    # -- measured (informational + zero-loss recovery): real tiny fleet,
+    #    one decode group killed mid-trace; serve_arch gates on every
+    #    request finishing with its full token budget.
+    a = copy.copy(args)
+    a.fleet = True
+    a.disagg = False
+    a.paged = False
+    a.prefill_groups = "a40"
+    a.decode_groups = "v100,v100"
+    a.fleet_elastic = False
+    a.kill_group = ["2@8"]
+    a.page_size = 8
+    s = bench_arch(PAGED_ARCH, a)
+    fl = s["fleet"]
+    assert fl["n_killed"] == 1, "kill injection did not land"
+    section["measured"] = {
+        "arch": PAGED_ARCH,
+        "groups": fl["groups"],
+        "killed_group": 2,
+        "events": fl["events"],
+        "tokens_per_s": s["tokens_per_s"],
+        "ttft_s_p50": s["ttft_s_p50"],
+        "kv_transfers": fl["kv_transfers"],
+        "kv_pages_shipped": fl["kv_pages_shipped"],
+    }
+    return section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
@@ -300,6 +389,10 @@ def main():
     ap.add_argument("--ep", action="store_true",
                     help="run the EP decode section (simulated "
                          "placement-ratio gate + measured EP-sharded run)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the elastic fleet section (simulated "
+                         "elastic-vs-static goodput gate + measured "
+                         "fleet run with a mid-trace group kill)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     # fixed-trace knobs serve_arch reads beyond the CLI ones above
@@ -316,11 +409,17 @@ def main():
     args.prefill_pool_pages = None
     args.ep_size = 0
     args.ep_placement = "uniform"
+    args.prefill_groups = "a40"
+    args.decode_groups = "v100"
+    args.fleet_elastic = False
+    args.kill_group = None
     run_paged = args.paged
     run_disagg = args.disagg
     run_ep = args.ep
+    run_fleet = args.fleet
     args.paged = False   # the base ARCHS runs stay on the dense engine
     args.disagg = False
+    args.fleet = False
 
     payload = {
         "bench": "serve",
@@ -347,6 +446,14 @@ def main():
         print(f"[bench_serve] ep: placement_ratio_sim="
               f"{payload['ep']['placement_ratio_sim']} "
               f"hbm_reduction={payload['ep']['hbm']['hbm_reduction']}")
+    if run_fleet:
+        payload["fleet"] = bench_fleet(args)
+        print(f"[bench_serve] fleet: goodput_ratio_sim="
+              f"{payload['fleet']['goodput_ratio_sim']} "
+              f"(static roles "
+              f"{payload['fleet']['sim']['best_static_roles']}, "
+              f"{payload['fleet']['sim']['n_flips_elastic']} "
+              f"elastic flips)")
     out = pathlib.Path(args.out) if args.out else \
         pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
     out.write_text(json.dumps(payload, indent=2) + "\n")

@@ -10,6 +10,8 @@ Gated metrics (higher is better):
   serve: disagg.goodput_ratio_sim        (simulated disagg vs unified goodput)
   serve: ep.placement_ratio_sim          (simulated uniform vs planned EP
                                           placement makespan on a Zipf trace)
+  serve: fleet.goodput_ratio_sim         (simulated elastic fleet vs best
+                                          static split, goodput under SLO)
   zebra: gate.speedup                    (simulated overlapped vs serialized)
 
 Usage:
@@ -35,11 +37,13 @@ BENCHES = {
         "file": "BENCH_serve.json",
         "simulated": ["paged.slot_ratio_best",
                       "disagg.goodput_ratio_sim",
-                      "ep.placement_ratio_sim"],
+                      "ep.placement_ratio_sim",
+                      "fleet.goodput_ratio_sim"],
         "measured": ["results.qwen3-moe-30b-a3b.tokens_per_s",
                      "results.llama3.2-3b.tokens_per_s",
                      "disagg.measured.tokens_per_s",
-                     "ep.measured.tokens_per_s"],
+                     "ep.measured.tokens_per_s",
+                     "fleet.measured.tokens_per_s"],
     },
     "zebra": {
         "file": "BENCH_zebra.json",

@@ -163,6 +163,28 @@ def round_robin_placement(n_experts: int, ep_size: int) -> tuple:
                  for j in range(ep_size))
 
 
+def placement_speeds(shard_classes, *, flops_per_byte: float = 0.0) -> tuple:
+    """Per-shard service rates for ``asym_ea_place`` from device classes.
+
+    Decode expert service is a roofline: weight reads stream at
+    ``hbm_bw``, but the grouped GEMM over the m rows routed to an expert
+    only sustains ``peak_flops * gemm_eff``. At arithmetic intensity
+    ``flops_per_byte`` (≈ rows per activated expert in the bf16 decode
+    regime: 2*m flops per 2 weight bytes), the effective byte rate is
+    ``min(hbm_bw, peak_flops * gemm_eff / flops_per_byte)`` — so a
+    compute-weak class (low ``gemm_eff * peak_flops``) falls off the
+    bandwidth roofline first and should receive fewer hot experts.
+    ``flops_per_byte=0`` degenerates to pure HBM bandwidth (the PR 6
+    memory-bound assumption, kept as the default)."""
+    speeds = []
+    for c in shard_classes:
+        bw = c.hbm_bw
+        if flops_per_byte > 0.0:
+            bw = min(bw, c.peak_flops * c.gemm_eff / flops_per_byte)
+        speeds.append(bw)
+    return tuple(speeds)
+
+
 def asym_ea_place(load, speeds, cap: int) -> tuple:
     """Heterogeneity-aware expert placement: greedy LPT with fixed shard
     cardinality — the serving-mode analogue of Algorithm 1's offload

@@ -16,6 +16,7 @@ exactly the constraint system of §4.1 (eq. for t(A_{i,j}^F)).
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import defaultdict, deque
 from typing import Dict, Optional
 
@@ -295,6 +296,52 @@ def zipf_poisson_trace(seed: int, n: int, rate: float, prompt: int,
         w[e] = 1.0 / (r + 1) ** zipf_s
     tot = sum(w)
     return reqs, tuple(x / tot for x in w)
+
+
+def production_trace(seed: int, n: int, *, base_rate: float,
+                     diurnal_amp: float = 0.8, period_s: float = 600.0,
+                     prompt_med: int = 512, prompt_sigma: float = 0.9,
+                     gen_med: int = 64, gen_sigma: float = 0.8,
+                     interactive_frac_amp: float = 0.45,
+                     prompt_cap: int = 16384, gen_cap: int = 2048):
+    """Production-shaped serving load (DESIGN.md §12): heavy-tailed
+    lognormal prompt/output lengths under a diurnal arrival-rate swing.
+
+    Arrivals are an inhomogeneous Poisson process thinned from rate
+    ``base_rate * (1 + diurnal_amp * sin(2*pi*t/period_s))`` — traffic from
+    a user population breathes with the clock. The REQUEST MIX breathes
+    with it too: each request is "interactive" (short prompt, long
+    generation — chat traffic, decode-bound) with probability
+    ``0.5 + interactive_frac_amp * sin(...)`` at its arrival phase, else
+    "batch" (long prompt, short generation — summarization/extraction,
+    prefill-bound). The bottleneck ROLE therefore shifts over the day,
+    which is exactly the gap an elastic fleet closes over any static
+    prefill:decode split. Lengths are lognormal (median ``*_med``, shape
+    ``*_sigma``: p99/p50 ~ e^{2.3 sigma}), capped so one request cannot
+    exceed a pool. Pure python + deterministic under ``seed``."""
+    import random
+    rng = random.Random(seed)
+    two_pi = 2.0 * math.pi
+
+    def lognorm(med, sigma, cap):
+        return max(1, min(int(med * math.exp(sigma * rng.gauss(0, 1))), cap))
+
+    reqs, t = [], 0.0
+    peak = base_rate * (1.0 + abs(diurnal_amp))
+    while len(reqs) < n:
+        t += rng.expovariate(peak)  # thinning: propose at the peak rate
+        phase = math.sin(two_pi * t / period_s)
+        rate_t = base_rate * (1.0 + diurnal_amp * phase)
+        if rng.random() * peak > max(rate_t, 0.0):
+            continue
+        if rng.random() < 0.5 + interactive_frac_amp * phase:
+            prompt = lognorm(prompt_med // 4, prompt_sigma, prompt_cap)
+            gen = lognorm(gen_med * 2, gen_sigma, gen_cap)
+        else:
+            prompt = lognorm(prompt_med * 2, prompt_sigma, prompt_cap)
+            gen = lognorm(max(gen_med // 4, 1), gen_sigma, gen_cap)
+        reqs.append(ServeRequest(arrival=t, prompt=prompt, gen=gen))
+    return reqs
 
 
 def _percentile(xs, q):

@@ -38,6 +38,15 @@ class HeartbeatMonitor:
     def beat(self, host: str):
         self.last_seen[host] = self.clock()
 
+    def add(self, host: str):
+        """Group join (fleet elasticity): starts with a fresh grace window."""
+        self.last_seen[host] = self.clock()
+
+    def remove(self, host: str):
+        """Group leave / declared-dead eviction: stop tracking it so
+        dead_hosts() converges after the coordinator has reacted."""
+        self.last_seen.pop(host, None)
+
     def dead_hosts(self) -> List[str]:
         cutoff = self.clock() - self.cfg.interval_s * \
             self.cfg.grace_multiplier
@@ -61,6 +70,14 @@ class StragglerDetector:
 
     def record(self, group: str, step_time: float):
         self.times[group].append(step_time)
+
+    def add(self, group: str):
+        self.times.setdefault(group, deque(maxlen=self.window))
+        self.strikes.setdefault(group, 0)
+
+    def remove(self, group: str):
+        self.times.pop(group, None)
+        self.strikes.pop(group, None)
 
     def _stats(self):
         all_recent = [t for d in self.times.values() for t in d]

@@ -28,10 +28,23 @@ heterogeneity-aware re-placement from the observed routing EMA:
         --arch qwen3-moe-30b-a3b --mesh 1x2 --ep-size 2 \
         --ep-placement planned
 
+``--fleet`` scales disagg to an elastic multi-group fleet (DESIGN.md
+§12): N prefill + M decode groups of mixed device classes behind a
+router, with heartbeat failure recovery and (``--fleet-elastic``)
+role flips. ``--kill-group GID@TICK`` injects a crash mid-trace; the
+killed group's in-flight requests re-enter the router and re-prefill
+token-exactly:
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --fleet \
+        --prefill-groups a40 --decode-groups v100,v100 \
+        --page-size 8 --kill-group 2@8
+
 Exit status: non-zero when any request is rejected, dropped, or left
-unfinished — the CI serve-smoke, disagg-smoke and ep-smoke steps gate on
-it. An ``--ep-size`` that does not divide the expert count (or exceed
-the mesh axis) is REJECTED with a non-zero exit, never truncated.
+unfinished — the CI serve-smoke, disagg-smoke, ep-smoke and fleet-smoke
+steps gate on it. An ``--ep-size`` that does not divide the expert
+count (or exceed the mesh axis) is REJECTED with a non-zero exit, never
+truncated; so is a fleet topology with zero groups of a role or an
+unknown device class.
 """
 
 from __future__ import annotations
@@ -53,6 +66,29 @@ from repro.serve import (BlockAllocator, ContinuousBatchingEngine, Request,
                          make_continuous_program)
 
 SMOKE_ARCHS = ("qwen3-moe-30b-a3b", "llama3.2-3b")  # MoE + dense
+
+
+def parse_group_spec(spec: str, default_cls: str) -> list:
+    """``--prefill-groups``/``--decode-groups`` value: either an integer
+    count (that many groups of the role's default class) or a
+    comma-separated device-class list (one group per entry)."""
+    items = [x.strip() for x in (spec or "").split(",") if x.strip()]
+    if len(items) == 1 and items[0].isdigit():
+        return [default_cls] * int(items[0])
+    return items
+
+
+def parse_kills(specs) -> list:
+    """``--kill-group GID@TICK`` occurrences -> [(tick, gid)]."""
+    kills = []
+    for spec in specs or ():
+        try:
+            gid, tick = spec.split("@")
+            kills.append((int(tick), int(gid)))
+        except ValueError:
+            raise ValueError(
+                f"--kill-group wants GID@TICK, got {spec!r}") from None
+    return kills
 
 
 def build_trace(seed: int, n: int, rate: float, prompt_len: int, gen: int,
@@ -156,7 +192,43 @@ def serve_arch(arch: str, args) -> dict:
         else:
             print(f"[serve] arch={cfg.name} is dense; --ep-size ignored")
 
-    if getattr(args, "disagg", False):
+    if getattr(args, "fleet", False):
+        # Elastic multi-group fleet (DESIGN.md §12): N prefill + M decode
+        # groups of mixed device classes, router placement, optional role
+        # flips, heartbeat failure recovery. --kill-group injects faults.
+        from repro.serve.fleet import make_fleet
+        try:
+            pre_cls = parse_group_spec(args.prefill_groups, "a40")
+            dec_cls = parse_group_spec(args.decode_groups, "v100")
+            kills = parse_kills(args.kill_group)
+            params = split_params(stack.init_model(key, cfg))[0]
+            engine = make_fleet(
+                cfg, mesh, run, params, prefill_classes=pre_cls,
+                decode_classes=dec_cls, decode_slots=args.slots,
+                max_len=max_len, page_size=args.page_size,
+                decode_pages=args.pool_pages,
+                prefill_pages=args.prefill_pool_pages,
+                prefill_chunk=args.prefill_chunk,
+                token_budget=args.prefill_budget, seed=args.seed,
+                metrics=metrics, on_token=stream,
+                elastic=args.fleet_elastic)
+        except ValueError as e:
+            # Invalid topology (zero groups of a role, unknown device
+            # class, malformed kill spec): rejected with a non-zero exit.
+            print(f"[serve] FAIL arch={cfg.name}: bad fleet topology: {e}",
+                  file=sys.stderr)
+            return {"ok": False, "n_requests": 0, "fleet_error": str(e)}
+        t0 = time.perf_counter()
+        try:
+            results = engine.run(trace, kills=kills)
+        except RuntimeError as e:
+            # Wedged fleet (e.g. the only decode group was killed without
+            # --fleet-elastic): requests would be dropped — fail the run.
+            print(f"[serve] FAIL arch={cfg.name}: fleet stalled: {e}",
+                  file=sys.stderr)
+            return {"ok": False, "n_requests": 0, "fleet_error": str(e)}
+        dt = time.perf_counter() - t0
+    elif getattr(args, "disagg", False):
         # Disaggregated prefill/decode deployment (DESIGN.md §10): the
         # decode pool takes --pool-pages, the prefill pool
         # --prefill-pool-pages; KV crosses between them as pages.
@@ -227,7 +299,32 @@ def serve_arch(arch: str, args) -> dict:
           f"itl p50 {s['itl_s']['p50']:.4f}s, "
           f"queue depth max {s['queue_depth']['max']}, "
           f"max concurrent {s['max_concurrent_active']})")
-    if getattr(args, "disagg", False):
+    if getattr(args, "fleet", False):
+        # Surviving pools must hold the exactly-once page invariant even
+        # after kills, recoveries, and role flips.
+        for g in engine.groups:
+            g.worker.allocator.check()
+        st = engine.transfer.stats
+        s["fleet"] = {
+            "elastic": bool(args.fleet_elastic),
+            "groups": [{"gid": g.gid, "cls": g.cls, "role": g.role,
+                        "flips": g.flips} for g in engine.groups],
+            "events": [{"tick": e.tick, "kind": e.kind, "gid": e.gid,
+                        "detail": e.detail} for e in engine.events],
+            "n_flips": engine.n_flips,
+            "n_killed": len([e for e in engine.events
+                             if e.kind == "dead"]),
+            "kv_transfers": st.n_transfers,
+            "kv_pages_shipped": st.n_pages,
+        }
+        roles = ",".join(f"g{g.gid}={g.cls}:{g.role}"
+                         for g in engine.groups)
+        print(f"[serve] arch={cfg.name} fleet: {roles} "
+              f"flips={engine.n_flips} "
+              f"events={len(engine.events)} transfers={st.n_transfers} "
+              f"ttft_p99={s['ttft_s']['p99']:.3f}s "
+              f"itl_p99={s['itl_s']['p99']:.4f}s")
+    elif getattr(args, "disagg", False):
         st = engine.transfer.stats
         s["disagg"] = {
             "page_size": args.page_size,
@@ -249,7 +346,8 @@ def serve_arch(arch: str, args) -> dict:
         print(f"[serve] arch={cfg.name} paged: page_size={args.page_size} "
               f"pool={program.n_pages} peak={eng_occ['page_peak']} "
               f"preempted={eng_occ['n_preempted']}")
-    if ep is not None and not getattr(args, "disagg", False):
+    if ep is not None and not getattr(args, "disagg", False) \
+            and not getattr(args, "fleet", False):
         s["ep"] = {
             "ep_size": ep.ep_size,
             "placement_mode": args.ep_placement,
@@ -319,6 +417,26 @@ def main(argv=None):
     ap.add_argument("--prefill-pool-pages", type=int, default=None,
                     help="prefill-side pool size in pages (disagg mode; "
                          "default: two max-length sequences)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="elastic multi-group fleet (DESIGN.md §12): "
+                         "N prefill + M decode groups of mixed device "
+                         "classes behind a router, heartbeat failure "
+                         "recovery; see --prefill-groups/--decode-groups")
+    ap.add_argument("--prefill-groups", default="a40",
+                    help="fleet prefill groups: an integer count or a "
+                         "comma-separated device-class list, e.g. "
+                         "'a40,a40' or '2' (default one a40 group)")
+    ap.add_argument("--decode-groups", default="v100",
+                    help="fleet decode groups: an integer count or a "
+                         "comma-separated device-class list, e.g. "
+                         "'v100,v100' (default one v100 group)")
+    ap.add_argument("--fleet-elastic", action="store_true",
+                    help="enable elastic role reassignment: idle groups "
+                         "flip prefill<->decode when the bottleneck "
+                         "role shifts or a role dies out")
+    ap.add_argument("--kill-group", action="append", metavar="GID@TICK",
+                    help="fault injection (repeatable): crash fleet group "
+                         "GID at the start of tick TICK")
     ap.add_argument("--ep-size", type=int, default=0,
                     help="shard MoE expert weights across this many "
                          "devices of the mesh 'model' axis for decode "

@@ -1,0 +1,9 @@
+from repro.serve.fleet.controller import (FleetController, FleetEvent,
+                                          FleetGroup, make_fleet)
+from repro.serve.fleet.router import FleetRouter
+from repro.serve.fleet.sim import (FleetSimResult, SimGroup,
+                                   simulate_fleet_trace)
+
+__all__ = ["FleetController", "FleetGroup", "FleetEvent", "FleetRouter",
+           "make_fleet", "SimGroup", "FleetSimResult",
+           "simulate_fleet_trace"]

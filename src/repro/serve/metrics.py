@@ -41,6 +41,27 @@ class RequestTrace:
         return [b - a for a, b in zip(ts, ts[1:])]
 
 
+def percentile(xs: List[float], q: float) -> float:
+    """Exact host-side percentile with linear interpolation (the SLO gate
+    arithmetic — numpy-free so the fleet simulator can import it without
+    device deps). ``q`` in [0, 1]; nan on empty input."""
+    if not xs:
+        return float("nan")
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"q must be in [0, 1], got {q}")
+    s = sorted(xs)
+    pos = q * (len(s) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    frac = pos - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+def percentiles(xs: List[float], qs=(0.5, 0.95, 0.99)) -> Dict[str, float]:
+    """{"p50": ..., "p95": ..., "p99": ...} over one sorted pass."""
+    return {f"p{int(q * 100)}": percentile(xs, q) for q in qs}
+
+
 def _pctl(xs: List[float], q: float) -> float:
     if not xs:
         return float("nan")
@@ -101,10 +122,9 @@ class ServeMetrics:
             "wall_s": round(wall, 4) if wall == wall else wall,
             "tokens_per_s": round(n_tok / wall, 2) if wall and wall == wall
             and wall > 0 else float("nan"),
-            "ttft_s": {"mean": _mean(ttfts), "p50": _pctl(ttfts, 0.5),
+            "ttft_s": {"mean": _mean(ttfts), **percentiles(ttfts),
                        "max": max(ttfts) if ttfts else float("nan")},
-            "itl_s": {"mean": _mean(itls), "p50": _pctl(itls, 0.5),
-                      "p95": _pctl(itls, 0.95)},
+            "itl_s": {"mean": _mean(itls), **percentiles(itls)},
             "queue_depth": {"mean": _mean(self.queue_depths),
                             "max": max(self.queue_depths, default=0)},
             "max_concurrent_active": max(self.active_counts, default=0),

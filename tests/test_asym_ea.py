@@ -117,3 +117,49 @@ def test_alpha_beta_exclusive():
     assert p1.alpha <= 1.0 and p1.beta == 1.0
     p2 = asym_ea_offload(16, 12, 2, 2, 0.9, 0.5, 1.0, n_min=10)
     assert p2.beta >= 1.0 and p2.alpha == 1.0
+
+
+# ---------------------------------------------------------------------------
+# GEMM-efficiency tier in serving placement speeds (DESIGN.md §11/§12)
+# ---------------------------------------------------------------------------
+
+def test_placement_speeds_roofline():
+    from repro.core.asym_ea import placement_speeds
+    from repro.core.hardware import A40, V100
+    # fpb=0 degenerates to pure HBM bandwidth (the memory-bound default)
+    assert placement_speeds((A40, V100)) == (A40.hbm_bw, V100.hbm_bw)
+    # past the ridge point the compute roofline caps the rate
+    f = 150.0
+    sa, sv = placement_speeds((A40, V100), flops_per_byte=f)
+    assert sa == pytest.approx(min(A40.hbm_bw,
+                                   A40.peak_flops * A40.gemm_eff / f))
+    assert sv == pytest.approx(min(V100.hbm_bw,
+                                   V100.peak_flops * V100.gemm_eff / f))
+    assert sv < sa  # V100 is the compute-weak class at high intensity
+
+
+def test_compute_weak_class_gets_fewer_hot_experts():
+    """Folding the per-class GEMM-efficiency tier into the speed term
+    flips the hot-expert destination once arithmetic intensity crosses
+    the weak class's ridge point: bandwidth-wise V100 (900 GB/s) beats
+    A40 (696 GB/s), but compute-wise (peak*gemm_eff) it is the weaker
+    class — so at decode batches large enough to leave the bandwidth
+    roofline, the hot experts must migrate OFF the V100 shard."""
+    from repro.core.asym_ea import asym_ea_place, placement_speeds
+    from repro.core.hardware import A40, V100
+    load = [2.0 ** -e for e in range(8)]  # sharply skewed: e0 is hot
+    cap = 4
+
+    def mass(placement, shard):
+        return sum(load[e] for e in placement[shard])
+
+    # memory-bound (fpb=0): V100's higher HBM bandwidth earns the hot set
+    pl_bw = asym_ea_place(load, placement_speeds((A40, V100)), cap)
+    assert 0 in pl_bw[1]
+    # compute-bound (fpb past V100's ridge): A40's GEMM tier wins it back
+    pl_c = asym_ea_place(load,
+                         placement_speeds((A40, V100), flops_per_byte=150.0),
+                         cap)
+    assert 0 in pl_c[0]
+    # and the weak class's total hot mass strictly drops
+    assert mass(pl_c, 1) < mass(pl_bw, 1)

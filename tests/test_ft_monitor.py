@@ -1,0 +1,195 @@
+"""Direct unit coverage for repro.ft.monitor + repro.ft.elastic: the
+fleet controller (serve/fleet, DESIGN.md §12) now leans on heartbeats
+and straggler statistics for failure recovery and router speed scaling,
+so the edge cases get pinned here — expiry ordering, all-dead windows,
+membership churn (add/remove), slow_factor bounds, and the
+dead-hosts-before-stragglers priority of ElasticController.tick.
+
+Host-only (no jax compilation): stays in the tier-1 slice.
+"""
+
+import pytest
+
+from repro.core import hardware as HW
+from repro.core.planner import plan_zp_group
+from repro.core.profiler import ZPGroupShape
+from repro.ft import ElasticController, HeartbeatMonitor, StragglerDetector
+from repro.ft.monitor import HeartbeatConfig
+from repro.models import registry
+
+
+def make_monitor(hosts, clock, interval=10.0, grace=3.0):
+    return HeartbeatMonitor(
+        hosts, HeartbeatConfig(interval_s=interval, grace_multiplier=grace),
+        clock=lambda: clock["t"])
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_expiry_ordering():
+    # Hosts stop beating at different times; deaths surface in the same
+    # order their grace windows expire, never early.
+    clock = {"t": 0.0}
+    mon = make_monitor(["a", "b", "c"], clock)
+    clock["t"] = 5.0
+    mon.beat("b")
+    mon.beat("c")
+    clock["t"] = 12.0
+    mon.beat("c")
+    # cutoff = t - 30: a expires at t>30, b at t>35, c at t>42
+    clock["t"] = 30.0
+    assert mon.dead_hosts() == []
+    clock["t"] = 31.0
+    assert mon.dead_hosts() == ["a"]
+    clock["t"] = 36.0
+    assert set(mon.dead_hosts()) == {"a", "b"}
+    clock["t"] = 43.0
+    assert set(mon.dead_hosts()) == {"a", "b", "c"}
+
+
+def test_heartbeat_all_dead_and_recovery_via_remove():
+    clock = {"t": 0.0}
+    mon = make_monitor(["a", "b"], clock)
+    clock["t"] = 100.0
+    assert set(mon.dead_hosts()) == {"a", "b"}
+    # The coordinator evicts as it reacts; dead_hosts() converges to [].
+    mon.remove("a")
+    assert mon.dead_hosts() == ["b"]
+    mon.remove("b")
+    assert mon.dead_hosts() == []
+    mon.remove("b")  # idempotent
+
+
+def test_heartbeat_add_starts_fresh_grace_window():
+    clock = {"t": 0.0}
+    mon = make_monitor(["a"], clock)
+    clock["t"] = 100.0
+    mon.beat("a")
+    mon.add("late")  # joins long after t=0: must NOT be instantly dead
+    assert mon.dead_hosts() == []
+    clock["t"] = 131.0
+    assert set(mon.dead_hosts()) == {"a", "late"}
+
+
+def test_heartbeat_beat_unknown_host_tracks_it():
+    # beat() on an unregistered host is an implicit add (the fleet wires
+    # flipped groups through beat on the shared tick clock).
+    clock = {"t": 0.0}
+    mon = make_monitor(["a"], clock)
+    mon.beat("new")
+    assert "new" in mon.last_seen
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+# ---------------------------------------------------------------------------
+
+def test_straggler_empty_window_is_silent():
+    det = StragglerDetector(["a", "b"])
+    assert det.stragglers() == []          # no samples at all
+    det.record("a", 1.0)
+    det.record("a", 1.0)
+    assert det.stragglers() == []          # < 4 samples: stats undefined
+    assert det.slow_factor("a") == 1.0
+    assert det.slow_factor("b") == 1.0     # group with an empty deque
+
+
+def test_slow_factor_bounds():
+    det = StragglerDetector(["fast", "fast2", "slow"])
+    for _ in range(10):
+        det.record("fast", 1.0)
+        det.record("fast2", 1.0)
+        det.record("slow", 2.0)
+    # Never below 1.0 (a fast group is "not slow", not a speedup credit)
+    assert det.slow_factor("fast") == 1.0
+    assert det.slow_factor("slow") == pytest.approx(2.0)
+
+
+def test_straggler_patience_gates_flagging():
+    det = StragglerDetector(["a", "b"], z_thresh=3.0, patience=3)
+    for _ in range(10):
+        det.record("a", 1.0)
+        det.record("b", 1.0)
+    for _ in range(6):
+        det.record("b", 5.0)
+    # needs `patience` consecutive flagged windows, not one
+    assert det.stragglers() == []
+    assert det.stragglers() == []
+    assert det.stragglers() == ["b"]
+
+
+def test_straggler_add_remove_membership():
+    det = StragglerDetector(["a"])
+    det.add("b")
+    for _ in range(10):
+        det.record("a", 1.0)
+        det.record("b", 1.0)
+    det.remove("b")
+    assert "b" not in det.times and "b" not in det.strikes
+    det.remove("b")  # idempotent
+    assert det.stragglers() == []
+    det.add("a")     # add() of an existing group must not wipe its window
+    assert len(det.times["a"]) == 10
+
+
+# ---------------------------------------------------------------------------
+# ElasticController event sequencing
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def zp_plan():
+    cfg = registry.get_config("mixtral-d1")
+    zp = ZPGroupShape(M=4, N=4, attn_class=HW.A40, exp_class=HW.V100)
+    return cfg, plan_zp_group(cfg, zp, global_batch=16, seq_len=4096)
+
+
+def make_controller(cfg, plan):
+    return ElasticController(cfg, plan, 16, 4096,
+                             attn_hosts=["a0", "a1", "a2", "a3"],
+                             exp_hosts=["e0", "e1", "e2", "e3"])
+
+
+def test_elastic_tick_healthy_is_none(zp_plan):
+    cfg, plan = zp_plan
+    ctl = make_controller(cfg, plan)
+    ev = ctl.tick()
+    assert ev.kind == "none" and ev.plan is None
+
+
+def test_elastic_tick_dead_hosts_take_priority_over_straggler(zp_plan):
+    # A dead expert host AND a straggling expert group in the same tick:
+    # the hard failure (shrink) must win; the straggler replan would
+    # otherwise keep a dead host in the plan.
+    cfg, plan = zp_plan
+    ctl = make_controller(cfg, plan)
+    for _ in range(10):
+        ctl.record_step(1.0, 1.0)
+    for _ in range(6):
+        ctl.record_step(1.0, 9.0)
+        ctl.detector.stragglers()
+    assert "exp" in ctl.detector.stragglers()  # straggler is live...
+    ctl.heartbeat.last_seen["e3"] -= 1e6       # ...and e3 is dead
+    ev = ctl.tick()
+    assert ev.kind == "shrink"
+    assert "e3" not in ctl.exp_hosts
+    assert ev.plan.zp.N == 3
+
+
+def test_elastic_tick_straggler_then_recovers(zp_plan):
+    cfg, plan = zp_plan
+    ctl = make_controller(cfg, plan)
+    for _ in range(10):
+        ctl.record_step(1.0, 1.0)
+    for _ in range(6):
+        ctl.record_step(1.0, 9.0)
+        ctl.detector.stragglers()
+    ev = ctl.tick()
+    assert ev.kind == "straggler-replan"
+    assert sum(ev.plan.offload) >= sum(plan.offload)
+    # healthy samples clear the strikes; next tick is quiet
+    for _ in range(20):
+        ctl.record_step(1.0, 1.0)
+    ctl.detector.stragglers()
+    assert ctl.tick().kind == "none"

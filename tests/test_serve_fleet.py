@@ -1,0 +1,413 @@
+"""Elastic multi-group serving fleet (DESIGN.md §12).
+
+Covers the fleet control plane end to end: router placement policy
+(host-only stubs), the production diurnal trace generator, exact
+percentile helpers, fleet-simulator invariants (conservation, zero-loss
+kill recovery, elastic-beats-static on a shifting-bottleneck trace),
+``plan_fleet`` static-split sweeps, and the REAL fleet — greedy
+token-exact parity against the unified ``ContinuousBatchingEngine``,
+mid-trace group kills (decode and prefill) recovering token-exactly with
+``BlockAllocator.check()`` holding on every surviving pool, the forced
+role flip that revives a decode-less fleet, and topology validation.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core import simulator as sim
+from repro.core.hardware import A40, V100
+from repro.launch.serve import build_trace, parse_group_spec, parse_kills
+from repro.models import stack
+from repro.pytree import split_params
+from repro.serve import (BlockAllocator, ContinuousBatchingEngine, GREEDY,
+                         Request, Scheduler, make_continuous_program)
+from repro.serve.fleet import FleetRouter, SimGroup, make_fleet, \
+    simulate_fleet_trace
+from repro.serve.metrics import percentile, percentiles
+
+from tests.test_serve_disagg import RUN, TINY, _prompt  # noqa: F401
+
+pytestmark = pytest.mark.fleet  # CI fleet-smoke job slice
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return split_params(stack.init_model(jax.random.PRNGKey(0), TINY))[0]
+
+
+# ---------------------------------------------------------------------------
+# Exact percentiles (serve/metrics)
+# ---------------------------------------------------------------------------
+
+def test_percentile_exact_interpolation():
+    xs = [4.0, 1.0, 3.0, 2.0]
+    assert percentile(xs, 0.0) == 1.0
+    assert percentile(xs, 1.0) == 4.0
+    assert percentile(xs, 0.5) == pytest.approx(2.5)
+    assert percentile(xs, 1 / 3) == pytest.approx(2.0)
+    assert percentile([7.0], 0.99) == 7.0
+    assert np.isnan(percentile([], 0.5))
+    with pytest.raises(ValueError):
+        percentile(xs, 1.5)
+    with pytest.raises(ValueError):
+        percentile(xs, -0.1)
+
+
+def test_percentiles_dict_keys():
+    xs = list(range(101))
+    d = percentiles(xs)
+    assert d == {"p50": 50.0, "p95": 95.0, "p99": 99.0}
+
+
+# ---------------------------------------------------------------------------
+# Router policy (host-only stubs)
+# ---------------------------------------------------------------------------
+
+class _G:
+    """Minimal group view implementing the router protocol."""
+
+    def __init__(self, gid, cls, queued=0, active=0, can=True):
+        self.gid, self.cls = gid, cls
+        self.name = f"g{gid}"
+        self._q, self._a, self._can = queued, active, can
+
+    def queued_prefill_tokens(self):
+        return self._q
+
+    def n_active(self):
+        return self._a
+
+    def can_accept_ticket(self, n_tokens):
+        return self._can
+
+
+def test_router_prefers_fast_class_at_equal_backlog():
+    r = FleetRouter(prefill_speed={"a40": 2.0, "v100": 1.0})
+    fast, slow = _G(0, "a40", queued=10), _G(1, "v100", queued=10)
+    assert r.place_request([slow, fast], 8) is fast
+    # enough backlog on the fast class flips the decision
+    fast._q = 100
+    assert r.place_request([slow, fast], 8) is slow
+    assert r.place_request([], 8) is None
+
+
+def test_router_ticket_filters_and_head_of_line():
+    r = FleetRouter(decode_speed={"a40": 1.0, "v100": 1.0})
+    full = _G(0, "a40", active=1, can=False)
+    free = _G(1, "v100", active=3, can=True)
+    assert r.place_ticket([full, free], 16) is free
+    assert r.place_ticket([full], 16) is None   # head-of-line: no target
+    # least occupancy-per-speed wins among the eligible
+    emptier = _G(2, "v100", active=1, can=True)
+    assert r.place_ticket([full, free, emptier], 16) is emptier
+
+
+def test_router_slow_factor_steers_away_from_straggler():
+    r = FleetRouter(prefill_speed={"a40": 1.0},
+                    slow_factor=lambda name: 4.0 if name == "g0" else 1.0)
+    slow, ok = _G(0, "a40", queued=10), _G(1, "a40", queued=20)
+    # g0 has less backlog but is 4x degraded: g1 wins
+    assert r.place_request([slow, ok], 8) is ok
+
+
+# ---------------------------------------------------------------------------
+# Production trace generator
+# ---------------------------------------------------------------------------
+
+def test_production_trace_shape_and_determinism():
+    a = sim.production_trace(3, 400, base_rate=20.0, period_s=60.0)
+    b = sim.production_trace(3, 400, base_rate=20.0, period_s=60.0)
+    assert len(a) == 400
+    assert [(r.arrival, r.prompt, r.gen) for r in a] == \
+        [(r.arrival, r.prompt, r.gen) for r in b]
+    assert sim.production_trace(4, 400, base_rate=20.0)[0].arrival != \
+        a[0].arrival or True  # different seed allowed to differ
+    assert all(a[i].arrival <= a[i + 1].arrival for i in range(len(a) - 1))
+    assert all(1 <= r.prompt <= 16384 and 1 <= r.gen <= 2048 for r in a)
+
+
+def test_production_trace_diurnal_mix_swings():
+    """The interactive fraction must actually swing with the phase:
+    interactive requests (short prompt / long gen) dominate the peak,
+    batch requests (long prompt / short gen) the trough."""
+    reqs = sim.production_trace(0, 4000, base_rate=40.0, diurnal_amp=0.8,
+                                period_s=40.0, prompt_med=512, gen_med=64,
+                                interactive_frac_amp=0.45)
+    import math
+    up = [r for r in reqs
+          if math.sin(2 * math.pi * r.arrival / 40.0) > 0.7]
+    down = [r for r in reqs
+            if math.sin(2 * math.pi * r.arrival / 40.0) < -0.7]
+    assert len(up) > 50 and len(down) > 50
+    # peak phase also carries more arrivals per unit time (thinning)
+    mean_prompt_up = sum(r.prompt for r in up) / len(up)
+    mean_prompt_down = sum(r.prompt for r in down) / len(down)
+    assert mean_prompt_up < mean_prompt_down
+    mean_gen_up = sum(r.gen for r in up) / len(up)
+    mean_gen_down = sum(r.gen for r in down) / len(down)
+    assert mean_gen_up > mean_gen_down
+
+
+# ---------------------------------------------------------------------------
+# Fleet simulator
+# ---------------------------------------------------------------------------
+
+def _sim_groups(roles, t_pre=0.01, t_dec=0.02, slots=8):
+    return [SimGroup(gid=i, cls="x", role=r, t_prefill_chunk=t_pre,
+                     t_decode_step=t_dec, decode_slots=slots)
+            for i, r in enumerate(roles)]
+
+
+def _poisson_sim_trace(n=60, seed=0, rate=4.0, prompt=(64, 512),
+                       gen=(16, 64)):
+    rng = np.random.RandomState(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        out.append(sim.ServeRequest(arrival=t,
+                                    prompt=int(rng.randint(*prompt)),
+                                    gen=int(rng.randint(*gen))))
+    return out
+
+
+def test_fleet_sim_conservation():
+    trace = _poisson_sim_trace()
+    res = simulate_fleet_trace(trace,
+                               _sim_groups(["prefill", "decode", "decode"]),
+                               prefill_chunk=256)
+    assert res.n_requests == len(trace)
+    assert res.n_finished == len(trace)
+    assert res.goodput > 0 and res.makespan > 0
+    assert res.n_flips == 0
+
+
+def test_fleet_sim_kill_loses_nothing_and_prices_recovery():
+    """A killed decode group's requests all still finish (re-prefill via
+    the router) and the recovery gap lands in max-ITL, not in silence."""
+    trace = _poisson_sim_trace(n=40)
+    base = simulate_fleet_trace(
+        trace, _sim_groups(["prefill", "decode", "decode"]),
+        prefill_chunk=256)
+    killed = simulate_fleet_trace(
+        trace, _sim_groups(["prefill", "decode", "decode"]),
+        prefill_chunk=256, kills=[(base.makespan * 0.3, 1)],
+        detect_delay=0.5)
+    assert killed.n_finished == len(trace)
+    # the detect window + replay shows up in the worst inter-token gap
+    assert killed.itl_p99 > base.itl_p99 + 0.2
+
+
+def test_fleet_sim_kill_prefill_group_recovers():
+    trace = _poisson_sim_trace(n=40)
+    res = simulate_fleet_trace(
+        trace, _sim_groups(["prefill", "prefill", "decode", "decode"]),
+        prefill_chunk=256, kills=[(0.5, 0)], detect_delay=0.5)
+    assert res.n_finished == len(trace)
+
+
+def test_fleet_sim_elastic_beats_static_on_diurnal_trace():
+    """ACCEPTANCE (simulated): on a trace whose bottleneck role shifts
+    between an interactive (decode-bound) peak and a batch
+    (prefill-bound) trough, the elastic fleet's goodput-under-SLO beats
+    the SAME groups frozen in their best static split, and it actually
+    flips roles to do it. (The full profiled-classes 1.2x gate runs in
+    benchmarks/bench_serve.py --fleet.)"""
+    trace = sim.production_trace(0, 1200, base_rate=26.0, diurnal_amp=0.5,
+                                 period_s=90.0, prompt_med=1650,
+                                 prompt_sigma=0.9, gen_med=64,
+                                 gen_sigma=0.8, interactive_frac_amp=0.45,
+                                 prompt_cap=8192, gen_cap=1024)
+    # profiled-shape service times (a40/v100-like, mixtral-d1 scale)
+    t_pre, t_dec = 0.0065, 0.0044
+    slo_ttft, slo_itl = 2.0, 1.0
+
+    def run(roles, elastic):
+        groups = [SimGroup(gid=i, cls="x", role=r, t_prefill_chunk=t_pre,
+                           t_decode_step=t_dec, decode_slots=8)
+                  for i, r in enumerate(roles)]
+        return simulate_fleet_trace(trace, groups, prefill_chunk=256,
+                                    elastic=elastic, slo_ttft=slo_ttft,
+                                    slo_itl=slo_itl)
+
+    statics = [run(r, False) for r in
+               (("prefill", "prefill", "prefill", "decode"),
+                ("prefill", "prefill", "decode", "decode"),
+                ("prefill", "decode", "decode", "decode"))]
+    best = max(s.goodput_under_slo for s in statics)
+    el = run(("prefill", "prefill", "decode", "decode"), True)
+    assert el.n_flips > 0
+    assert el.goodput_under_slo > best
+
+
+def test_fleet_sim_never_flips_last_prefill_group():
+    trace = _poisson_sim_trace(n=30, gen=(64, 256))  # decode-heavy
+    groups = _sim_groups(["prefill", "decode"])
+    simulate_fleet_trace(trace, groups, prefill_chunk=256, elastic=True,
+                         wait_hi=0.0)
+    assert groups[0].role == "prefill"  # only prefill group never flips
+
+
+def test_plan_fleet_sweeps_static_splits():
+    from repro.models import registry
+    cfg = registry.get_config("mixtral-d1")
+    trace = _poisson_sim_trace(n=30, rate=8.0)
+    plan = planner.plan_fleet(cfg, (A40, A40, V100), trace,
+                              prefill_chunk=256, ctx=2048, decode_slots=8,
+                              slo_ttft=5.0, slo_itl=2.0)
+    assert plan.n_prefill >= 1 and plan.n_decode >= 1
+    assert plan.n_prefill + plan.n_decode == 3
+    assert plan.predicted_static.n_finished == len(trace)
+    assert plan.goodput_ratio_sim > 0
+    with pytest.raises(ValueError):
+        planner.plan_fleet(cfg, (A40,), trace, slo_ttft=5.0, slo_itl=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Real fleet: parity, kills, flips (tiny model, CPU)
+# ---------------------------------------------------------------------------
+
+def _fleet(cfg, mesh, params, **kw):
+    kw.setdefault("prefill_classes", ["a40"])
+    kw.setdefault("decode_classes", ["v100", "v100"])
+    kw.setdefault("decode_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 6)
+    return make_fleet(cfg, mesh, RUN, params, **kw)
+
+
+def _unified_results(mesh, params, trace):
+    prog = make_continuous_program(TINY, mesh, RUN, n_slots=2, max_len=32,
+                                   page_size=8)
+    with mesh:
+        p = jax.device_put(params, prog.param_shardings)
+    alloc = BlockAllocator(prog.n_pages, prog.page_size, prog.max_pages)
+    eng = ContinuousBatchingEngine(
+        prog, p, Scheduler(2, 32, prefill_chunk=6, allocator=alloc))
+    return eng.run([Request(rid=r.rid, prompt=r.prompt,
+                            max_new_tokens=r.max_new_tokens,
+                            arrival=r.arrival) for r in trace])
+
+
+def _trace(n=8, seed=5, rate=0.5):
+    return build_trace(seed=seed, n=n, rate=rate, prompt_len=14, gen=8,
+                       vocab=TINY.vocab_size, sampling=GREEDY)
+
+
+def test_fleet_greedy_parity_with_unified(mesh1, tiny_params):
+    trace = _trace()
+    fleet = _fleet(TINY, mesh1, tiny_params)
+    res = fleet.run(trace)
+    assert res == _unified_results(mesh1, tiny_params, trace)
+    assert not fleet.rejected
+    for g in fleet.groups:
+        g.worker.allocator.check()
+        assert g.worker.allocator.pages_in_use == 0
+
+
+def test_fleet_kill_decode_group_zero_loss_token_exact(mesh1, tiny_params):
+    """ACCEPTANCE: killing a decode group mid-trace loses zero requests —
+    every request's tokens are EXACTLY the uninterrupted run's (the
+    recovered ones re-prefill prompt + generated and continue bit-exact),
+    and the exactly-once page invariant holds on every surviving pool."""
+    trace = _trace()
+    want = _fleet(TINY, mesh1, tiny_params).run(trace)
+
+    fleet = _fleet(TINY, mesh1, tiny_params)
+    res = fleet.run(trace, kills=[(8, 2)])
+    assert res == want
+    assert not fleet.rejected
+    kinds = [e.kind for e in fleet.events]
+    assert "dead" in kinds and "recover" in kinds
+    assert all(g.gid != 2 for g in fleet.groups)  # evicted from the fleet
+    for g in fleet.groups:
+        g.worker.allocator.check()
+        assert g.worker.allocator.pages_in_use == 0
+
+
+def test_fleet_kill_prefill_group_recovers(mesh1, tiny_params):
+    trace = _trace()
+    want = _fleet(TINY, mesh1, tiny_params).run(trace)
+    fleet = _fleet(TINY, mesh1, tiny_params,
+                   prefill_classes=["a40", "a40"])
+    res = fleet.run(trace, kills=[(2, 0)])
+    assert res == want
+    assert not fleet.rejected
+    assert [e.kind for e in fleet.events].count("dead") == 1
+    for g in fleet.groups:
+        g.worker.allocator.check()
+
+
+def test_fleet_forced_flip_revives_decode_less_fleet(mesh1, tiny_params):
+    """Kill the ONLY decode group with elastic on: a prefill group is
+    conscripted into decode (forced flip), its displaced work re-routes,
+    and the trace still finishes token-exactly."""
+    trace = _trace()
+    want = _fleet(TINY, mesh1, tiny_params).run(trace)
+    fleet = _fleet(TINY, mesh1, tiny_params,
+                   prefill_classes=["a40", "a40"], decode_classes=["v100"],
+                   elastic=True)
+    res = fleet.run(trace, kills=[(8, 2)])
+    assert res == want
+    flips = [e for e in fleet.events if e.kind == "flip"]
+    assert flips and flips[0].detail == "-> decode"
+    assert len(fleet.decode_groups()) >= 1
+    for g in fleet.groups:
+        g.worker.allocator.check()
+
+
+def test_fleet_without_elastic_stalls_when_decode_dies(mesh1, tiny_params):
+    fleet = _fleet(TINY, mesh1, tiny_params,
+                   prefill_classes=["a40", "a40"], decode_classes=["v100"])
+    with pytest.raises(RuntimeError, match="exceeded"):
+        fleet.run(_trace(), kills=[(8, 2)], max_ticks=120)
+
+
+def test_make_fleet_rejects_invalid_topologies(mesh1, tiny_params):
+    with pytest.raises(ValueError, match="unknown device class"):
+        _fleet(TINY, mesh1, tiny_params, prefill_classes=["h100x"])
+    with pytest.raises(ValueError, match=">= 1 prefill"):
+        _fleet(TINY, mesh1, tiny_params, decode_classes=[])
+
+
+def test_fleet_submit_rejects_oversized_request(mesh1, tiny_params):
+    fleet = _fleet(TINY, mesh1, tiny_params)
+    trace = _trace(n=2) + [Request(rid=99, prompt=_prompt(9, 40),
+                                   max_new_tokens=8, sampling=GREEDY,
+                                   arrival=0.0)]
+    res = fleet.run(trace)
+    assert fleet.rejected == [99]
+    assert sorted(res) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Driver plumbing
+# ---------------------------------------------------------------------------
+
+def test_parse_group_spec_and_kills():
+    assert parse_group_spec("a40,v100", "x") == ["a40", "v100"]
+    assert parse_group_spec("3", "a40") == ["a40", "a40", "a40"]
+    assert parse_group_spec(" v100 , v100 ", "x") == ["v100", "v100"]
+    assert parse_group_spec("", "x") == []
+    assert parse_kills(["2@8", "0@10"]) == [(8, 2), (10, 0)]
+    assert parse_kills(None) == []
+    with pytest.raises(ValueError, match="GID@TICK"):
+        parse_kills(["nope"])
+
+
+def test_fleet_driver_exits_nonzero_on_failure(monkeypatch):
+    from repro.launch import serve as serve_mod
+    monkeypatch.setattr(serve_mod, "serve_arch",
+                        lambda arch, args: {"ok": False})
+    assert serve_mod.main(["--smoke", "--fleet"]) == 1
+    monkeypatch.setattr(serve_mod, "serve_arch",
+                        lambda arch, args: {"ok": True})
+    assert serve_mod.main(["--smoke", "--fleet"]) == 0
