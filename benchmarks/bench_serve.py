@@ -41,9 +41,22 @@ same 2xA40 + 2xV100 groups on a fixed diurnal trace whose bottleneck
 role shifts — and must stay >= 1.2. The measured row runs a real tiny
 fleet with a decode group killed mid-trace, gating zero-loss recovery.
 
+``--chaos`` adds the chaos-resilience section (DESIGN.md §13): the same
+tiny fleet and trace run twice — fault-free, then under the "standard"
+combined fault schedule from :func:`repro.core.simulator.chaos_matrix`
+(drops + corruption + a stall + a heartbeat-loss zombie window) — and the
+gate metric ``chaos.goodput_degraded_ratio`` is the ratio of goodput in
+simulated ticks (generated tokens per fleet tick) degraded over clean.
+Both runs must finish every request token-exactly (serve_arch gates
+this), so the ratio isolates the RECOVERY overhead: retries, re-prefill
+after aborted transfers and zombie fencing stretch the tick count but
+may not drop work. Deterministic by construction (seeded fault plan,
+tick-domain metric), so check_regression.py can gate its trend. The
+degraded run's robustness counters ride along in the section.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--paged] \
-        [--disagg] [--ep] [--fleet] [--out PATH]
+        [--disagg] [--ep] [--fleet] [--chaos] [--out PATH]
 """
 
 from __future__ import annotations
@@ -92,6 +105,8 @@ def bench_arch(arch: str, args) -> dict:
         out["ep"] = s["ep"]
     if "fleet" in s:
         out["fleet"] = s["fleet"]
+    if "chaos" in s:
+        out["chaos"] = s["chaos"]
     return out
 
 
@@ -370,6 +385,74 @@ def bench_fleet(args) -> dict:
     return section
 
 
+def bench_chaos(args) -> dict:
+    """BENCH_serve.json ``chaos`` section (DESIGN.md §13): the gate
+    metric ``chaos.goodput_degraded_ratio`` compares the same tiny
+    fleet + trace fault-free vs under the "standard" combined schedule
+    from :func:`repro.core.simulator.chaos_matrix`. Goodput is counted
+    in SIMULATED ticks (tokens per fleet tick), so the ratio is a
+    deterministic function of the seeded fault plan and the scheduler —
+    independent of host speed — and serve_arch's own gate guarantees
+    both runs finished every request token-exactly before the ratio is
+    even computed."""
+    from repro.core.simulator import chaos_matrix
+
+    name, spec, seed = next(e for e in chaos_matrix()
+                            if e[0] == "standard")
+    base = copy.copy(args)
+    base.fleet = True
+    base.disagg = False
+    base.paged = False
+    base.prefill_groups = "a40,a40"
+    base.decode_groups = "v100,v100"
+    base.fleet_elastic = False
+    base.kill_group = None
+    base.page_size = 8
+    base.requests = 5
+    base.prompt_len = 32
+    base.gen = 12
+    base.slo_ttft = None
+    base.chaos = None
+    base.chaos_seed = 0
+    clean = bench_arch(PAGED_ARCH, base)
+
+    a = copy.copy(base)
+    a.chaos = spec
+    a.chaos_seed = seed
+    degraded = bench_arch(PAGED_ARCH, a)
+
+    def goodput(s):
+        return s["generated_tokens"] / max(s["fleet"]["ticks"], 1)
+
+    ratio = round(goodput(degraded) / goodput(clean), 4)
+    section = {
+        "arch": PAGED_ARCH,
+        "schedule": name,
+        "spec": spec,
+        "seed": seed,
+        "clean": {
+            "ticks": clean["fleet"]["ticks"],
+            "generated_tokens": clean["generated_tokens"],
+            "goodput_tok_per_tick": round(goodput(clean), 4),
+        },
+        "degraded": {
+            "ticks": degraded["fleet"]["ticks"],
+            "generated_tokens": degraded["generated_tokens"],
+            "goodput_tok_per_tick": round(goodput(degraded), 4),
+            "faults_fired": len(degraded["chaos"]["events"]),
+            "signature": degraded["chaos"]["signature"],
+            "robustness": degraded["chaos"]["counters"],
+        },
+        "goodput_degraded_ratio": ratio,
+    }
+    assert len(degraded["chaos"]["events"]) > 0, \
+        "the standard schedule fired no faults — the gate measures nothing"
+    assert 0.0 < ratio <= 1.0, \
+        f"degraded/clean goodput ratio {ratio} out of range — " \
+        f"faults cannot speed the fleet up on a deterministic trace"
+    return section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
@@ -393,6 +476,10 @@ def main():
                     help="run the elastic fleet section (simulated "
                          "elastic-vs-static goodput gate + measured "
                          "fleet run with a mid-trace group kill)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the chaos-resilience section (same fleet "
+                         "trace fault-free vs under the standard fault "
+                         "schedule; gates goodput_degraded_ratio)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     # fixed-trace knobs serve_arch reads beyond the CLI ones above
@@ -417,9 +504,11 @@ def main():
     run_disagg = args.disagg
     run_ep = args.ep
     run_fleet = args.fleet
+    run_chaos = args.chaos
     args.paged = False   # the base ARCHS runs stay on the dense engine
     args.disagg = False
     args.fleet = False
+    args.chaos = None    # serve_arch reads this as the fault-spec string
 
     payload = {
         "bench": "serve",
@@ -454,6 +543,15 @@ def main():
               f"{payload['fleet']['sim']['best_static_roles']}, "
               f"{payload['fleet']['sim']['n_flips_elastic']} "
               f"elastic flips)")
+    if run_chaos:
+        payload["chaos"] = bench_chaos(args)
+        c = payload["chaos"]
+        print(f"[bench_serve] chaos: goodput_degraded_ratio="
+              f"{c['goodput_degraded_ratio']} "
+              f"(clean {c['clean']['ticks']} ticks, degraded "
+              f"{c['degraded']['ticks']} ticks, "
+              f"{c['degraded']['faults_fired']} faults, "
+              f"robustness {c['degraded']['robustness']})")
     out = pathlib.Path(args.out) if args.out else \
         pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
     out.write_text(json.dumps(payload, indent=2) + "\n")

@@ -12,6 +12,9 @@ Gated metrics (higher is better):
                                           placement makespan on a Zipf trace)
   serve: fleet.goodput_ratio_sim         (simulated elastic fleet vs best
                                           static split, goodput under SLO)
+  serve: chaos.goodput_degraded_ratio    (simulated goodput under the
+                                          standard fault schedule vs
+                                          fault-free, tokens per tick)
   zebra: gate.speedup                    (simulated overlapped vs serialized)
 
 Usage:
@@ -38,7 +41,8 @@ BENCHES = {
         "simulated": ["paged.slot_ratio_best",
                       "disagg.goodput_ratio_sim",
                       "ep.placement_ratio_sim",
-                      "fleet.goodput_ratio_sim"],
+                      "fleet.goodput_ratio_sim",
+                      "chaos.goodput_degraded_ratio"],
         "measured": ["results.qwen3-moe-30b-a3b.tokens_per_s",
                      "results.llama3.2-3b.tokens_per_s",
                      "disagg.measured.tokens_per_s",

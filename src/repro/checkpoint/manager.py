@@ -7,6 +7,12 @@ Manifest records tree structure, dtypes/shapes, logical axes, data-loader
 state and content hashes; restore verifies hashes and re-shards onto
 whatever mesh the restarted job has (elastic restart: the mesh may have
 shrunk/grown — placement is re-derived from logical axes, not device ids).
+
+Atomic publish (DESIGN.md §13): every file is written into ``<path>.tmp``
+and fsync'd (file contents AND the tmp directory entry) BEFORE the
+``rename`` publishes the step, and the parent directory is fsync'd after —
+so a crash at any point mid-save leaves either the complete new step or
+the untouched previous one, never a torn latest checkpoint.
 """
 
 from __future__ import annotations
@@ -26,6 +32,16 @@ import numpy as np
 from repro.pytree import tree_map_with_path_names
 
 MANIFEST = "MANIFEST.json"
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a path by descriptor — directories included, so renames and
+    new directory entries are durable, not just file bytes."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten_with_names(tree) -> Dict[str, Any]:
@@ -75,12 +91,19 @@ class CheckpointManager:
         tmp = path + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k.replace("/", "\x1f"): v for k, v in host.items()})
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **{k.replace("/", "\x1f"): v
+                           for k, v in host.items()})
+            f.flush()
+            os.fsync(f.fileno())
         with open(os.path.join(tmp, MANIFEST), "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_path(tmp)      # the directory entries themselves
         shutil.rmtree(path, ignore_errors=True)
-        os.rename(tmp, path)  # publish
+        os.rename(tmp, path)  # publish: atomic on POSIX
+        _fsync_path(self.dir)  # make the rename durable
         self._gc()
 
     def wait(self):

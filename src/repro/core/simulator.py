@@ -494,3 +494,46 @@ def pp_iter_time(cfg, zp, global_batch: int, seq_len: int,
                 layers_exp * te / max(zp.N, 1) * 1.0)
     # 1F1B: (R + S - 1) * stage, fwd+bwd
     return (n_microbatches + 2 - 1) * stage * (1 + BWD_RATIO)
+
+
+# -- chaos fault-schedule matrix (DESIGN.md §13) ----------------------------
+#
+# The STANDARD seeded fault schedules every chaos consumer shares: the
+# acceptance tests (tests/test_chaos.py) drive the real fleet through each
+# one, the CI chaos-smoke job replays them through launch/serve.py --chaos,
+# and bench_serve's chaos section prices the "standard" entry against the
+# fault-free run (chaos.goodput_degraded_ratio). One source of truth so a
+# schedule can never silently diverge between the gate and the tests.
+#
+# Assumed topology (the chaos acceptance config): groups g0,g1 = prefill,
+# g2,g3 = decode — two groups per role so any single-group fault is
+# survivable.
+
+def chaos_matrix():
+    """``[(name, spec, seed)]`` — the standard fault-schedule matrix.
+
+    Covers every hook point: chunk drop (probabilistic and
+    retry-exhausting), corruption, link stall, heartbeat flap long enough
+    to zombify-and-rejoin, and a mid-tick crash at each crash site. Specs
+    follow the ``ft.chaos`` grammar; each entry carries its own seed so
+    replays are independent."""
+    return [
+        # Probabilistic chunk loss: retries absorb it, no aborts.
+        ("drop", "drop%0.6*4", 101),
+        # Bit-flipped chunks: caught by the checksum, retried.
+        ("corrupt", "corrupt*3", 202),
+        # Delivered-but-unacked chunks: idempotent replay.
+        ("stall", "stall*2", 303),
+        # 4-deep drop bursts exhaust the retry budget (max_retries=3):
+        # transfers abort and roll back into re-prefill.
+        ("abort_reprefill", "drop@2*12", 404),
+        # Heartbeat flap on decode g3, longer than the grace window:
+        # zombify (fence + quarantine) then rejoin at gen+1.
+        ("zombie_flap", "hb_loss@6:g3~8", 505),
+        # Mid-tick crashes, one per hook point.
+        ("crash_post_prefill", "crash_post_prefill@4:g0", 606),
+        ("crash_mid_export", "crash_mid_export@3:g0", 707),
+        ("crash_mid_import", "crash_mid_import@3:g2", 808),
+        # The bench/CI "standard" schedule: a mild mix of everything.
+        ("standard", "drop%0.5*2;corrupt*1;stall*1;hb_loss@6:g3~8", 909),
+    ]

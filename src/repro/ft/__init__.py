@@ -1,6 +1,9 @@
+from repro.ft.chaos import (FaultEvent, FaultInjector, FaultPlan, FaultSpec,
+                            GroupCrashed)
 from repro.ft.elastic import ElasticController, ElasticEvent
 from repro.ft.monitor import (HeartbeatConfig, HeartbeatMonitor,
                               StragglerDetector)
 
 __all__ = ["ElasticController", "ElasticEvent", "HeartbeatConfig",
-           "HeartbeatMonitor", "StragglerDetector"]
+           "HeartbeatMonitor", "StragglerDetector", "FaultEvent",
+           "FaultInjector", "FaultPlan", "FaultSpec", "GroupCrashed"]

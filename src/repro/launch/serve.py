@@ -39,12 +39,24 @@ token-exactly:
         --prefill-groups a40 --decode-groups v100,v100 \
         --page-size 8 --kill-group 2@8
 
+``--chaos SPEC --chaos-seed N`` (fleet mode only) arms the seeded fault
+injector (DESIGN.md §13) with a ``ft.chaos`` schedule — transfer chunk
+drop/corrupt/stall, heartbeat loss (zombie + rejoin), mid-tick group
+crashes — and ``--slo-ttft S`` turns on SLO-aware shedding. The summary
+gains a ``chaos`` section with the replayable event log + signature:
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --fleet \
+        --prefill-groups a40,a40 --decode-groups v100,v100 \
+        --page-size 8 --chaos 'drop%0.6*4' --chaos-seed 101
+
 Exit status: non-zero when any request is rejected, dropped, or left
-unfinished — the CI serve-smoke, disagg-smoke, ep-smoke and fleet-smoke
-steps gate on it. An ``--ep-size`` that does not divide the expert
-count (or exceed the mesh axis) is REJECTED with a non-zero exit, never
-truncated; so is a fleet topology with zero groups of a role or an
-unknown device class.
+unfinished — the CI serve-smoke, disagg-smoke, ep-smoke, fleet-smoke and
+chaos-smoke steps gate on it. An ``--ep-size`` that does not divide the
+expert count (or exceed the mesh axis) is REJECTED with a non-zero exit,
+never truncated; so is a fleet topology with zero groups of a role or an
+unknown device class, a malformed ``--chaos`` spec, ``--chaos`` without
+``--fleet``, and (chaos mode) any surviving pool with pages still in use
+after the trace drains.
 """
 
 from __future__ import annotations
@@ -171,6 +183,9 @@ def serve_arch(arch: str, args) -> dict:
                   + (" <done>" if fin else ""))
 
     key = jax.random.PRNGKey(0)
+    chaos = None
+    shed: set = set()
+    leaked: list = []
     ep = None
     if getattr(args, "ep_size", 0):
         if cfg.is_moe:
@@ -201,6 +216,12 @@ def serve_arch(arch: str, args) -> dict:
             pre_cls = parse_group_spec(args.prefill_groups, "a40")
             dec_cls = parse_group_spec(args.decode_groups, "v100")
             kills = parse_kills(args.kill_group)
+            if getattr(args, "chaos", None):
+                # Malformed specs are rejected here (ValueError -> FAIL,
+                # non-zero exit) — never a silently-ignored fault plan.
+                from repro.ft.chaos import FaultInjector, FaultPlan
+                chaos = FaultInjector(FaultPlan.parse(args.chaos),
+                                      seed=args.chaos_seed)
             params = split_params(stack.init_model(key, cfg))[0]
             engine = make_fleet(
                 cfg, mesh, run, params, prefill_classes=pre_cls,
@@ -211,11 +232,12 @@ def serve_arch(arch: str, args) -> dict:
                 prefill_chunk=args.prefill_chunk,
                 token_budget=args.prefill_budget, seed=args.seed,
                 metrics=metrics, on_token=stream,
-                elastic=args.fleet_elastic)
+                elastic=args.fleet_elastic, chaos=chaos,
+                slo_ttft=getattr(args, "slo_ttft", None))
         except ValueError as e:
             # Invalid topology (zero groups of a role, unknown device
-            # class, malformed kill spec): rejected with a non-zero exit.
-            print(f"[serve] FAIL arch={cfg.name}: bad fleet topology: {e}",
+            # class, malformed kill or chaos spec): non-zero exit.
+            print(f"[serve] FAIL arch={cfg.name}: bad fleet config: {e}",
                   file=sys.stderr)
             return {"ok": False, "n_requests": 0, "fleet_error": str(e)}
         t0 = time.perf_counter()
@@ -228,6 +250,7 @@ def serve_arch(arch: str, args) -> dict:
                   file=sys.stderr)
             return {"ok": False, "n_requests": 0, "fleet_error": str(e)}
         dt = time.perf_counter() - t0
+        shed = set(engine.shed)
     elif getattr(args, "disagg", False):
         # Disaggregated prefill/decode deployment (DESIGN.md §10): the
         # decode pool takes --pool-pages, the prefill pool
@@ -282,6 +305,10 @@ def serve_arch(arch: str, args) -> dict:
         dt = time.perf_counter() - t0
 
     for req in trace:
+        if req.rid in shed:  # explicit SLO-shed outcome (chaos/slo mode)
+            print(f"[{cfg.name}] rid={req.rid} prompt={len(req.prompt)} "
+                  f"SHED")
+            continue
         tr = metrics.requests.get(req.rid)
         if tr is None:  # rejected at submit — never entered the engine
             print(f"[{cfg.name}] rid={req.rid} prompt={len(req.prompt)} "
@@ -304,9 +331,16 @@ def serve_arch(arch: str, args) -> dict:
         # after kills, recoveries, and role flips.
         for g in engine.groups:
             g.worker.allocator.check()
+        if chaos is not None:
+            # Chaos acceptance: a drained fleet must hold ZERO pages on
+            # every surviving pool — a leftover page is a leak the fault
+            # path failed to roll back.
+            leaked = [g.gid for g in engine.groups
+                      if g.worker.allocator.pages_in_use != 0]
         st = engine.transfer.stats
         s["fleet"] = {
             "elastic": bool(args.fleet_elastic),
+            "ticks": engine.tick_count,
             "groups": [{"gid": g.gid, "cls": g.cls, "role": g.role,
                         "flips": g.flips} for g in engine.groups],
             "events": [{"tick": e.tick, "kind": e.kind, "gid": e.gid,
@@ -317,6 +351,21 @@ def serve_arch(arch: str, args) -> dict:
             "kv_transfers": st.n_transfers,
             "kv_pages_shipped": st.n_pages,
         }
+        if chaos is not None:
+            s["chaos"] = {
+                "spec": args.chaos,
+                "seed": args.chaos_seed,
+                "events": chaos.log(),
+                "signature": chaos.log_signature(),
+                "counters": metrics.robust.as_dict(),
+                "n_shed": len(shed),
+                "leaked_groups": leaked,
+            }
+            print(f"[serve] arch={cfg.name} chaos: spec={args.chaos!r} "
+                  f"seed={args.chaos_seed} faults={len(chaos.log())} "
+                  f"sig={chaos.log_signature()} shed={len(shed)} "
+                  f"retries={st.n_retries} aborts={st.n_aborts} "
+                  f"fenced={metrics.robust.fenced_stale_completions}")
         roles = ",".join(f"g{g.gid}={g.cls}:{g.role}"
                          for g in engine.groups)
         print(f"[serve] arch={cfg.name} fleet: {roles} "
@@ -361,17 +410,22 @@ def serve_arch(arch: str, args) -> dict:
     # Gate: every traced request must finish with its full token budget
     # spent (traces carry no EOS) and nothing may be rejected or dropped.
     # Rejected rids never reach metrics (submit raises before on_submit);
-    # they count as unfinished here AND appear in engine.rejected.
+    # they count as unfinished here AND appear in engine.rejected. Shed
+    # requests (SLO admission, chaos mode) are an EXPLICIT outcome: they
+    # are excluded from the finish requirement, and in chaos mode the run
+    # additionally fails when any surviving pool leaked pages.
     unfinished = [r.rid for r in trace
-                  if metrics.requests.get(r.rid) is None
-                  or metrics.requests[r.rid].finish_tick is None
-                  or len(results.get(r.rid, [])) != r.max_new_tokens]
-    s["ok"] = not engine.rejected and not unfinished \
-        and s["n_requests"] == len(trace)
+                  if r.rid not in shed
+                  and (metrics.requests.get(r.rid) is None
+                       or metrics.requests[r.rid].finish_tick is None
+                       or len(results.get(r.rid, [])) != r.max_new_tokens)]
+    s["ok"] = not engine.rejected and not unfinished and not leaked \
+        and s["n_requests"] == len(trace) - len(shed)
     if not s["ok"]:
         print(f"[serve] FAIL arch={cfg.name}: rejected={engine.rejected} "
-              f"unfinished={unfinished} finished={s['n_requests']}"
-              f"/{len(trace)}", file=sys.stderr)
+              f"unfinished={unfinished} leaked={leaked} "
+              f"finished={s['n_requests']}"
+              f"/{len(trace) - len(shed)}", file=sys.stderr)
     return s
 
 
@@ -437,6 +491,19 @@ def main(argv=None):
     ap.add_argument("--kill-group", action="append", metavar="GID@TICK",
                     help="fault injection (repeatable): crash fleet group "
                          "GID at the start of tick TICK")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="seeded fault schedule (fleet mode, DESIGN.md "
+                         "§13): ';'-joined ft.chaos entries "
+                         "SITE[@TICK][:TARGET][%%PROB][*COUNT][~DURATION] "
+                         "— e.g. 'drop%%0.6*4;hb_loss@6:g3~8'; malformed "
+                         "specs exit non-zero")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos injector: the same "
+                         "(seed, spec) replays the identical fault log")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="SLO-aware admission (fleet mode): shed arrivals "
+                         "whose best prefill ETA exceeds this many "
+                         "seconds of estimated work")
     ap.add_argument("--ep-size", type=int, default=0,
                     help="shard MoE expert weights across this many "
                          "devices of the mesh 'model' axis for decode "
@@ -449,6 +516,10 @@ def main(argv=None):
                          "from the observed routing EMA")
     args = ap.parse_args(argv)
 
+    if args.chaos and not args.fleet:
+        print("[serve] --chaos requires --fleet (the chaos hook points "
+              "live in the fleet controller)", file=sys.stderr)
+        return 1
     archs = [args.arch] if args.arch else \
         (list(SMOKE_ARCHS) if args.smoke else ["llama3.2-3b"])
     failed = []

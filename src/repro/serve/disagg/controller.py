@@ -38,7 +38,7 @@ from repro.models.config import ModelConfig
 from repro.models.modules import RunConfig
 from repro.serve.engine import make_continuous_program
 from repro.serve.kv_blocks import BlockAllocator
-from repro.serve.kv_transfer import KVTransferEngine
+from repro.serve.kv_transfer import KVTransferEngine, TransferAbortedError
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import (DecodeScheduler, PrefillScheduler,
                                    Request)
@@ -91,14 +91,32 @@ class DisaggController:
         self.pending.extend(self.prefill.step())
         while self.pending:
             # FIFO, head-of-line: a stuck head keeps its place in line.
-            if not self.decode.try_admit(self.pending[0], self.prefill,
-                                         self.transfer, self.tick_count):
-                break
+            try:
+                if not self.decode.try_admit(self.pending[0], self.prefill,
+                                             self.transfer,
+                                             self.tick_count):
+                    break
+            except TransferAbortedError:
+                # Transfer exhausted its retries: the decode side already
+                # rolled back (lease + slot). Roll back the source export
+                # and send the request down the existing re-prefill path —
+                # key(rid, n) sampling keeps its continuation token-exact.
+                t = self.pending.pop(0)
+                rid = t.request.rid
+                self.prefill.allocator.abort_export(rid)
+                self.prefill.allocator.free(rid)
+                self.metrics.robust.transfer_aborts += 1
+                self.prefill.sched.requeue_front(
+                    t.request, list(t.tokens[len(t.request.prompt):]))
+                continue
             self.pending.pop(0)
         for request, generated in self.decode.ensure_pages():
             self.prefill.sched.requeue_front(request, generated)
         if self.decode.any_active():
             self.decode.decode_once(self.tick_count)
+        st = self.transfer.stats
+        self.metrics.robust.transfer_retries = st.n_retries
+        self.metrics.robust.checksum_failures = st.n_checksum_failures
         self.metrics.on_tick(self.queue_depth, self.decode.sched.n_active)
         self.tick_count += 1
 

@@ -173,22 +173,43 @@ class DecodeWorker:
 
     def try_admit(self, ticket: MigrationTicket,
                   src_worker: PrefillWorker,
-                  transfer: KVTransferEngine, tick: int) -> bool:
-        """Land a migration ticket: import pages into the decode pool, ship
-        the KV pages, insert the recurrent carry, rewrite the page table,
-        and sample the request's next token from the shipped logits.
-        False (nothing changed) when no free slot or not enough pages."""
+                  transfer: KVTransferEngine, tick: int, *,
+                  src_name: str = "*", dst_name: str = "*") -> bool:
+        """Land a migration ticket: lease pages in the decode pool, ship
+        the KV pages, commit the lease, insert the recurrent carry, rewrite
+        the page table, and sample the request's next token from the
+        shipped logits. False (nothing changed) when no free slot or not
+        enough pages. Transactional (DESIGN.md §13): the destination pages
+        stay under an in-flight lease until the transfer lands, so a
+        failed/aborted transfer rolls back here — lease returned, slot
+        released, source pages still EXPORTED for the caller's
+        ``abort_export`` — and the exception propagates."""
         req = ticket.request
         if not self.sched.has_free():
             return False
-        dst = self.allocator.import_pages(req.rid, len(ticket.tokens))
+        dst = self.allocator.begin_import(req.rid, len(ticket.tokens))
         if dst is None:
             return False
         slot = self.sched.claim_slot()
+        try:
+            with self.p.mesh:
+                self.state = transfer.transfer(
+                    src_worker.state, self.state, ticket.src_pages, dst,
+                    dst_n_pages=self.p.n_pages,
+                    src_name=src_name, dst_name=dst_name)
+        except Exception as e:
+            # The transfer's scatter donates our state: if any chunk
+            # landed before the fault, the old reference is dead and the
+            # live tree rides on the exception. The partial writes only
+            # touched pages under the lease we're about to abort.
+            live = getattr(e, "dst_state", None)
+            if live is not None:
+                self.state = live
+            self.allocator.abort_import(req.rid)
+            self.sched.release_slot(slot)
+            raise
+        self.allocator.commit_import(req.rid)
         with self.p.mesh:
-            self.state = transfer.transfer(
-                src_worker.state, self.state, ticket.src_pages, dst,
-                dst_n_pages=self.p.n_pages)
             src_worker.allocator.release_exported(req.rid)
             self.state = self.p.insert_step(self.state, ticket.prec,
                                             jnp.asarray(slot, jnp.int32))

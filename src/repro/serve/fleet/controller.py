@@ -36,6 +36,32 @@ Because per-request logits depend only on the request's own tokens and
 sampling keys are schedule-independent (§7.4), the whole fleet — across
 routing, flips, preemptions, kills, and recovery — is TOKEN-EXACT
 against the unified single-group engine on any trace.
+
+Chaos hardening (DESIGN.md §13) layers three more mechanisms on top:
+
+* **epoch fencing** — every group carries a ``generation`` that its
+  token callbacks and migration tickets are stamped with. A group
+  declared dead while actually still computing (heartbeat loss — a
+  false positive) becomes a ZOMBIE: its epoch ``(gid, generation)`` is
+  fenced, it is quarantined onto private results/metrics (so the fleet
+  log cannot be corrupted), and every completion it keeps producing is
+  rejected by the fence. When its heartbeats return it REJOINS at
+  ``generation + 1`` with a fresh worker — the replacement and the
+  zombie can never race because only the newest epoch passes the fence;
+* **transactional handoff** — a migration whose transfer exhausts its
+  retry budget rolls back cleanly (decode lease + slot inside
+  ``try_admit``, source export here) and the request re-prefills
+  token-exactly; a chaos crash mid-transfer kills the victim group and
+  leaves the ticket head-of-line for the normal death path;
+* **SLO-aware shedding** — with ``slo_ttft`` set, an arrival whose best
+  achievable prefill ETA across the (possibly degraded) fleet already
+  exceeds the SLO is SHED at submit: an explicit outcome the client can
+  retry elsewhere, instead of a guaranteed-late finish. The run
+  invariant becomes submitted ⊆ finished ∪ rejected ∪ shed.
+
+All faults come from a seeded :class:`~repro.ft.chaos.FaultInjector`
+consulted at named hook points, so every failure run replays exactly
+from ``(seed, spec)``.
 """
 
 from __future__ import annotations
@@ -45,12 +71,13 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.ft.chaos import FaultInjector, GroupCrashed
 from repro.ft.monitor import (HeartbeatConfig, HeartbeatMonitor,
                               StragglerDetector)
 from repro.serve.disagg.workers import (DecodeWorker, MigrationTicket,
                                         PrefillWorker)
-from repro.serve.kv_transfer import KVTransferEngine
-from repro.serve.metrics import ServeMetrics
+from repro.serve.kv_transfer import KVTransferEngine, TransferAbortedError
+from repro.serve.metrics import RequestTrace, ServeMetrics
 from repro.serve.scheduler import Request
 from repro.serve.fleet.router import FleetRouter
 
@@ -69,6 +96,7 @@ class FleetGroup:
         self.alive = True
         self.draining = False   # decode→prefill flip staged
         self.flips = 0
+        self.generation = 0     # fencing epoch (bumps on zombie rejoin)
 
     @property
     def name(self) -> str:
@@ -112,13 +140,14 @@ class FleetGroup:
 class _Pending:
     enq_tick: int
     src_gid: int
+    gen: int                 # source group's generation at enqueue
     ticket: MigrationTicket
 
 
 @dataclasses.dataclass(frozen=True)
 class FleetEvent:
     tick: int
-    kind: str     # 'flip' | 'dead' | 'recover'
+    kind: str     # 'flip' | 'dead' | 'recover' | 'rejoin' | 'shed'
     gid: int
     detail: str = ""
 
@@ -134,7 +163,9 @@ class FleetController:
                  metrics: Optional[ServeMetrics] = None,
                  elastic: bool = False, grace_ticks: int = 3,
                  wait_hi_ticks: int = 4, backlog_hi_chunks: int = 8,
-                 on_token: Optional[Callable] = None):
+                 on_token: Optional[Callable] = None,
+                 chaos: Optional[FaultInjector] = None,
+                 slo_ttft: Optional[float] = None):
         self.groups: List[FleetGroup] = list(groups)
         self.router = router
         self.transfer = transfer
@@ -145,10 +176,15 @@ class FleetController:
         self._make_prefill = make_prefill_worker
         self._make_decode = make_decode_worker
         self._user_on_token = on_token
+        self.chaos = chaos
+        self.slo_ttft = slo_ttft
         self.results: Dict[int, List[int]] = {}   # fleet results log
         self.finished: set = set()
         self.submitted: set = set()
         self.rejected: List[int] = []
+        self.shed: List[int] = []                 # SLO-infeasible arrivals
+        self.fenced: set = set()                  # dead (gid, generation)
+        self.zombies: List[FleetGroup] = []       # quarantined false-deads
         self.pending: deque = deque()             # _Pending FIFO
         self.events: List[FleetEvent] = []
         self.n_flips = 0
@@ -177,9 +213,20 @@ class FleetController:
         if g.role == DECODE:
             g.worker.sched.results = self.results
             g.worker.metrics = self.metrics
-            g.worker.on_token = self._on_token
+            # The fencing epoch is baked into the callback at wire time:
+            # a zombie's stale worker keeps reporting under its OLD
+            # (gid, gen) and is rejected, while the gen+1 replacement
+            # passes — the two can never interleave in the results log.
+            gid, gen = g.gid, g.generation
+            g.worker.on_token = \
+                lambda rid, tok, fin: self._on_token(gid, gen, rid, tok,
+                                                     fin)
 
-    def _on_token(self, rid: int, tok: int, finished: bool) -> None:
+    def _on_token(self, gid: int, gen: int, rid: int, tok: int,
+                  finished: bool) -> None:
+        if (gid, gen) in self.fenced:
+            self.metrics.robust.fenced_stale_completions += 1
+            return
         if finished:
             self.finished.add(rid)
         if self._user_on_token:
@@ -216,6 +263,23 @@ class FleetController:
             raise ValueError(
                 f"request {req.rid}: needs more pages than a decode "
                 f"pool holds")
+        if self.slo_ttft is not None:
+            # SLO-aware shedding (DESIGN.md §13): price the arrival with
+            # the router's class-speed ETAs. If even the BEST prefill
+            # group cannot reach first token inside the SLO, the degraded
+            # fleet provably cannot serve it — shed now, explicitly,
+            # instead of finishing late. Shed requests count as submitted
+            # (the invariant is submitted ⊆ finished ∪ rejected ∪ shed)
+            # but never enter the latency metrics.
+            eta = min(self.router.prefill_eta(g, len(req.prompt))
+                      for g in pre)
+            if eta > self.slo_ttft:
+                self.submitted.add(req.rid)
+                self.shed.append(req.rid)
+                self.metrics.robust.shed_requests += 1
+                self.events.append(FleetEvent(self.tick_count, "shed", -1,
+                                              f"rid {req.rid}"))
+                return
         g = self.router.place_request(pre, len(req.prompt))
         g.worker.sched.submit(req)  # validates + prefill-pool fit
         self.submitted.add(req.rid)
@@ -226,7 +290,13 @@ class FleetController:
     def kill_group(self, gid: int) -> None:
         """Crash a group: it stops beating and stops computing. Its state
         is unreachable from now on; recovery happens only after the
-        heartbeat grace window declares it dead."""
+        heartbeat grace window declares it dead. Killing a quarantined
+        zombie really kills it — it never rejoins."""
+        for z in self.zombies:
+            if z.gid == gid:
+                z.alive = False
+                self.zombies.remove(z)
+                return
         self.group(gid).alive = False
 
     def _requeue(self, request: Request, resume: List[int]) -> None:
@@ -288,9 +358,17 @@ class FleetController:
             self.monitor.remove(name)
             self.detector.remove(name)
             self.groups.remove(g)
-            self.events.append(FleetEvent(self.tick_count, "dead", g.gid,
-                                          g.role))
+            # Declared dead while still computing (suppressed heartbeats,
+            # not a crash): a ZOMBIE — the detection was a false positive
+            # and the group will keep producing completions. Fence its
+            # epoch and quarantine it; it may rejoin at gen+1 later.
+            zombie = g.alive
+            self.events.append(FleetEvent(
+                self.tick_count, "dead", g.gid,
+                g.role + (" (zombie)" if zombie else "")))
             victims = self._strip_group_work(g, abort_exports=False)
+            if zombie:
+                self._quarantine(g)
             # Revive a decode-less fleet before re-routing its victims.
             if self.elastic and not self.decode_groups():
                 self._force_decode_flip()
@@ -300,6 +378,49 @@ class FleetController:
                 self.events.append(FleetEvent(
                     self.tick_count, "recover", g.gid,
                     f"{len(victims)} requests re-prefill"))
+
+    def _quarantine(self, g: FleetGroup) -> None:
+        """Fence a falsely-dead group's epoch and detach it from every
+        fleet-shared structure, so the zombie can keep computing without
+        corrupting the results log the replacement is rebuilding."""
+        self.fenced.add((g.gid, g.generation))
+        w = g.worker
+        if g.role == DECODE:
+            # Private snapshot of the results log: the zombie's scheduler
+            # keeps appending (its requests are still live inside it) but
+            # the fleet log only hears from it via the fenced callback,
+            # which rejects everything. Same for metrics: a private,
+            # seeded ServeMetrics absorbs its on_token/on_finish calls.
+            w.sched.results = {rid: list(toks)
+                               for rid, toks in self.results.items()}
+            m = ServeMetrics()
+            for run in w.sched.running.values():
+                m.requests[run.request.rid] = \
+                    RequestTrace(rid=run.request.rid)
+            w.metrics = m
+        self.zombies.append(g)
+
+    def _maybe_rejoin_zombies(self) -> None:
+        """Re-admit quarantined groups whose heartbeats returned: bump
+        the generation (the fence keeps rejecting the old epoch), build a
+        fresh worker + pool, and rejoin with a fresh grace window."""
+        if self.chaos is None:
+            return
+        for z in list(self.zombies):
+            if self.chaos.active("hb_loss", z.name):
+                continue
+            self.zombies.remove(z)
+            z.generation += 1
+            z.draining = False
+            z.worker = self._make_decode(self.results, None) \
+                if z.role == DECODE else self._make_prefill()
+            self._wire(z)
+            self.groups.append(z)
+            self.monitor.add(z.name)
+            self.detector.add(z.name)
+            self.metrics.robust.zombie_rejoins += 1
+            self.events.append(FleetEvent(self.tick_count, "rejoin",
+                                          z.gid, f"gen {z.generation}"))
 
     # -- elastic role flips -------------------------------------------------
 
@@ -370,25 +491,75 @@ class FleetController:
     # -- one fleet tick -----------------------------------------------------
 
     def tick(self) -> None:
+        chaos = self.chaos
+        if chaos is not None:
+            chaos.begin_tick(self.tick_count)
+            for g in list(self.groups):
+                if g.alive and chaos.fire("crash_start", g.name):
+                    self.kill_group(g.gid)
         for g in self.groups:
-            if g.alive:
+            if g.alive and not (chaos is not None
+                                and chaos.active("hb_loss", g.name)):
                 self.monitor.beat(g.name)
         self._handle_deaths()
+        self._maybe_rejoin_zombies()
         for g in self.prefill_groups():
             t0 = time.perf_counter()
             for ticket in g.worker.step():
-                self.pending.append(_Pending(self.tick_count, g.gid, ticket))
+                self.pending.append(_Pending(self.tick_count, g.gid,
+                                             g.generation, ticket))
             self.detector.record(g.name, time.perf_counter() - t0)
+            if chaos is not None \
+                    and chaos.fire("crash_post_prefill", g.name):
+                self.kill_group(g.gid)
         while self.pending:
             # FIFO, head-of-line: a stuck head keeps its place in line.
             item = self.pending[0]
+            if (item.src_gid, item.gen) in self.fenced:
+                # A fenced epoch's ticket: its request was already
+                # re-routed when the group was declared dead — landing it
+                # too would double-serve. Drop, count, move on.
+                self.pending.popleft()
+                self.metrics.robust.fenced_stale_tickets += 1
+                continue
+            src = next((g for g in self.groups
+                        if g.gid == item.src_gid), None)
+            if src is None or not src.alive:
+                # Source crashed with the ticket parked: its pool is
+                # unreachable, so the ticket cannot migrate. Hold the
+                # line — the death path collects and re-prefills it once
+                # the grace window expires.
+                break
             tgt = self.router.place_ticket(self.decode_groups(),
                                            len(item.ticket.tokens))
             if tgt is None:
                 break
-            src = self.group(item.src_gid)
-            ok = tgt.worker.try_admit(item.ticket, src.worker,
-                                      self.transfer, self.tick_count)
+            try:
+                ok = tgt.worker.try_admit(item.ticket, src.worker,
+                                          self.transfer, self.tick_count,
+                                          src_name=src.name,
+                                          dst_name=tgt.name)
+            except TransferAbortedError:
+                # Retries exhausted: the decode side already rolled back
+                # (lease + slot). Roll back the source export and send
+                # the request down the re-prefill path — key(rid, n)
+                # sampling keeps its continuation token-exact.
+                self.pending.popleft()
+                t = item.ticket
+                src.worker.allocator.abort_export(t.request.rid)
+                src.worker.allocator.free(t.request.rid)
+                self.metrics.robust.transfer_aborts += 1
+                self._requeue(t.request,
+                              list(t.tokens[len(t.request.prompt):]))
+                continue
+            except GroupCrashed as e:
+                # One end died mid-transfer. The decode rollback already
+                # ran; the ticket stays head-of-line and the normal
+                # death machinery (grace window -> strip -> re-prefill)
+                # recovers whatever the victim held.
+                victim = src if e.role == "src" else tgt
+                self.kill_group(victim.gid)
+                break
             if not ok:
                 break
             self.pending.popleft()
@@ -400,8 +571,19 @@ class FleetController:
                 t0 = time.perf_counter()
                 g.worker.decode_once(self.tick_count)
                 self.detector.record(g.name, time.perf_counter() - t0)
+        # Zombies keep computing against their private quarantine state —
+        # that is exactly the race the fence exists to win. Their output
+        # lands in the fenced callback and is counted, never recorded.
+        for z in self.zombies:
+            if z.role == DECODE:
+                z.worker.ensure_pages()  # victims already re-routed
+                if z.worker.any_active():
+                    z.worker.decode_once(self.tick_count)
         if self.elastic:
             self._elastic_tick()
+        st = self.transfer.stats
+        self.metrics.robust.transfer_retries = st.n_retries
+        self.metrics.robust.checksum_failures = st.n_checksum_failures
         self.metrics.on_tick(
             self.queue_depth,
             sum(g.worker.sched.n_active for g in self.decode_groups()))
@@ -419,11 +601,12 @@ class FleetController:
             kills: Sequence[Tuple[int, int]] = (),
             max_ticks: int = 100_000) -> Dict[int, List[int]]:
         """Drive a trace to completion. ``kills`` is [(tick, gid)] fault
-        injection: the group crashes at the START of that tick. The run
-        is complete when every submitted request has finished or been
-        rejected — NOT when queues look empty, because a crashed group's
-        requests are invisible until the heartbeat grace window expires.
-        """
+        injection: the group crashes at the START of that tick (scripted
+        — the seeded chaos layer injects everything else). The run is
+        complete when every submitted request has finished, been
+        rejected, or been shed — NOT when queues look empty, because a
+        crashed group's requests are invisible until the heartbeat grace
+        window expires."""
         arrivals = sorted(requests, key=lambda r: r.arrival)
         kill_q = sorted(kills)
         k = 0
@@ -439,7 +622,8 @@ class FleetController:
                     self.rejected.append(req.rid)
             if not arrivals and k >= len(kill_q) \
                     and self.submitted <= (self.finished
-                                           | set(self.rejected)):
+                                           | set(self.rejected)
+                                           | set(self.shed)):
                 return self.results
             self.tick()
             if self.tick_count > max_ticks:
@@ -459,7 +643,10 @@ def make_fleet(cfg, mesh, run, params, *, prefill_classes: Sequence[str],
                metrics: Optional[ServeMetrics] = None,
                on_token: Optional[Callable] = None, elastic: bool = False,
                grace_ticks: int = 3, wait_hi_ticks: int = 4,
-               backlog_hi_chunks: int = 8) -> FleetController:
+               backlog_hi_chunks: int = 8,
+               chaos: Optional[FaultInjector] = None,
+               slo_ttft: Optional[float] = None,
+               transfer_max_retries: int = 3) -> FleetController:
     """Wire up a full fleet over one mesh (the multi-group analogue of
     ``make_disagg``). ``prefill_classes`` / ``decode_classes`` name the
     device class of each initial group (keys of ``hardware.CLASSES``) —
@@ -531,11 +718,13 @@ def make_fleet(cfg, mesh, run, params, *, prefill_classes: Sequence[str],
     router = FleetRouter(prefill_speed=prefill_speed,
                          decode_speed=decode_speed)
     transfer = KVTransferEngine(chunk_pages=transfer_chunk_pages,
-                                link_bw=link_bw, latency_s=latency_s)
+                                link_bw=link_bw, latency_s=latency_s,
+                                max_retries=transfer_max_retries,
+                                chaos=chaos)
     return FleetController(
         groups, router, transfer,
         make_prefill_worker=make_prefill_worker,
         make_decode_worker=make_decode_worker, metrics=shared,
         elastic=elastic, grace_ticks=grace_ticks,
         wait_hi_ticks=wait_hi_ticks, backlog_hi_chunks=backlog_hi_chunks,
-        on_token=on_token)
+        on_token=on_token, chaos=chaos, slo_ttft=slo_ttft)

@@ -25,7 +25,11 @@ implements:
   max inter-token latency, which is exactly where an SLO feels it.
 
 A request is **good** iff its TTFT ≤ ``slo_ttft`` and its worst ITL ≤
-``slo_itl``; goodput-under-SLO counts only good requests' tokens. Pure
+``slo_itl``; goodput-under-SLO counts only good requests' tokens. With
+``slo_admission`` on, an ARRIVAL whose best achievable prefill ETA
+already exceeds ``slo_ttft`` is SHED at the door (DESIGN.md §13) — an
+explicit outcome instead of a guaranteed-late finish; recovery
+re-entries are never shed (their tokens are already paid for). Pure
 python, deterministic, host-only.
 """
 
@@ -80,6 +84,7 @@ class FleetSimResult:
     n_finished: int
     n_good: int
     n_flips: int
+    n_shed: int = 0           # SLO-infeasible arrivals shed at admission
 
 
 @dataclasses.dataclass
@@ -116,12 +121,14 @@ def simulate_fleet_trace(reqs, groups: Sequence[SimGroup], *,
                          kills: Sequence[Tuple[float, int]] = (),
                          detect_delay: float = 1.0,
                          slo_ttft: float = _INF, slo_itl: float = _INF,
+                         slo_admission: bool = False,
                          max_events: int = 10_000_000) -> FleetSimResult:
     """Replay ``reqs`` (ServeRequest list) through a group fleet.
 
     ``groups`` are mutated (role, queues); pass fresh ones per run.
     ``kills`` is [(time, gid)]: the group dies at that time, its work
-    re-enters the router ``detect_delay`` later.
+    re-enters the router ``detect_delay`` later. ``slo_admission``
+    sheds arrivals whose best prefill ETA exceeds ``slo_ttft``.
     """
     groups = list(groups)
     by_gid = {g.gid: g for g in groups}
@@ -137,6 +144,7 @@ def simulate_fleet_trace(reqs, groups: Sequence[SimGroup], *,
     t = 0.0
     next_ctrl = control_dt if elastic else _INF
     n_flips = 0
+    n_shed = 0
 
     def prefill_groups():
         return [g for g in groups if g.alive and g.role == "prefill"]
@@ -312,10 +320,20 @@ def simulate_fleet_trace(reqs, groups: Sequence[SimGroup], *,
         while delayed and delayed[0][0] <= t:
             _, i = delayed.pop(0)
             route_prefill(i, t)
-        # 3. arrivals.
+        # 3. arrivals (SLO admission sheds provably-late ones at the door:
+        #    the best ETA over live prefill groups — queue drain + own
+        #    chunks + any flip latency — already blows the TTFT budget).
         while a_ptr < len(arrivals) and R[arrivals[a_ptr]].arrival <= t:
-            route_prefill(arrivals[a_ptr], t)
+            i = arrivals[a_ptr]
             a_ptr += 1
+            if slo_admission and slo_ttft < _INF:
+                etas = [backlog_s(g) + chunks_of(i) * g.t_prefill_chunk
+                        + max(g.avail_at - t, 0.0)
+                        for g in prefill_groups()]
+                if etas and min(etas) > slo_ttft:
+                    n_shed += 1
+                    continue
+            route_prefill(i, t)
         # 4. prefill completions -> tickets.
         for g in groups:
             while g.alive and g.role == "prefill" and \
@@ -359,4 +377,4 @@ def simulate_fleet_trace(reqs, groups: Sequence[SimGroup], *,
         ttft_p99=percentile([r.ttft for r in R if r.ttft is not None], 0.99),
         itl_p99=percentile([r.max_itl for r in done], 0.99),
         n_requests=len(R), n_finished=len(done), n_good=len(good),
-        n_flips=n_flips)
+        n_flips=n_flips, n_shed=n_shed)

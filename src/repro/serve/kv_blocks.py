@@ -23,7 +23,14 @@ Contracts:
   in-flight KV transfer, reachable by neither side's engines) ->
   released (back on the free list once the destination pool holds the
   data). ``check()`` counts exported pages, so exactly-once ownership is
-  asserted ACROSS the handoff, not just within one pool.
+  asserted ACROSS the handoff, not just within one pool;
+* the DESTINATION half of a handoff holds its claimed pages under an
+  in-flight LEASE (``begin_import`` -> ``commit_import`` /
+  ``abort_import``, DESIGN.md §13): leased pages are off the free list
+  but not yet in any live table, so a transfer that dies mid-flight can
+  neither leak a page (abort returns the whole lease) nor double-own one
+  (``check()`` counts leases too). ``import_pages`` is the one-shot
+  begin+commit wrapper for transfers with no failure path.
 """
 
 from __future__ import annotations
@@ -49,6 +56,7 @@ class BlockAllocator:
         self._free: List[int] = list(range(n_pages - 1, -1, -1))  # pop -> 0
         self.tables: Dict[int, List[int]] = {}  # rid -> owned page ids
         self.exported: Dict[int, List[int]] = {}  # rid -> in-transit pages
+        self.leases: Dict[int, List[int]] = {}  # rid -> inbound in-flight
 
     # -- capacity -----------------------------------------------------------
 
@@ -126,15 +134,41 @@ class BlockAllocator:
         assert rid not in self.tables, f"rid {rid} re-allocated mid-export"
         self.tables[rid] = self.exported.pop(rid)
 
-    def import_pages(self, rid: int, n_tokens: int) -> Optional[List[int]]:
-        """Destination half of the handoff: claim pages covering
-        ``n_tokens`` lines for the inbound request. All-or-nothing like
-        ``allocate``; returns the destination page ids in logical order
-        (the transfer engine scatters the shipped payload into them and
-        the worker rewrites the request's page table to point at them),
-        or None when the pool cannot cover the request."""
-        if not self.allocate(rid, n_tokens):
+    def begin_import(self, rid: int, n_tokens: int) -> Optional[List[int]]:
+        """Destination half of the handoff, transactional (DESIGN.md §13):
+        claim pages covering ``n_tokens`` lines under an in-flight LEASE.
+        Leased pages are off the free list but in no live table — the
+        transfer engine scatters into them while they are unreachable by
+        any engine-side page table. ``commit_import`` lands them in the
+        live table; ``abort_import`` (transfer failed / destination
+        crashed mid-flight) returns the whole lease to the free list, so
+        a dead transfer can neither leak nor double-own a page.
+        All-or-nothing like ``allocate``; returns the leased page ids in
+        logical order, or None when the pool cannot cover the request."""
+        assert rid not in self.tables, f"rid {rid} already owns pages"
+        assert rid not in self.leases, f"rid {rid} already importing"
+        need = self.pages_for(n_tokens)
+        if need > len(self._free) or need > self.max_pages_per_seq:
             return None
+        self.leases[rid] = [self._free.pop() for _ in range(need)]
+        return list(self.leases[rid])
+
+    def commit_import(self, rid: int) -> None:
+        """Transfer landed: promote the lease to the live table."""
+        assert rid not in self.tables, f"rid {rid} re-allocated mid-import"
+        self.tables[rid] = self.leases.pop(rid)
+
+    def abort_import(self, rid: int) -> None:
+        """Transfer failed: the leased pages hold garbage no table points
+        at — return them to the free list untouched."""
+        self._free.extend(self.leases.pop(rid))
+
+    def import_pages(self, rid: int, n_tokens: int) -> Optional[List[int]]:
+        """One-shot begin+commit import for transfers with no failure
+        path (returns the page ids now in ``rid``'s live table)."""
+        if self.begin_import(rid, n_tokens) is None:
+            return None
+        self.commit_import(rid)
         return list(self.tables[rid])
 
     # -- introspection ------------------------------------------------------
@@ -156,12 +190,14 @@ class BlockAllocator:
 
     def check(self) -> None:
         """Assert the no-sharing invariant: every physical page appears
-        exactly once across the free list, all live tables, and all
-        in-transit exports."""
+        exactly once across the free list, all live tables, all
+        in-transit exports, and all in-flight import leases."""
         seen = list(self._free)
         for rid, pages in self.tables.items():
             seen.extend(pages)
         for rid, pages in self.exported.items():
+            seen.extend(pages)
+        for rid, pages in self.leases.items():
             seen.extend(pages)
         assert len(seen) == self.n_pages, \
             f"page leak: {len(seen)} tracked of {self.n_pages}"

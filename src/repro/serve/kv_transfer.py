@@ -1,4 +1,4 @@
-"""Page-granular KV transfer between paged pools (DESIGN.md §10).
+"""Page-granular KV transfer between paged pools (DESIGN.md §10, §13).
 
 The disaggregated handoff ships a finished prefill's KV from the prefill
 group's pool to the decode group's pool by moving ONLY the request's
@@ -15,23 +15,65 @@ KV pipelines across the link instead of serializing behind one bulk copy
 chunk is padded — source padding re-reads page 0 harmlessly, destination
 padding uses the out-of-bounds sentinel and is dropped by the scatter).
 
+The transfer is TRANSACTIONAL per chunk (DESIGN.md §13): every chunk is
+checksummed at the source and verified at the destination, a dropped or
+corrupted chunk is retried with bounded exponential backoff, and a
+delivered-but-unacknowledged chunk (link stall) is simply replayed — the
+page-granular scatter is idempotent, so at-least-once delivery is safe.
+When a chunk exhausts its retry budget the whole transfer aborts with
+:class:`TransferAbortedError` and NOTHING has changed ownership: the
+source pages are still in the exporting allocator's EXPORTED state
+(rolled back via ``abort_export``) and the destination pages are still
+under their import LEASE (rolled back via ``abort_import``). Faults come
+from an optional :class:`~repro.ft.chaos.FaultInjector` consulted at the
+named hook points (drop / corrupt / stall per chunk, matched against the
+receiving group's name; crash_mid_export / crash_mid_import between
+chunks raise :class:`~repro.ft.chaos.GroupCrashed`).
+
 On this container both pools share one process, so the "link" is a cost
 model: :class:`TransferStats` accrues the simulated wire time
-(per-chunk latency + bytes/bandwidth) that the serving simulator and
-bench report; the data path itself is the real gather/scatter.
+(per-chunk latency + bytes/bandwidth, plus timeout and backoff charges
+on the retry path) that the serving simulator and bench report; the data
+path itself is the real gather/scatter.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.chaos import FaultInjector, GroupCrashed
 from repro.models import stack
 from repro.sharding.rules import constraint, transfer_payload_spec
+
+
+class TransferAbortedError(RuntimeError):
+    """A chunk exhausted its retry budget; the transfer rolled back —
+    neither pool's ownership changed (source still EXPORTED, destination
+    lease still open for the caller to abort)."""
+
+
+def _tree_crc(payload) -> int:
+    """Host-side CRC32 over every leaf of a payload tree — the per-chunk
+    checksum both ends of the link compute."""
+    crc = 0
+    for leaf in jax.tree.leaves(payload):
+        crc = zlib.crc32(np.asarray(leaf).tobytes(), crc)
+    return crc
+
+
+def _flip_bits(payload):
+    """Simulated wire corruption: flip the first byte of the first leaf
+    (shape/dtype preserved, so only the checksum can tell)."""
+    leaves, treedef = jax.tree.flatten(payload)
+    v = np.asarray(leaves[0]).copy()
+    v.view(np.uint8).reshape(-1)[:1] ^= 0xFF
+    return jax.tree.unflatten(treedef, [jnp.asarray(v)] + leaves[1:])
 
 
 @dataclasses.dataclass
@@ -43,6 +85,12 @@ class TransferStats:
     n_chunks: int = 0
     bytes: int = 0            # real payload bytes (padding excluded)
     sim_seconds: float = 0.0  # simulated link occupancy
+    # -- robustness (DESIGN.md §13) --
+    n_retries: int = 0            # chunk re-attempts after any fault
+    n_timeouts: int = 0           # chunks lost on the wire / acks lost
+    n_checksum_failures: int = 0  # corrupted chunks caught at the receiver
+    n_replayed_chunks: int = 0    # delivered chunks re-applied (lost ack)
+    n_aborts: int = 0             # transfers that exhausted their retries
     # The DISTINCT leaf shapes that crossed the link, for the structural
     # pages-only guarantee: tests assert each one is page-granular
     # [k, page_size, ...] and that no contiguous [tokens, ...] cache ever
@@ -60,11 +108,19 @@ class KVTransferEngine:
     """Ships a request's KV pages between two paged decode-state trees."""
 
     def __init__(self, *, chunk_pages: int = 4,
-                 link_bw: Optional[float] = None, latency_s: float = 0.0):
-        assert chunk_pages >= 1
+                 link_bw: Optional[float] = None, latency_s: float = 0.0,
+                 max_retries: int = 3, timeout_s: float = 0.05,
+                 backoff_s: float = 0.01, verify_checksums: bool = True,
+                 chaos: Optional[FaultInjector] = None):
+        assert chunk_pages >= 1 and max_retries >= 0
         self.chunk_pages = chunk_pages
         self.link_bw = link_bw
         self.latency_s = latency_s
+        self.max_retries = max_retries
+        self.timeout_s = timeout_s
+        self.backoff_s = backoff_s
+        self.verify_checksums = verify_checksums
+        self.chaos = chaos
         self.stats = TransferStats()
 
         def gather(state, ids):
@@ -85,16 +141,38 @@ class KVTransferEngine:
             // max(n_pages_in_payload, 1)
 
     def transfer(self, src_state, dst_state, src_ids: List[int],
-                 dst_ids: List[int], *, dst_n_pages: int):
+                 dst_ids: List[int], *, dst_n_pages: int,
+                 src_name: str = "*", dst_name: str = "*"):
         """Move pages ``src_ids`` of ``src_state``'s pools into pages
         ``dst_ids`` of ``dst_state``'s pools, chunk by chunk. Returns the
         updated destination state; the source state is read-only (its
-        pages recycle via the exporting allocator, not here)."""
+        pages recycle via the exporting allocator, not here).
+
+        Raises :class:`TransferAbortedError` when a chunk exhausts its
+        retry budget, and :class:`~repro.ft.chaos.GroupCrashed` when a
+        chaos crash fires between chunks — in both cases the caller rolls
+        ownership back (``abort_export`` / ``abort_import``). The scatter
+        DONATES the destination state, so once any chunk has landed the
+        caller's original reference is dead; both exceptions therefore
+        carry the live partially-scattered tree as ``.dst_state`` and the
+        caller MUST rebind to it before rolling back. The partial writes
+        only touched pages under the import lease, which ``abort_import``
+        returns to the free list — their contents are unreachable."""
         assert len(src_ids) == len(dst_ids) and src_ids, \
             "transfer needs matching non-empty page-id lists"
+        chaos = self.chaos
         n = len(src_ids)
         cp = self.chunk_pages
         for lo in range(0, n, cp):
+            if chaos is not None:
+                if chaos.fire("crash_mid_export", src_name):
+                    exc = GroupCrashed("src", src_name)
+                    exc.dst_state = dst_state
+                    raise exc
+                if chaos.fire("crash_mid_import", dst_name):
+                    exc = GroupCrashed("dst", dst_name)
+                    exc.dst_state = dst_state
+                    raise exc
             src_chunk = list(src_ids[lo:lo + cp])
             dst_chunk = list(dst_ids[lo:lo + cp])
             real = len(src_chunk)
@@ -102,10 +180,48 @@ class KVTransferEngine:
             # dropped dst sentinel makes the duplicate write a no-op).
             src_chunk += [0] * (cp - real)
             dst_chunk += [dst_n_pages] * (cp - real)
-            payload = self._gather(src_state,
-                                   jnp.asarray(src_chunk, jnp.int32))
-            dst_state = self._scatter(dst_state, payload,
-                                      jnp.asarray(dst_chunk, jnp.int32))
+            src_arr = jnp.asarray(src_chunk, jnp.int32)
+            dst_arr = jnp.asarray(dst_chunk, jnp.int32)
+            committed = False
+            for attempt in range(1 + self.max_retries):
+                if attempt:
+                    # Bounded exponential backoff before each retry,
+                    # charged to the simulated link clock.
+                    self.stats.n_retries += 1
+                    self.stats.sim_seconds += \
+                        self.backoff_s * (2 ** (attempt - 1))
+                payload = self._gather(src_state, src_arr)
+                if chaos is not None and chaos.fire("drop", dst_name):
+                    # Chunk lost on the wire: the receiver times out.
+                    self.stats.n_timeouts += 1
+                    self.stats.sim_seconds += self.timeout_s
+                    continue
+                crc = _tree_crc(payload) if self.verify_checksums else None
+                if chaos is not None and chaos.fire("corrupt", dst_name):
+                    payload = _flip_bits(payload)
+                if crc is not None and _tree_crc(payload) != crc:
+                    # Receiver-side checksum mismatch: discard, retry.
+                    self.stats.n_checksum_failures += 1
+                    continue
+                dst_state = self._scatter(dst_state, payload, dst_arr)
+                if chaos is not None and chaos.fire("stall", dst_name):
+                    # Delivered but the ack is lost: the sender replays
+                    # the chunk. The scatter writes the same pages to the
+                    # same slots, so the at-least-once replay is safe —
+                    # idempotence is the contract, exercised here.
+                    self.stats.n_timeouts += 1
+                    self.stats.n_replayed_chunks += 1
+                    self.stats.sim_seconds += self.timeout_s
+                    continue
+                committed = True
+                break
+            if not committed:
+                self.stats.n_aborts += 1
+                exc = TransferAbortedError(
+                    f"chunk {lo // cp} of {src_name}->{dst_name} "
+                    f"exhausted {self.max_retries} retries")
+                exc.dst_state = dst_state
+                raise exc
             page_b = self._page_bytes(payload, cp)
             self.stats.n_chunks += 1
             self.stats.n_pages += real

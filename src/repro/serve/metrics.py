@@ -70,6 +70,23 @@ def _pctl(xs: List[float], q: float) -> float:
     return s[i]
 
 
+@dataclasses.dataclass
+class RobustnessCounters:
+    """Failure-path accounting (DESIGN.md §13) — every fault the serving
+    stack absorbed rather than surfaced, reported in bench summaries."""
+
+    transfer_retries: int = 0         # chunk re-attempts after any fault
+    checksum_failures: int = 0        # corrupted chunks caught + retried
+    transfer_aborts: int = 0          # transfers rolled back to re-prefill
+    shed_requests: int = 0            # SLO-infeasible arrivals shed
+    fenced_stale_completions: int = 0  # zombie tokens rejected by epoch
+    fenced_stale_tickets: int = 0     # zombie tickets dropped at admission
+    zombie_rejoins: int = 0           # falsely-dead groups re-admitted
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 class ServeMetrics:
     """Aggregates per-request traces + per-tick engine state."""
 
@@ -78,6 +95,7 @@ class ServeMetrics:
         self.requests: Dict[int, RequestTrace] = {}
         self.queue_depths: List[int] = []
         self.active_counts: List[int] = []
+        self.robust = RobustnessCounters()
         self._t0: Optional[float] = None
 
     # -- event hooks (called by the engine) ---------------------------------
@@ -128,6 +146,7 @@ class ServeMetrics:
             "queue_depth": {"mean": _mean(self.queue_depths),
                             "max": max(self.queue_depths, default=0)},
             "max_concurrent_active": max(self.active_counts, default=0),
+            "robustness": self.robust.as_dict(),
         }
 
 

@@ -222,6 +222,12 @@ class DecodeScheduler:
     def claim_slot(self) -> int:
         return self.free.pop()
 
+    def release_slot(self, slot: int) -> None:
+        """Return an UNUSED claimed slot (admission rolled back before
+        ``activate`` — e.g. the KV transfer aborted, DESIGN.md §13)."""
+        assert slot not in self.running, f"slot {slot} is live"
+        self.free.append(slot)
+
     # -- lifecycle ----------------------------------------------------------
 
     def activate(self, request: Request, slot: int, tokens: List[int],

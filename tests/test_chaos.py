@@ -1,0 +1,337 @@
+"""Chaos-hardened serving (DESIGN.md §13).
+
+Covers the deterministic fault-injection layer end to end: the spec
+grammar and its parse-time validation, seeded injector replay, the
+transactional KV-transfer retry/rollback machine (host-only fakes for
+the link, so every fault path is exercised without a mesh), and the REAL
+tiny fleet under the full seeded fault-schedule matrix from
+:func:`repro.core.simulator.chaos_matrix` — the headline invariant: every
+submitted request is finished (token-exact vs the fault-free run) or
+explicitly shed, surviving pools hold the exactly-once page invariant
+with zero pages in use after drain, and a replay with the same
+``(seed, spec)`` produces an identical fault log and identical results.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import chaos_matrix
+from repro.ft.chaos import (FaultInjector, FaultPlan, FaultSpec,
+                            GroupCrashed)
+from repro.serve.fleet import make_fleet
+from repro.serve.kv_transfer import KVTransferEngine, TransferAbortedError
+from repro.serve.metrics import ServeMetrics
+
+from tests.test_serve_disagg import RUN, TINY  # noqa: F401
+from tests.test_serve_fleet import _trace, mesh1, tiny_params  # noqa: F401
+
+pytestmark = pytest.mark.chaos  # CI chaos-smoke job slice
+
+
+# ---------------------------------------------------------------------------
+# Spec grammar (host-only)
+# ---------------------------------------------------------------------------
+
+def test_parse_full_grammar():
+    plan = FaultPlan.parse("drop%0.5*4; corrupt@3:g2*2 ;hb_loss@6:g3~8")
+    assert plan.specs[0] == FaultSpec("drop", None, "*", 0.5, 4, 1)
+    assert plan.specs[1] == FaultSpec("corrupt", 3, "g2", 1.0, 2, 1)
+    assert plan.specs[2] == FaultSpec("hb_loss", 6, "g3", 1.0, 1, 8)
+
+
+def test_parse_defaults():
+    (s,) = FaultPlan.parse("stall").specs
+    assert (s.tick, s.target, s.prob, s.count, s.duration) == \
+        (None, "*", 1.0, 1, 1)
+
+
+@pytest.mark.parametrize("bad,match", [
+    ("", "empty"),
+    ("  ;  ", "empty"),
+    ("frobnicate*2", "unknown chaos site"),
+    ("drop%0", "probability"),
+    ("drop%1.5", "probability"),
+    ("drop*0", "count"),
+    ("hb_loss@2:g1~0", "duration"),
+    ("drop~4", "DURATION"),                 # windows only
+    ("hb_loss:g1", "@TICK"),                # window needs a start
+    ("hb_loss@4~2", "TARGET"),              # window needs a group
+    ("crash_start@2", "TARGET"),            # crashes need a group
+    ("drop@@2", "malformed"),
+])
+def test_parse_rejects_malformed(bad, match):
+    with pytest.raises(ValueError, match=match):
+        FaultPlan.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# Injector semantics (host-only)
+# ---------------------------------------------------------------------------
+
+def test_fire_respects_arming_budget_and_target():
+    inj = FaultInjector(FaultPlan.parse("drop@3:g2*2"), seed=0)
+    inj.begin_tick(2)
+    assert not inj.fire("drop", "g2")        # not armed yet
+    inj.begin_tick(3)
+    assert not inj.fire("drop", "g9")        # wrong target
+    assert not inj.fire("corrupt", "g2")     # wrong site
+    assert inj.fire("drop", "g2")
+    assert inj.fire("drop", "g2")
+    assert not inj.fire("drop", "g2")        # budget spent
+    assert inj.log() == [(3, "drop", "g2", 0), (3, "drop", "g2", 1)]
+
+
+def test_window_active_and_logged_once():
+    inj = FaultInjector(FaultPlan.parse("hb_loss@5:g3~3"), seed=0)
+    for t, want in [(4, False), (5, True), (7, True), (8, False)]:
+        inj.begin_tick(t)
+        assert inj.active("hb_loss", "g3") is want
+        assert not inj.fire("hb_loss", "g3")  # windows never fire point-wise
+    assert len(inj.log()) == 1                # opening logged exactly once
+
+
+def test_seeded_replay_is_bit_identical():
+    def drive(seed):
+        inj = FaultInjector(FaultPlan.parse("drop%0.4*6"), seed=seed)
+        for t in range(30):
+            inj.begin_tick(t)
+            inj.fire("drop", "g2")
+        return inj.log(), inj.log_signature()
+
+    assert drive(11) == drive(11)
+    assert drive(11)[1] != drive(12)[1]       # the seed is the plan
+
+
+# ---------------------------------------------------------------------------
+# Transactional transfer: retry / replay / rollback (host-only fakes)
+# ---------------------------------------------------------------------------
+
+def _fake_engine(spec=None, seed=0, **kw):
+    """A KVTransferEngine whose link is a pair of host fakes: gather
+    returns a fixed numpy payload, scatter counts applications by
+    incrementing the (integer) destination state."""
+    chaos = FaultInjector(FaultPlan.parse(spec), seed=seed) if spec \
+        else None
+    kw.setdefault("chunk_pages", 2)
+    kw.setdefault("max_retries", 2)
+    kw.setdefault("timeout_s", 0.5)
+    kw.setdefault("backoff_s", 0.1)
+    eng = KVTransferEngine(chaos=chaos, **kw)
+    eng._gather = lambda state, ids: {"kv": np.ones((2, 4), np.float32)}
+    eng._scatter = lambda dst, payload, ids: dst + 1
+    return eng
+
+
+def _ship(eng, n_pages=2):
+    ids = list(range(n_pages))
+    return eng.transfer("src", 0, ids, ids, dst_n_pages=8,
+                        src_name="g0", dst_name="g2")
+
+
+def test_clean_transfer_applies_each_chunk_once():
+    eng = _fake_engine()
+    assert _ship(eng, n_pages=4) == 2        # 4 pages / chunk_pages=2
+    st = eng.stats
+    assert (st.n_retries, st.n_timeouts, st.n_aborts) == (0, 0, 0)
+    assert st.n_pages == 4 and st.n_chunks == 2
+
+
+def test_drop_retries_then_commits_and_charges_the_clock():
+    eng = _fake_engine("drop:g2*1")
+    assert _ship(eng) == 1
+    st = eng.stats
+    assert (st.n_retries, st.n_timeouts) == (1, 1)
+    assert st.sim_seconds == pytest.approx(0.5 + 0.1)  # timeout + backoff
+
+
+def test_corrupt_caught_by_checksum_and_retried():
+    eng = _fake_engine("corrupt:g2*1")
+    assert _ship(eng) == 1
+    assert eng.stats.n_checksum_failures == 1
+    assert eng.stats.n_retries == 1
+
+
+def test_corrupt_slips_through_without_checksums():
+    eng = _fake_engine("corrupt:g2*1", verify_checksums=False)
+    assert _ship(eng) == 1                   # delivered, nobody noticed
+    assert eng.stats.n_checksum_failures == 0
+    assert eng.stats.n_retries == 0
+
+
+def test_stall_replays_the_chunk_idempotently():
+    eng = _fake_engine("stall:g2*1")
+    # delivered + replayed: the scatter applied TWICE — idempotence is
+    # the contract the page-granular scatter provides.
+    assert _ship(eng) == 2
+    st = eng.stats
+    assert st.n_replayed_chunks == 1 and st.n_timeouts == 1
+    assert st.n_chunks == 1                  # accounted once, not twice
+
+
+def test_retry_exhaustion_aborts_with_rollback_state():
+    eng = _fake_engine("drop:g2*3")          # budget > max_retries=2
+    with pytest.raises(TransferAbortedError) as ei:
+        _ship(eng)
+    assert eng.stats.n_aborts == 1
+    # nothing landed: the caller's state rides back on the exception
+    assert ei.value.dst_state == 0
+
+
+def test_abort_after_partial_scatter_hands_back_live_state():
+    # Every attempt DELIVERS (scatter lands) but the ack is lost, until
+    # the retry budget dies: the donated-state contract — the exception
+    # carries the live tree with the landed writes (harmless: those
+    # pages are still under lease when the caller aborts the import).
+    eng = _fake_engine("stall:g2*3")         # budget > max_retries=2
+    with pytest.raises(TransferAbortedError) as ei:
+        _ship(eng)
+    assert ei.value.dst_state == 3           # one scatter per attempt
+    assert eng.stats.n_replayed_chunks == 3
+
+
+@pytest.mark.parametrize("site,role,victim", [
+    ("crash_mid_export:g0", "src", "g0"),
+    ("crash_mid_import:g2", "dst", "g2"),
+])
+def test_mid_transfer_crash_raises_with_role_and_state(site, role, victim):
+    eng = _fake_engine(site)
+    with pytest.raises(GroupCrashed) as ei:
+        _ship(eng)
+    assert ei.value.role == role and ei.value.name == victim
+    assert ei.value.dst_state == 0
+
+
+# ---------------------------------------------------------------------------
+# Real fleet under the seeded fault matrix (tiny model, CPU)
+# ---------------------------------------------------------------------------
+
+def _chaos_fleet(mesh, params, chaos=None, **kw):
+    kw.setdefault("prefill_classes", ["a40", "a40"])
+    kw.setdefault("decode_classes", ["v100", "v100"])
+    kw.setdefault("decode_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 6)
+    kw.setdefault("metrics", ServeMetrics())
+    return make_fleet(TINY, mesh, RUN, params, chaos=chaos, **kw)
+
+
+@pytest.fixture(scope="module")
+def fault_free(mesh1, tiny_params):
+    fleet = _chaos_fleet(mesh1, tiny_params)
+    return fleet.run(_trace())
+
+
+def _check_invariants(fleet, res, want):
+    all_rids = set(res) | set(fleet.shed) | set(fleet.rejected)
+    assert all_rids == set(want)             # submitted ⊆ finished ∪ shed
+    assert not fleet.rejected
+    for rid, toks in res.items():
+        assert toks == want[rid], f"rid {rid} diverged under faults"
+    for g in fleet.groups:
+        g.worker.allocator.check()
+        assert g.worker.allocator.pages_in_use == 0, \
+            f"group {g.name} leaked pages after drain"
+
+
+@pytest.mark.parametrize("name,spec,seed",
+                         chaos_matrix(), ids=[e[0] for e in chaos_matrix()])
+def test_fleet_survives_schedule_token_exact(mesh1, tiny_params,
+                                             fault_free, name, spec, seed):
+    """ACCEPTANCE: under every seeded schedule in the matrix — drops,
+    corruption, stalls, retry-exhaustion abort, heartbeat-flap zombies
+    and mid-tick crashes — every request finishes with EXACTLY the
+    fault-free run's tokens and no surviving pool leaks a page."""
+    inj = FaultInjector(FaultPlan.parse(spec), seed=seed)
+    fleet = _chaos_fleet(mesh1, tiny_params, chaos=inj)
+    res = fleet.run(_trace())
+    assert inj.log(), f"schedule {name!r} fired no fault on this trace"
+    _check_invariants(fleet, res, fault_free)
+
+
+def test_fleet_chaos_replay_is_deterministic(mesh1, tiny_params):
+    """Same (seed, spec) against the same trace: identical fault log
+    signature, identical events, identical results."""
+    _, spec, seed = next(e for e in chaos_matrix() if e[0] == "standard")
+
+    def run():
+        inj = FaultInjector(FaultPlan.parse(spec), seed=seed)
+        fleet = _chaos_fleet(mesh1, tiny_params, chaos=inj)
+        res = fleet.run(_trace())
+        return res, inj.log(), inj.log_signature()
+
+    assert run() == run()
+
+
+def test_fleet_zombie_is_fenced_and_rejoins(mesh1, tiny_params,
+                                            fault_free):
+    """A heartbeat-flapped group is declared dead while still computing
+    (zombie), its stale completions are fenced by epoch, its requests
+    re-prefill elsewhere token-exactly, and when beats resume it rejoins
+    at generation + 1."""
+    inj = FaultInjector(FaultPlan.parse("hb_loss@6:g3~8"), seed=505)
+    fleet = _chaos_fleet(mesh1, tiny_params, chaos=inj)
+    res = fleet.run(_trace())
+    _check_invariants(fleet, res, fault_free)
+    kinds = [e.kind for e in fleet.events]
+    assert "dead" in kinds and "rejoin" in kinds
+    assert fleet.metrics.robust.zombie_rejoins >= 1
+    assert fleet.fenced                      # the old epoch stays fenced
+    rejoined = fleet.group(3)
+    assert rejoined.generation >= 1
+    assert (3, 0) in fleet.fenced
+
+
+def test_fleet_transfer_abort_recovers_via_reprefill(mesh1, tiny_params,
+                                                     fault_free):
+    """A transfer that exhausts its retry budget rolls BOTH pools back
+    and the ticket's request re-prefills — nothing is lost, the abort is
+    visible in the robustness counters."""
+    inj = FaultInjector(FaultPlan.parse("drop@2*12"), seed=404)
+    fleet = _chaos_fleet(mesh1, tiny_params, chaos=inj)
+    res = fleet.run(_trace())
+    _check_invariants(fleet, res, fault_free)
+    assert fleet.metrics.robust.transfer_aborts >= 1
+    assert fleet.metrics.robust.transfer_retries >= 1
+
+
+def test_fleet_slo_shed_is_explicit_and_conserving(mesh1, tiny_params):
+    """With an impossibly tight TTFT SLO every arrival is shed — an
+    EXPLICIT outcome (counted, evented), never a silent drop — and the
+    conservation invariant counts shed as handled."""
+    fleet = _chaos_fleet(mesh1, tiny_params, slo_ttft=1e-9)
+    trace = _trace()
+    res = fleet.run(trace)
+    assert res == {}
+    assert sorted(fleet.shed) == sorted(r.rid for r in trace)
+    assert fleet.metrics.robust.shed_requests == len(trace)
+    assert [e.kind for e in fleet.events].count("shed") == len(trace)
+    for g in fleet.groups:
+        g.worker.allocator.check()
+        assert g.worker.allocator.pages_in_use == 0
+
+
+def test_fleet_generous_slo_sheds_nothing(mesh1, tiny_params, fault_free):
+    fleet = _chaos_fleet(mesh1, tiny_params, slo_ttft=1e9)
+    res = fleet.run(_trace())
+    assert not fleet.shed
+    _check_invariants(fleet, res, fault_free)
+
+
+# ---------------------------------------------------------------------------
+# Driver plumbing
+# ---------------------------------------------------------------------------
+
+def test_driver_rejects_chaos_without_fleet():
+    from repro.launch import serve as serve_mod
+    assert serve_mod.main(["--smoke", "--chaos", "drop"]) == 1
+
+
+def test_chaos_matrix_shape():
+    m = chaos_matrix()
+    assert len(m) >= 6
+    names = [n for n, _, _ in m]
+    assert len(set(names)) == len(names)
+    for _, spec, seed in m:
+        FaultPlan.parse(spec)                # every entry must parse
+        assert isinstance(seed, int)

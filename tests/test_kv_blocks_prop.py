@@ -1,0 +1,191 @@
+"""Property-based BlockAllocator coverage (DESIGN.md §9, §13).
+
+Drives the allocator through random sequences of EVERY ownership
+operation — allocate / extend / free, the export three-state machine,
+and the import lease machine (``begin_import`` / ``commit_import`` /
+``abort_import``) — with ``check()`` asserted after every single step, a
+pure-python mirror model cross-checking the page accounting, and the
+all-or-nothing contract verified on every refusal. Runs under real
+hypothesis when installed and under the vendored deterministic stub
+(tests/_stubs) otherwise.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.kv_blocks import BlockAllocator, pages_for
+
+pytestmark = pytest.mark.serve  # CI serve-smoke job slice
+
+N_PAGES = 24
+PAGE_SIZE = 4
+MAX_PAGES = 8
+
+
+def _fresh():
+    return BlockAllocator(N_PAGES, PAGE_SIZE, MAX_PAGES)
+
+
+# ---------------------------------------------------------------------------
+# Lease machine unit coverage
+# ---------------------------------------------------------------------------
+
+def test_lease_commit_promotes_to_live_table():
+    a = _fresh()
+    pages = a.begin_import(7, 10)            # 3 pages under lease
+    assert pages is not None and len(pages) == pages_for(10, PAGE_SIZE)
+    assert a.pages_in_use == 3               # leased pages are IN USE
+    assert 7 not in a.tables                 # ...but in no live table
+    a.check()
+    a.commit_import(7)
+    assert a.tables[7] == pages and 7 not in a.leases
+    a.check()
+    a.free(7)
+    assert a.pages_in_use == 0
+
+
+def test_lease_abort_returns_every_page():
+    a = _fresh()
+    a.begin_import(7, 10)
+    a.abort_import(7)
+    assert a.pages_in_use == 0 and 7 not in a.leases and 7 not in a.tables
+    a.check()
+
+
+def test_lease_is_all_or_nothing():
+    a = _fresh()
+    for rid, n_pages in ((1, MAX_PAGES), (2, MAX_PAGES),
+                         (3, N_PAGES - 2 * MAX_PAGES - 1)):
+        assert a.allocate(rid, n_pages * PAGE_SIZE)      # drain to 1 free
+    free_before = a.n_free
+    assert a.begin_import(9, 2 * PAGE_SIZE) is None      # needs 2, has 1
+    assert a.n_free == free_before                       # nothing grabbed
+    a.check()
+
+
+def test_lease_rejects_conflicting_rids():
+    a = _fresh()
+    a.begin_import(7, 4)
+    with pytest.raises(AssertionError, match="already importing"):
+        a.begin_import(7, 4)
+    a.commit_import(7)
+    with pytest.raises(AssertionError, match="already owns"):
+        a.begin_import(7, 4)
+
+
+def test_import_pages_wrapper_is_begin_plus_commit():
+    a = _fresh()
+    pages = a.import_pages(3, 9)
+    assert pages == a.tables[3] and 3 not in a.leases
+    a.check()
+
+
+def test_check_catches_a_leaked_lease_page():
+    a = _fresh()
+    a.begin_import(7, 4)
+    a.leases[7].pop()                        # corrupt: drop a leased page
+    with pytest.raises(AssertionError, match="leak"):
+        a.check()
+
+
+def test_release_slot_returns_unused_claim_and_rejects_live():
+    from repro.serve.scheduler import DecodeScheduler
+    s = DecodeScheduler(2, allocator=_fresh())
+    slot = s.claim_slot()
+    assert not s.has_free() or s.free        # one slot left at most
+    s.release_slot(slot)                     # admission rolled back
+    assert slot in s.free
+    slot = s.claim_slot()
+    s.running[slot] = object()               # now live: releasing is a bug
+    with pytest.raises(AssertionError, match="live"):
+        s.release_slot(slot)
+
+
+# ---------------------------------------------------------------------------
+# Property: random op sequences, check() after EVERY op
+# ---------------------------------------------------------------------------
+
+def _legal_ops(a: BlockAllocator, rid: int):
+    """Ops applicable to ``rid`` in its current (disjoint) ownership
+    state: live table / in-transit export / in-flight lease / nowhere."""
+    if rid in a.tables:
+        return ["extend", "free", "export"]
+    if rid in a.exported:
+        return ["release_exported", "abort_export"]
+    if rid in a.leases:
+        return ["commit_import", "abort_import"]
+    return ["allocate", "begin_import", "import_pages"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9),       # op selector
+                          st.integers(0, 4),       # rid
+                          st.integers(0, 40)),     # token count
+                min_size=0, max_size=80))
+def test_allocator_invariants_under_random_ops(script):
+    a = _fresh()
+    for sel, rid, n_tokens in script:
+        ops = _legal_ops(a, rid)
+        op = ops[sel % len(ops)]
+        free_before = a.n_free
+        if op == "allocate":
+            ok = a.allocate(rid, n_tokens)
+            want = pages_for(n_tokens, PAGE_SIZE)
+            if ok:
+                assert len(a.tables[rid]) == want
+                assert a.n_free == free_before - want
+            else:                            # all-or-nothing refusal
+                assert a.n_free == free_before and rid not in a.tables
+                assert want > free_before or want > MAX_PAGES
+        elif op == "extend":
+            had = len(a.tables[rid])
+            ok = a.extend(rid, 1)
+            assert len(a.tables[rid]) == had + (1 if ok else 0)
+        elif op == "free":
+            owned = len(a.tables.get(rid, ()))
+            a.free(rid)
+            assert a.n_free == free_before + owned
+        elif op == "export":
+            pages = a.export_pages(rid)
+            assert a.exported[rid] == pages and rid not in a.tables
+            assert a.n_free == free_before   # exported pages stay in use
+        elif op == "release_exported":
+            n = len(a.exported[rid])
+            a.release_exported(rid)
+            assert a.n_free == free_before + n
+        elif op == "abort_export":
+            pages = list(a.exported[rid])
+            a.abort_export(rid)
+            assert a.tables[rid] == pages    # back in the live table
+            assert a.n_free == free_before
+        elif op == "begin_import":
+            got = a.begin_import(rid, n_tokens)
+            want = pages_for(n_tokens, PAGE_SIZE)
+            if got is None:
+                assert a.n_free == free_before and rid not in a.leases
+                assert want > free_before or want > MAX_PAGES
+            else:
+                assert len(got) == want
+                assert a.n_free == free_before - want
+        elif op == "commit_import":
+            pages = list(a.leases[rid])
+            a.commit_import(rid)
+            assert a.tables[rid] == pages and rid not in a.leases
+            assert a.n_free == free_before   # ownership moved, not freed
+        elif op == "abort_import":
+            n = len(a.leases[rid])
+            a.abort_import(rid)
+            assert a.n_free == free_before + n and rid not in a.leases
+        elif op == "import_pages":
+            a.import_pages(rid, n_tokens)
+        a.check()                            # exactly-once, every step
+        assert a.pages_in_use == N_PAGES - a.n_free
+    # drain: every path back to the free list restores the full pool
+    for rid in list(a.leases):
+        a.abort_import(rid)
+    for rid in list(a.exported):
+        a.release_exported(rid)
+    for rid in list(a.tables):
+        a.free(rid)
+    a.check()
+    assert a.pages_in_use == 0

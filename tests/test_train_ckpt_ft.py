@@ -139,6 +139,61 @@ def test_checkpoint_detects_corruption(tmp_path):
         mgr.restore(params)
 
 
+def test_checkpoint_crash_mid_save_keeps_previous_step(tmp_path,
+                                                       monkeypatch):
+    """ACCEPTANCE (atomic publish, DESIGN.md §13): a crash BETWEEN the
+    tmp-dir write and the rename leaves the previous checkpoint as the
+    latest — the torn step is invisible to ``all_steps``/``restore`` and
+    a later save of the same step recovers cleanly over the debris."""
+    import repro.checkpoint.manager as mgr_mod
+    mgr = CheckpointManager(str(tmp_path))
+    params = {"a": jnp.arange(4.0)}
+    mgr.save(1, params)
+
+    real_rename = os.rename
+
+    def crash_rename(src, dst):
+        if os.path.basename(dst).startswith("step_"):
+            raise RuntimeError("power loss mid-publish")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(mgr_mod.os, "rename", crash_rename)
+    params2 = {"a": jnp.full(4, 9.0)}
+    with pytest.raises(RuntimeError, match="power loss"):
+        mgr.save(2, params2)
+    # the torn step 2 never published: tmp dir on disk, invisible to reads
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    assert mgr.all_steps() == [1]
+    step, p, _, _ = mgr.restore(params)
+    assert step == 1
+    np.testing.assert_allclose(p["a"], np.arange(4.0))
+    # power back on: the retried save publishes over the stale tmp debris
+    monkeypatch.setattr(mgr_mod.os, "rename", real_rename)
+    mgr.save(2, params2)
+    assert mgr.all_steps() == [1, 2]
+    step, p, _, _ = mgr.restore(params2)
+    assert step == 2
+    np.testing.assert_allclose(p["a"], np.full(4, 9.0))
+
+
+def test_checkpoint_save_fsyncs_before_publish(tmp_path, monkeypatch):
+    """Durability ordering: every file and directory involved in a save
+    is fsync'd BEFORE the rename publishes the step (fsync-after-rename
+    alone would allow a torn step to surface after a host crash)."""
+    import repro.checkpoint.manager as mgr_mod
+    order = []
+    real_fsync, real_rename = os.fsync, os.rename
+    monkeypatch.setattr(mgr_mod.os, "fsync",
+                        lambda fd: (order.append("fsync"), real_fsync(fd))[1])
+    monkeypatch.setattr(
+        mgr_mod.os, "rename",
+        lambda s, d: (order.append("rename"), real_rename(s, d))[1])
+    CheckpointManager(str(tmp_path)).save(1, {"a": jnp.ones(2)})
+    # arrays.npz + MANIFEST + tmp dir before the rename, parent dir after
+    assert order.index("rename") >= 3
+    assert order[-1] == "fsync" and order.count("rename") == 1
+
+
 def test_checkpoint_elastic_reshard(tmp_path, mesh8, mesh4):
     """Save under one mesh, restore onto a different mesh (elastic)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
