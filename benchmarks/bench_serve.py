@@ -54,9 +54,17 @@ may not drop work. Deterministic by construction (seeded fault plan,
 tick-domain metric), so check_regression.py can gate its trend. The
 degraded run's robustness counters ride along in the section.
 
+``--prefix`` adds the prefix-cache section (DESIGN.md §14): the same
+shared-prefix multi-tenant trace through the paged engine with the
+prefix cache OFF then ON (both via ``build_deployment``). The gate
+metric ``prefix.pages_alloc_ratio`` (pages drawn off vs on, must stay
+>= 1.3) and ``prefix.tokens_skipped`` are deterministic; the run also
+asserts both engines produced IDENTICAL tokens. ``ttft_hit_reduction``
+is wall-clock and informational.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--paged] \
-        [--disagg] [--ep] [--fleet] [--chaos] [--out PATH]
+        [--disagg] [--ep] [--fleet] [--chaos] [--prefix] [--out PATH]
 """
 
 from __future__ import annotations
@@ -453,6 +461,91 @@ def bench_chaos(args) -> dict:
     return section
 
 
+def bench_prefix(args) -> dict:
+    """BENCH_serve.json ``prefix`` section (DESIGN.md §14): the same
+    shared-prefix multi-tenant trace through the paged engine with the
+    prefix cache OFF then ON, both built through
+    :func:`repro.serve.build_deployment` (the one construction path).
+    The gate metric ``prefix.pages_alloc_ratio`` is the ratio of
+    physical pages drawn from the free list — a deterministic function
+    of the trace and scheduler, so check_regression.py gates its trend
+    and the run itself gates the >= 1.3x floor. Both runs must produce
+    IDENTICAL tokens (the cache may only skip work, never change it);
+    ``ttft_hit_reduction`` (wall-clock) rides along informationally."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.serve import build_tenant_trace
+    from repro.models import registry
+    from repro.models.modules import Policy, RunConfig
+    from repro.serve import (PagedCfg, PrefixCacheCfg, ServeConfig,
+                             ServeMetrics, build_deployment)
+
+    a = copy.copy(args)
+    a.requests = args.prefix_requests
+    a.rate = 0.6
+    a.tenants = 3
+    a.prompt_len = 48
+    a.gen = 12
+    a.shared_prefix_len = None  # half the prompt
+    cfg = registry.get_config(PAGED_ARCH)
+    if args.smoke:
+        cfg = registry.smoke_config(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    run = RunConfig(policy=Policy(), attn_impl="ref", moe_impl="gather")
+
+    def one(prefix_on):
+        sc = ServeConfig(
+            slots=args.slots, max_len=a.prompt_len + a.gen,
+            prefill_chunk=args.prefill_chunk,
+            paged=PagedCfg(enabled=True, page_size=8),
+            prefix=PrefixCacheCfg(enabled=prefix_on, fair=prefix_on))
+        metrics = ServeMetrics()
+        engine = build_deployment(cfg, mesh, run, sc, metrics=metrics)
+        trace = build_tenant_trace(a, cfg.vocab_size, sc.sampling)
+        t0 = time.perf_counter()
+        results = engine.run(trace)
+        wall = time.perf_counter() - t0
+        assert not engine.rejected and len(results) == len(trace)
+        engine.sched.allocator.check()
+        if engine.sched.prefix_index is not None:
+            engine.sched.prefix_index.check()
+        return results, metrics.summary(), engine.page_occupancy(), wall
+
+    res_off, sum_off, occ_off, wall_off = one(False)
+    res_on, sum_on, occ_on, wall_on = one(True)
+    assert res_on == res_off, \
+        "prefix cache changed tokens — it may only skip work"
+    pages_ratio = round(occ_off["pages_allocated"]
+                        / max(occ_on["pages_allocated"], 1), 3)
+    ttft_reduction = round(sum_off["ttft_s"]["p50"]
+                           / max(sum_on["ttft_s"]["p50"], 1e-9), 3)
+    section = {
+        "arch": PAGED_ARCH,
+        "trace": {"requests": a.requests, "tenants": a.tenants,
+                  "prompt_len": a.prompt_len, "gen": a.gen,
+                  "shared_prefix_len": a.prompt_len // 2, "rate": a.rate,
+                  "page_size": 8},
+        "token_exact": True,  # asserted above, both runs identical
+        "off": {"pages_allocated": occ_off["pages_allocated"],
+                "ttft_s_p50": round(sum_off["ttft_s"]["p50"], 4),
+                "wall_s": round(wall_off, 3)},
+        "on": {"pages_allocated": occ_on["pages_allocated"],
+               "pages_shared": occ_on["pages_shared"],
+               "n_cow_forks": occ_on["n_cow_forks"],
+               "prefix_hits": occ_on["prefix_hits"],
+               "ttft_s_p50": round(sum_on["ttft_s"]["p50"], 4),
+               "wall_s": round(wall_on, 3)},
+        "tokens_skipped": occ_on["tokens_skipped"],
+        "pages_alloc_ratio": pages_ratio,
+        "ttft_hit_reduction": ttft_reduction,
+    }
+    assert occ_on["prefix_hits"] > 0 and occ_on["tokens_skipped"] > 0, \
+        "shared-prefix trace produced no cache hits — the gate is vacuous"
+    assert pages_ratio >= 1.3, \
+        f"prefix cache cut pages allocated only {pages_ratio}x " \
+        f"(need >= 1.3x on the shared-prefix trace)"
+    return section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
@@ -480,6 +573,11 @@ def main():
                     help="run the chaos-resilience section (same fleet "
                          "trace fault-free vs under the standard fault "
                          "schedule; gates goodput_degraded_ratio)")
+    ap.add_argument("--prefix", action="store_true",
+                    help="run the prefix-cache section (shared-prefix "
+                         "multi-tenant trace, cache OFF vs ON; gates "
+                         "pages_alloc_ratio >= 1.3 and token-exactness)")
+    ap.add_argument("--prefix-requests", type=int, default=10)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     # fixed-trace knobs serve_arch reads beyond the CLI ones above
@@ -500,11 +598,17 @@ def main():
     args.decode_groups = "v100"
     args.fleet_elastic = False
     args.kill_group = None
+    args.tenants = 0
+    args.shared_prefix_len = None
+    args.prefix_cache = False
+    args.prefix_capacity = None
+    args.fair = False
     run_paged = args.paged
     run_disagg = args.disagg
     run_ep = args.ep
     run_fleet = args.fleet
     run_chaos = args.chaos
+    run_prefix = args.prefix
     args.paged = False   # the base ARCHS runs stay on the dense engine
     args.disagg = False
     args.fleet = False
@@ -543,6 +647,16 @@ def main():
               f"{payload['fleet']['sim']['best_static_roles']}, "
               f"{payload['fleet']['sim']['n_flips_elastic']} "
               f"elastic flips)")
+    if run_prefix:
+        payload["prefix"] = bench_prefix(args)
+        p = payload["prefix"]
+        print(f"[bench_serve] prefix: pages_alloc_ratio="
+              f"{p['pages_alloc_ratio']} "
+              f"(off {p['off']['pages_allocated']} -> on "
+              f"{p['on']['pages_allocated']} pages, "
+              f"{p['tokens_skipped']} lines skipped, "
+              f"{p['on']['n_cow_forks']} COW forks, "
+              f"ttft x{p['ttft_hit_reduction']})")
     if run_chaos:
         payload["chaos"] = bench_chaos(args)
         c = payload["chaos"]

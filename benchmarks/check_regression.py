@@ -15,6 +15,10 @@ Gated metrics (higher is better):
   serve: chaos.goodput_degraded_ratio    (simulated goodput under the
                                           standard fault schedule vs
                                           fault-free, tokens per tick)
+  serve: prefix.pages_alloc_ratio        (pages allocated cache-off vs
+                                          cache-on, shared-prefix trace)
+  serve: prefix.tokens_skipped           (prefill lines served from cache
+                                          on the fixed trace)
   zebra: gate.speedup                    (simulated overlapped vs serialized)
 
 Usage:
@@ -42,12 +46,15 @@ BENCHES = {
                       "disagg.goodput_ratio_sim",
                       "ep.placement_ratio_sim",
                       "fleet.goodput_ratio_sim",
-                      "chaos.goodput_degraded_ratio"],
+                      "chaos.goodput_degraded_ratio",
+                      "prefix.pages_alloc_ratio",
+                      "prefix.tokens_skipped"],
         "measured": ["results.qwen3-moe-30b-a3b.tokens_per_s",
                      "results.llama3.2-3b.tokens_per_s",
                      "disagg.measured.tokens_per_s",
                      "ep.measured.tokens_per_s",
-                     "fleet.measured.tokens_per_s"],
+                     "fleet.measured.tokens_per_s",
+                     "prefix.ttft_hit_reduction"],
     },
     "zebra": {
         "file": "BENCH_zebra.json",

@@ -344,6 +344,60 @@ def production_trace(seed: int, n: int, *, base_rate: float,
     return reqs
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantRequest:
+    """One entry of a token-level multi-tenant trace (DESIGN.md §14):
+    unlike :class:`ServeRequest` it carries actual token ids, because the
+    prefix cache is keyed on them."""
+
+    arrival: float       # engine ticks
+    tenant: int
+    prompt: tuple        # token ids (tenant shared prefix + unique tail)
+    gen: int             # tokens to generate
+
+
+def multi_tenant_trace(seed: int, n: int, *, n_tenants: int, rate: float,
+                       prompt_len: int, gen: int, vocab: int,
+                       shared_len: Optional[int] = None,
+                       rates=None):
+    """Shared-prefix multi-tenant serving workload (DESIGN.md §14).
+
+    Every tenant owns a seeded ``shared_len``-token system prefix
+    (default: half the prompt budget); each of its requests prepends that
+    prefix to a unique random tail, so same-tenant requests share a long
+    cacheable prefix while cross-tenant requests share nothing. Arrivals
+    merge independent per-tenant Poisson streams: ``rates`` gives each
+    tenant its own arrival rate (requests per engine tick — a skewed
+    vector models one bursty tenant flooding the rest, the fairness
+    scenario), defaulting to an even split of ``rate``. Generation
+    budgets mix in [gen/2, gen]. Pure python + deterministic under
+    ``seed``; returns ``n`` :class:`TenantRequest` sorted by arrival."""
+    import random
+    rng = random.Random(seed)
+    shared_len = prompt_len // 2 if shared_len is None else shared_len
+    assert 0 <= shared_len < prompt_len, \
+        f"shared_len {shared_len} must leave room for a unique tail"
+    assert n_tenants >= 1
+    if rates is None:
+        rates = [rate / n_tenants] * n_tenants
+    assert len(rates) == n_tenants and all(r > 0 for r in rates)
+    prefixes = [tuple(rng.randrange(vocab) for _ in range(shared_len))
+                for _ in range(n_tenants)]
+    t_next = [rng.expovariate(r) for r in rates]
+    reqs = []
+    while len(reqs) < n:
+        tid = min(range(n_tenants), key=lambda i: t_next[i])
+        t = t_next[tid]
+        t_next[tid] += rng.expovariate(rates[tid])
+        tail = rng.randint(1, max(1, prompt_len - shared_len))
+        prompt = prefixes[tid] + tuple(
+            rng.randrange(vocab) for _ in range(tail))
+        g = rng.randint(max(1, gen // 2), gen)
+        reqs.append(TenantRequest(arrival=t, tenant=tid, prompt=prompt,
+                                  gen=g))
+    return reqs
+
+
 def _percentile(xs, q):
     s = sorted(xs)
     return s[min(len(s) - 1, int(round(q * (len(s) - 1))))] if s else 0.0

@@ -1,7 +1,14 @@
 """Continuous-batching serving driver: Poisson arrivals, chunked prefill,
 per-slot sampled decode, streaming per-request output (DESIGN.md §7).
-``--paged`` switches the engine to paged KV-cache mode (DESIGN.md §9):
-block-granular pool admission, page-table decode, preemption on pool OOM.
+
+The CLI is a thin shell around ONE config object and ONE factory
+(DESIGN.md §14.5): flags parse into a :class:`repro.serve.ServeConfig`,
+``serve_cfg.validate()`` rejects every invalid combination in a single
+clear non-zero-exit error (conflicting ``--fleet``+``--disagg``,
+``--ep-size`` on a dense arch, ``--prefix-cache`` without a paged
+deployment, malformed chaos/kill specs, ...), and
+:func:`repro.serve.build_deployment` constructs whichever engine the
+config describes.
 
     # MoE + dense smoke archs through a mixed-length Poisson trace:
     PYTHONPATH=src python -m repro.launch.serve --smoke --mesh 1x1
@@ -13,6 +20,12 @@ block-granular pool admission, page-table decode, preemption on pool OOM.
     PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
         --page-size 16 --pool-pages 12
 
+    # prefix-cached COW paged KV over a shared-prefix multi-tenant trace
+    # (DESIGN.md §14); --fair switches admission to per-tenant deficit
+    # round-robin:
+    PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
+        --prefix-cache --tenants 2 --fair --requests 8
+
     # disaggregated prefill/decode smoke (role-split workers, page-id
     # KV handoff, DESIGN.md §10); tight decode pool exercises the
     # preempt -> re-prefill path:
@@ -20,9 +33,10 @@ block-granular pool admission, page-table decode, preemption on pool OOM.
         --page-size 16 --pool-pages 12
 
 ``--ep-size N`` shards MoE expert weights across N devices of the mesh
-``model`` axis for the decode-time expert hop (DESIGN.md §11); dense
-archs ignore it. ``--ep-placement planned`` turns on online
-heterogeneity-aware re-placement from the observed routing EMA:
+``model`` axis for the decode-time expert hop (DESIGN.md §11); on a
+dense arch it is REJECTED (pass an explicit MoE ``--arch``).
+``--ep-placement planned`` turns on online heterogeneity-aware
+re-placement from the observed routing EMA:
 
     PYTHONPATH=src python -m repro.launch.serve --smoke \
         --arch qwen3-moe-30b-a3b --mesh 1x2 --ep-size 2 \
@@ -31,7 +45,9 @@ heterogeneity-aware re-placement from the observed routing EMA:
 ``--fleet`` scales disagg to an elastic multi-group fleet (DESIGN.md
 §12): N prefill + M decode groups of mixed device classes behind a
 router, with heartbeat failure recovery and (``--fleet-elastic``)
-role flips. ``--kill-group GID@TICK`` injects a crash mid-trace; the
+role flips. ``--kill-group GID@TICK`` injects a crash mid-trace (the
+shorthand is sugar for a ``crash_start@TICK:gGID`` entry of the ONE
+``ft.chaos`` fault grammar, which is also accepted verbatim); the
 killed group's in-flight requests re-enter the router and re-prefill
 token-exactly:
 
@@ -50,13 +66,9 @@ gains a ``chaos`` section with the replayable event log + signature:
         --page-size 8 --chaos 'drop%0.6*4' --chaos-seed 101
 
 Exit status: non-zero when any request is rejected, dropped, or left
-unfinished — the CI serve-smoke, disagg-smoke, ep-smoke, fleet-smoke and
-chaos-smoke steps gate on it. An ``--ep-size`` that does not divide the
-expert count (or exceed the mesh axis) is REJECTED with a non-zero exit,
-never truncated; so is a fleet topology with zero groups of a role or an
-unknown device class, a malformed ``--chaos`` spec, ``--chaos`` without
-``--fleet``, and (chaos mode) any surviving pool with pages still in use
-after the trace drains.
+unfinished — the CI serve-smoke, disagg-smoke, ep-smoke, fleet-smoke,
+chaos-smoke and prefix-smoke steps gate on it — and when the ServeConfig
+is invalid (one aggregated error message, before any device work).
 """
 
 from __future__ import annotations
@@ -70,37 +82,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.mesh import make_mesh
-from repro.models import registry, stack
+from repro.models import registry
 from repro.models.modules import Policy, RunConfig
-from repro.pytree import split_params
-from repro.serve import (BlockAllocator, ContinuousBatchingEngine, Request,
-                         SamplingParams, Scheduler, ServeMetrics,
-                         make_continuous_program)
+from repro.serve import (Request, SamplingParams, ServeConfig,
+                         ServeConfigError, ServeMetrics, build_deployment)
+# Re-exported here for back-compat (tests and older tooling import the
+# parsers from the driver); the implementations live in serve.config.
+from repro.serve.config import parse_group_spec, parse_kills  # noqa: F401
 
 SMOKE_ARCHS = ("qwen3-moe-30b-a3b", "llama3.2-3b")  # MoE + dense
-
-
-def parse_group_spec(spec: str, default_cls: str) -> list:
-    """``--prefill-groups``/``--decode-groups`` value: either an integer
-    count (that many groups of the role's default class) or a
-    comma-separated device-class list (one group per entry)."""
-    items = [x.strip() for x in (spec or "").split(",") if x.strip()]
-    if len(items) == 1 and items[0].isdigit():
-        return [default_cls] * int(items[0])
-    return items
-
-
-def parse_kills(specs) -> list:
-    """``--kill-group GID@TICK`` occurrences -> [(tick, gid)]."""
-    kills = []
-    for spec in specs or ():
-        try:
-            gid, tick = spec.split("@")
-            kills.append((int(tick), int(gid)))
-        except ValueError:
-            raise ValueError(
-                f"--kill-group wants GID@TICK, got {spec!r}") from None
-    return kills
 
 
 def build_trace(seed: int, n: int, rate: float, prompt_len: int, gen: int,
@@ -122,59 +112,96 @@ def build_trace(seed: int, n: int, rate: float, prompt_len: int, gen: int,
     return reqs
 
 
-def serve_arch_lockstep(cfg, mesh, run, args) -> dict:
+def build_tenant_trace(args, vocab: int, sampling: SamplingParams) -> list:
+    """Shared-prefix multi-tenant trace (--tenants N, DESIGN.md §14):
+    same-tenant requests share a seeded system prefix, which is what the
+    prefix cache and the fairness admission are exercised against."""
+    from repro.core.simulator import multi_tenant_trace
+    recs = multi_tenant_trace(
+        args.seed, args.requests, n_tenants=args.tenants, rate=args.rate,
+        prompt_len=args.prompt_len, gen=args.gen, vocab=vocab,
+        shared_len=args.shared_prefix_len)
+    return [Request(rid=i, prompt=list(r.prompt), max_new_tokens=r.gen,
+                    sampling=sampling, arrival=r.arrival, tenant=r.tenant)
+            for i, r in enumerate(recs)]
+
+
+def serve_arch_lockstep(cfg, mesh, run, serve_cfg, prompt_len: int,
+                        gen: int) -> dict:
     """Whole-batch lockstep fallback for enc-dec / vision archs (they need
     per-request front embeddings the continuous engine does not carry)."""
-    from repro.models.config import ShapeConfig
-    from repro.serve import BatchedServer, make_serve_program
-    max_len = args.prompt_len + args.gen
-    shape = ShapeConfig("cli", "decode", max_len, args.slots)
-    program = make_serve_program(cfg, mesh, run, shape, max_len=max_len)
+    server = build_deployment(cfg, mesh, run, serve_cfg)
+    slots = serve_cfg.slots
     key = jax.random.PRNGKey(0)
-    with mesh:
-        params = jax.jit(
-            lambda: split_params(stack.init_model(key, cfg))[0],
-            out_shardings=program.param_shardings)()
-    server = BatchedServer(program, params, args.slots, max_len)
-    prompts = jax.random.randint(key, (args.slots, args.prompt_len), 0,
+    prompts = jax.random.randint(key, (slots, prompt_len), 0,
                                  cfg.vocab_size, jnp.int32)
     fronts = {}
     if cfg.is_encdec:
         fronts["encoder_embeds"] = jnp.zeros(
-            (args.slots, cfg.encoder_seq, cfg.d_model),
+            (slots, cfg.encoder_seq, cfg.d_model),
             run.policy.compute_dtype)
     if cfg.vision_seq > 0:
         fronts["vision_embeds"] = jnp.zeros(
-            (args.slots, cfg.vision_seq, cfg.vision_dim or cfg.d_model),
+            (slots, cfg.vision_seq, cfg.vision_dim or cfg.d_model),
             run.policy.compute_dtype)
     t0 = time.perf_counter()
     server.submit_prefill(prompts, fronts)
     out = [server.tokens]
-    for _ in range(args.gen - 1):
+    for _ in range(gen - 1):
         out.append(server.step(fronts))
     toks = jnp.concatenate(out, axis=1)
     dt = time.perf_counter() - t0
-    tps = round(args.slots * args.gen / dt, 2)
+    tps = round(slots * gen / dt, 2)
     print(f"[serve] arch={cfg.name} lockstep fallback generated "
           f"{toks.shape} in {dt:.2f}s ({tps} tok/s)")
     return {"tokens_per_s": tps, "lockstep": True,
-            "ok": toks.shape == (args.slots, args.gen)}
+            "ok": toks.shape == (slots, gen)}
 
 
-def serve_arch(arch: str, args) -> dict:
+def _prefix_summary(index, alloc, n_prefix_hits: int,
+                    tokens_skipped: int) -> dict:
+    """The summary's ``prefix`` section: index + allocator accounting."""
+    return {
+        "lookups_hit": index.hits,
+        "lookups_miss": index.misses,
+        "tokens_served": index.tokens_served,
+        "admissions_hit": n_prefix_hits,
+        "tokens_skipped": tokens_skipped,
+        "pages_pinned": index.n_pages,
+        "pages_evicted": index.n_evicted,
+        "pages_allocated": alloc.n_fresh_allocs,
+        "pages_shared": alloc.n_shared_allocs,
+        "n_cow_forks": alloc.n_cow_forks,
+    }
+
+
+def serve_arch(arch: str, args, serve_cfg: ServeConfig = None) -> dict:
     cfg = registry.get_config(arch)
     if args.smoke:
         cfg = registry.smoke_config(cfg)
     d, m = (int(x) for x in args.mesh.split("x"))
     mesh = make_mesh((d, m), ("data", "model"))
     run = RunConfig(policy=Policy(), attn_impl="ref", moe_impl="gather")
+    if serve_cfg is None:
+        serve_cfg = ServeConfig.from_args(args)
+    try:
+        # Arch/mesh-dependent validation (EP divisibility, recurrent-arch
+        # prefix rejection) — the ONE error path for invalid configs.
+        serve_cfg.validate(model_cfg=cfg, mesh=mesh)
+    except ServeConfigError as e:
+        print(f"[serve] FAIL arch={cfg.name}: invalid serve config: {e}",
+              file=sys.stderr)
+        return {"ok": False, "n_requests": 0, "config_error": str(e)}
     if cfg.is_encdec or cfg.vision_seq > 0:
-        return serve_arch_lockstep(cfg, mesh, run, args)
-    max_len = args.prompt_len + args.gen
-    sampling = SamplingParams(temperature=args.temperature,
-                              top_k=args.top_k, top_p=args.top_p)
-    trace = build_trace(args.seed, args.requests, args.rate,
-                        args.prompt_len, args.gen, cfg.vocab_size, sampling)
+        return serve_arch_lockstep(cfg, mesh, run, serve_cfg,
+                                   args.prompt_len, args.gen)
+    sampling = serve_cfg.sampling
+    if args.tenants:
+        trace = build_tenant_trace(args, cfg.vocab_size, sampling)
+    else:
+        trace = build_trace(args.seed, args.requests, args.rate,
+                            args.prompt_len, args.gen, cfg.vocab_size,
+                            sampling)
     metrics = ServeMetrics()
     stream = None
     if args.stream:
@@ -182,127 +209,33 @@ def serve_arch(arch: str, args) -> dict:
             print(f"[{cfg.name}] rid={rid} tok={tok}"
                   + (" <done>" if fin else ""))
 
-    key = jax.random.PRNGKey(0)
-    chaos = None
     shed: set = set()
     leaked: list = []
-    ep = None
-    if getattr(args, "ep_size", 0):
-        if cfg.is_moe:
-            from repro.serve.ep_decode import (EPDecodeConfig,
-                                               validate_ep_config)
-            planned = args.ep_placement == "planned"
-            ep = EPDecodeConfig(ep_size=args.ep_size, n_chunks=2,
-                                rebalance_every=8 if planned else 0,
-                                drift_threshold=0.05)
-            try:
-                validate_ep_config(cfg, mesh, ep)
-            except ValueError as e:
-                # Rejected, never truncated: a non-dividing --ep-size (or
-                # a mesh without the EP axis) fails the run outright.
-                print(f"[serve] FAIL arch={cfg.name}: bad EP config: {e}",
-                      file=sys.stderr)
-                return {"ok": False, "n_requests": 0,
-                        "ep_error": str(e)}
-        else:
-            print(f"[serve] arch={cfg.name} is dense; --ep-size ignored")
+    try:
+        engine = build_deployment(cfg, mesh, run, serve_cfg,
+                                  metrics=metrics, on_token=stream)
+    except ValueError as e:
+        # Anything validate() could not see statically (construction-time
+        # topology problems) still fails the run, never half-serves.
+        print(f"[serve] FAIL arch={cfg.name}: bad deployment: {e}",
+              file=sys.stderr)
+        return {"ok": False, "n_requests": 0, "config_error": str(e)}
 
-    if getattr(args, "fleet", False):
-        # Elastic multi-group fleet (DESIGN.md §12): N prefill + M decode
-        # groups of mixed device classes, router placement, optional role
-        # flips, heartbeat failure recovery. --kill-group injects faults.
-        from repro.serve.fleet import make_fleet
+    t0 = time.perf_counter()
+    if serve_cfg.fleet.enabled:
         try:
-            pre_cls = parse_group_spec(args.prefill_groups, "a40")
-            dec_cls = parse_group_spec(args.decode_groups, "v100")
-            kills = parse_kills(args.kill_group)
-            if getattr(args, "chaos", None):
-                # Malformed specs are rejected here (ValueError -> FAIL,
-                # non-zero exit) — never a silently-ignored fault plan.
-                from repro.ft.chaos import FaultInjector, FaultPlan
-                chaos = FaultInjector(FaultPlan.parse(args.chaos),
-                                      seed=args.chaos_seed)
-            params = split_params(stack.init_model(key, cfg))[0]
-            engine = make_fleet(
-                cfg, mesh, run, params, prefill_classes=pre_cls,
-                decode_classes=dec_cls, decode_slots=args.slots,
-                max_len=max_len, page_size=args.page_size,
-                decode_pages=args.pool_pages,
-                prefill_pages=args.prefill_pool_pages,
-                prefill_chunk=args.prefill_chunk,
-                token_budget=args.prefill_budget, seed=args.seed,
-                metrics=metrics, on_token=stream,
-                elastic=args.fleet_elastic, chaos=chaos,
-                slo_ttft=getattr(args, "slo_ttft", None))
-        except ValueError as e:
-            # Invalid topology (zero groups of a role, unknown device
-            # class, malformed kill or chaos spec): non-zero exit.
-            print(f"[serve] FAIL arch={cfg.name}: bad fleet config: {e}",
-                  file=sys.stderr)
-            return {"ok": False, "n_requests": 0, "fleet_error": str(e)}
-        t0 = time.perf_counter()
-        try:
-            results = engine.run(trace, kills=kills)
+            results = engine.run(trace,
+                                 kills=list(serve_cfg.fleet.kills))
         except RuntimeError as e:
             # Wedged fleet (e.g. the only decode group was killed without
             # --fleet-elastic): requests would be dropped — fail the run.
             print(f"[serve] FAIL arch={cfg.name}: fleet stalled: {e}",
                   file=sys.stderr)
             return {"ok": False, "n_requests": 0, "fleet_error": str(e)}
-        dt = time.perf_counter() - t0
         shed = set(engine.shed)
-    elif getattr(args, "disagg", False):
-        # Disaggregated prefill/decode deployment (DESIGN.md §10): the
-        # decode pool takes --pool-pages, the prefill pool
-        # --prefill-pool-pages; KV crosses between them as pages.
-        from repro.serve.disagg import make_disagg
-        params = split_params(stack.init_model(key, cfg))[0]
-        engine = make_disagg(
-            cfg, mesh, run, params, decode_slots=args.slots,
-            max_len=max_len, page_size=args.page_size,
-            decode_pages=args.pool_pages,
-            prefill_pages=args.prefill_pool_pages,
-            prefill_chunk=args.prefill_chunk,
-            token_budget=args.prefill_budget, seed=args.seed,
-            metrics=metrics, on_token=stream, ep=ep)
-        t0 = time.perf_counter()
-        results = engine.run(trace)
-        dt = time.perf_counter() - t0
     else:
-        paged_kw = {}
-        if args.paged:
-            paged_kw = dict(page_size=args.page_size,
-                            n_pages=args.pool_pages)
-        program = make_continuous_program(cfg, mesh, run, n_slots=args.slots,
-                                          max_len=max_len, seed=args.seed,
-                                          ep=ep, **paged_kw)
-        allocator = None
-        if args.paged:
-            allocator = BlockAllocator(program.n_pages, program.page_size,
-                                       program.max_pages)
-        sched = Scheduler(args.slots, max_len,
-                          prefill_chunk=args.prefill_chunk,
-                          token_budget=args.prefill_budget,
-                          allocator=allocator)
-        if ep is not None:
-            # The EP engine places (permutes + shards) the replicated
-            # init params itself, so no out_shardings jit here.
-            from repro.serve.ep_decode import EPContinuousBatchingEngine
-            params = split_params(stack.init_model(key, cfg))[0]
-            engine = EPContinuousBatchingEngine(program, params, sched,
-                                                metrics=metrics,
-                                                on_token=stream)
-        else:
-            with mesh:
-                params = jax.jit(
-                    lambda: split_params(stack.init_model(key, cfg))[0],
-                    out_shardings=program.param_shardings)()
-            engine = ContinuousBatchingEngine(program, params, sched,
-                                              metrics=metrics,
-                                              on_token=stream)
-        t0 = time.perf_counter()
         results = engine.run(trace)
-        dt = time.perf_counter() - t0
+    dt = time.perf_counter() - t0
 
     for req in trace:
         if req.rid in shed:  # explicit SLO-shed outcome (chaos/slo mode)
@@ -315,7 +248,9 @@ def serve_arch(arch: str, args) -> dict:
                   f"REJECTED")
             continue
         toks = results[req.rid]
-        print(f"[{cfg.name}] rid={req.rid} prompt={len(req.prompt)} "
+        tenant = f" tenant={req.tenant}" if args.tenants else ""
+        print(f"[{cfg.name}] rid={req.rid}{tenant} "
+              f"prompt={len(req.prompt)} "
               f"gen={len(toks)}/{req.max_new_tokens} "
               f"first_tick={tr.first_token_tick} "
               f"finish_tick={tr.finish_tick} out={toks[:8]}...")
@@ -326,11 +261,12 @@ def serve_arch(arch: str, args) -> dict:
           f"itl p50 {s['itl_s']['p50']:.4f}s, "
           f"queue depth max {s['queue_depth']['max']}, "
           f"max concurrent {s['max_concurrent_active']})")
-    if getattr(args, "fleet", False):
+    if serve_cfg.fleet.enabled:
         # Surviving pools must hold the exactly-once page invariant even
         # after kills, recoveries, and role flips.
         for g in engine.groups:
             g.worker.allocator.check()
+        chaos = engine.chaos
         if chaos is not None:
             # Chaos acceptance: a drained fleet must hold ZERO pages on
             # every surviving pool — a leftover page is a leak the fault
@@ -339,7 +275,7 @@ def serve_arch(arch: str, args) -> dict:
                       if g.worker.allocator.pages_in_use != 0]
         st = engine.transfer.stats
         s["fleet"] = {
-            "elastic": bool(args.fleet_elastic),
+            "elastic": serve_cfg.fleet.elastic,
             "ticks": engine.tick_count,
             "groups": [{"gid": g.gid, "cls": g.cls, "role": g.role,
                         "flips": g.flips} for g in engine.groups],
@@ -353,16 +289,17 @@ def serve_arch(arch: str, args) -> dict:
         }
         if chaos is not None:
             s["chaos"] = {
-                "spec": args.chaos,
-                "seed": args.chaos_seed,
+                "spec": serve_cfg.chaos.spec,
+                "seed": serve_cfg.chaos.seed,
                 "events": chaos.log(),
                 "signature": chaos.log_signature(),
                 "counters": metrics.robust.as_dict(),
                 "n_shed": len(shed),
                 "leaked_groups": leaked,
             }
-            print(f"[serve] arch={cfg.name} chaos: spec={args.chaos!r} "
-                  f"seed={args.chaos_seed} faults={len(chaos.log())} "
+            print(f"[serve] arch={cfg.name} chaos: "
+                  f"spec={serve_cfg.chaos.spec!r} "
+                  f"seed={serve_cfg.chaos.seed} faults={len(chaos.log())} "
                   f"sig={chaos.log_signature()} shed={len(shed)} "
                   f"retries={st.n_retries} aborts={st.n_aborts} "
                   f"fenced={metrics.robust.fenced_stale_completions}")
@@ -373,10 +310,10 @@ def serve_arch(arch: str, args) -> dict:
               f"events={len(engine.events)} transfers={st.n_transfers} "
               f"ttft_p99={s['ttft_s']['p99']:.3f}s "
               f"itl_p99={s['itl_s']['p99']:.4f}s")
-    elif getattr(args, "disagg", False):
+    elif serve_cfg.disagg.enabled:
         st = engine.transfer.stats
         s["disagg"] = {
-            "page_size": args.page_size,
+            "page_size": serve_cfg.paged.page_size,
             "decode_pages": engine.decode.allocator.n_pages,
             "prefill_pages": engine.prefill.allocator.n_pages,
             "decode_page_peak": engine.decode.page_peak,
@@ -384,27 +321,53 @@ def serve_arch(arch: str, args) -> dict:
             "kv_transfers": st.n_transfers,
             "kv_pages_shipped": st.n_pages,
             "kv_bytes_shipped": st.bytes,
+            "prefix_full_hits": engine.n_full_hits,
         }
-        print(f"[serve] arch={cfg.name} disagg: page_size={args.page_size} "
+        print(f"[serve] arch={cfg.name} disagg: "
+              f"page_size={serve_cfg.paged.page_size} "
               f"transfers={st.n_transfers} pages={st.n_pages} "
-              f"preempted={engine.decode.sched.n_preempted}")
+              f"preempted={engine.decode.sched.n_preempted} "
+              f"full_hits={engine.n_full_hits}")
+        index = engine.decode.sched.prefix_index
+        if index is not None:
+            s["prefix"] = _prefix_summary(
+                index, engine.decode.allocator,
+                engine.prefill.sched.n_prefix_hits,
+                engine.prefill.sched.n_tokens_skipped)
+            s["prefix"]["full_hits"] = engine.n_full_hits
+            index.check()
         engine.prefill.allocator.check()
         engine.decode.allocator.check()
-    elif args.paged:
+    elif serve_cfg.paged.enabled:
         s["paged"] = eng_occ = engine.page_occupancy()
-        print(f"[serve] arch={cfg.name} paged: page_size={args.page_size} "
-              f"pool={program.n_pages} peak={eng_occ['page_peak']} "
+        print(f"[serve] arch={cfg.name} paged: "
+              f"page_size={serve_cfg.paged.page_size} "
+              f"pool={engine.p.n_pages} peak={eng_occ['page_peak']} "
               f"preempted={eng_occ['n_preempted']}")
-    if ep is not None and not getattr(args, "disagg", False) \
-            and not getattr(args, "fleet", False):
+        index = engine.sched.prefix_index
+        if index is not None:
+            s["prefix"] = _prefix_summary(
+                index, engine.sched.allocator,
+                engine.sched.prefill.n_prefix_hits,
+                engine.sched.prefill.n_tokens_skipped)
+            print(f"[serve] arch={cfg.name} prefix: "
+                  f"hits={index.hits} tokens_served={index.tokens_served} "
+                  f"skipped={engine.sched.prefill.n_tokens_skipped} "
+                  f"cow_forks={engine.sched.allocator.n_cow_forks} "
+                  f"pinned={index.n_pages}")
+            index.check()
+        engine.sched.allocator.check()
+    if serve_cfg.ep.ep_size and not serve_cfg.disagg.enabled \
+            and not serve_cfg.fleet.enabled:
         s["ep"] = {
-            "ep_size": ep.ep_size,
-            "placement_mode": args.ep_placement,
+            "ep_size": serve_cfg.ep.ep_size,
+            "placement_mode": serve_cfg.ep.placement,
             "n_rebalances": engine.n_rebalances,
             "ema_updates": engine.ema.n_updates,
         }
-        print(f"[serve] arch={cfg.name} ep: ep_size={ep.ep_size} "
-              f"placement={args.ep_placement} "
+        print(f"[serve] arch={cfg.name} ep: "
+              f"ep_size={serve_cfg.ep.ep_size} "
+              f"placement={serve_cfg.ep.placement} "
               f"rebalances={engine.n_rebalances} "
               f"ema_updates={engine.ema.n_updates}")
     # Gate: every traced request must finish with its full token budget
@@ -463,6 +426,27 @@ def main(argv=None):
                     help="physical pool size in pages (default: full "
                          "reservation capacity; smaller values overcommit "
                          "and exercise preemption)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="prefix-cached copy-on-write paged KV (DESIGN.md "
+                         "§14): cached prompt prefixes mount as shared "
+                         "pages and skip prefill; needs --paged or "
+                         "--disagg")
+    ap.add_argument("--prefix-capacity", type=int, default=None,
+                    metavar="PAGES",
+                    help="LRU bound on pages the prefix index may pin "
+                         "(default: unbounded — allocator pressure is "
+                         "the only bound)")
+    ap.add_argument("--fair", action="store_true",
+                    help="per-tenant deficit round-robin admission "
+                         "(DESIGN.md §14): a flooding tenant cannot "
+                         "starve the rest")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="build a shared-prefix multi-tenant trace with "
+                         "this many tenants (0: classic mixed-length "
+                         "Poisson trace)")
+    ap.add_argument("--shared-prefix-len", type=int, default=None,
+                    help="tenant shared-prefix length in tokens "
+                         "(default: half of --prompt-len)")
     ap.add_argument("--disagg", action="store_true",
                     help="disaggregated prefill/decode deployment "
                          "(DESIGN.md §10): role-split workers over "
@@ -490,7 +474,9 @@ def main(argv=None):
                          "role shifts or a role dies out")
     ap.add_argument("--kill-group", action="append", metavar="GID@TICK",
                     help="fault injection (repeatable): crash fleet group "
-                         "GID at the start of tick TICK")
+                         "GID at the start of tick TICK — sugar for a "
+                         "crash_start@TICK:gGID entry of the ft.chaos "
+                         "grammar (the full entry form is also accepted)")
     ap.add_argument("--chaos", default=None, metavar="SPEC",
                     help="seeded fault schedule (fleet mode, DESIGN.md "
                          "§13): ';'-joined ft.chaos entries "
@@ -507,8 +493,9 @@ def main(argv=None):
     ap.add_argument("--ep-size", type=int, default=0,
                     help="shard MoE expert weights across this many "
                          "devices of the mesh 'model' axis for decode "
-                         "(DESIGN.md §11); must divide the expert count — "
-                         "rejected otherwise, never truncated; 0 = off")
+                         "(DESIGN.md §11); must divide the expert count "
+                         "and needs a MoE --arch — rejected otherwise, "
+                         "never truncated; 0 = off")
     ap.add_argument("--ep-placement", choices=("uniform", "planned"),
                     default="uniform",
                     help="uniform: static round-robin expert placement; "
@@ -516,15 +503,19 @@ def main(argv=None):
                          "from the observed routing EMA")
     args = ap.parse_args(argv)
 
-    if args.chaos and not args.fleet:
-        print("[serve] --chaos requires --fleet (the chaos hook points "
-              "live in the fleet controller)", file=sys.stderr)
+    try:
+        # Parse + arch-independent validation: EVERY violation in one
+        # message, one non-zero exit, before any device work.
+        serve_cfg = ServeConfig.from_args(args)
+        serve_cfg.validate()
+    except ServeConfigError as e:
+        print(f"[serve] invalid configuration: {e}", file=sys.stderr)
         return 1
     archs = [args.arch] if args.arch else \
         (list(SMOKE_ARCHS) if args.smoke else ["llama3.2-3b"])
     failed = []
     for arch in archs:
-        s = serve_arch(arch, args)
+        s = serve_arch(arch, args, serve_cfg)
         if not s.get("ok", True):
             failed.append(arch)
     if failed:

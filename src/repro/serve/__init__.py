@@ -2,10 +2,14 @@ from repro.serve.engine import (BatchedServer, ContinuousBatchingEngine,
                                 ContinuousProgram, ServeProgram,
                                 make_continuous_program, make_serve_program)
 from repro.serve.kv_blocks import BlockAllocator, pages_for
+from repro.serve.config import (ChaosCfg, DisaggCfg, EPCfg, FleetCfg,
+                                PagedCfg, PrefixCacheCfg, ServeConfig,
+                                ServeConfigError, build_deployment)
 from repro.serve.ep_decode import (EPContinuousBatchingEngine,
                                    EPDecodeConfig)
 from repro.serve.kv_transfer import KVTransferEngine, TransferStats
 from repro.serve.metrics import RoutingEMA, ServeMetrics
+from repro.serve.prefix_index import PrefixIndex
 from repro.serve.sampling import GREEDY, SamplingParams
 from repro.serve.scheduler import (DecodeScheduler, PrefillScheduler,
                                    Request, Scheduler)
@@ -16,4 +20,7 @@ __all__ = ["BatchedServer", "ServeProgram", "make_serve_program",
            "GREEDY", "Request", "Scheduler", "PrefillScheduler",
            "DecodeScheduler", "BlockAllocator", "pages_for",
            "KVTransferEngine", "TransferStats", "EPDecodeConfig",
-           "EPContinuousBatchingEngine", "RoutingEMA"]
+           "EPContinuousBatchingEngine", "RoutingEMA", "PrefixIndex",
+           "ServeConfig", "ServeConfigError", "build_deployment",
+           "PagedCfg", "PrefixCacheCfg", "DisaggCfg", "EPCfg", "FleetCfg",
+           "ChaosCfg"]

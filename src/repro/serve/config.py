@@ -1,0 +1,446 @@
+"""Unified deployment configuration + factory (DESIGN.md §14).
+
+Every serving deployment shape this repo grew — lockstep batch, unified
+continuous batching (dense or paged, optionally EP-sharded), the
+disaggregated prefill/decode pair, the elastic multi-group fleet with
+chaos injection — used to be wired by hand at each call site (the launch
+driver, the bench harness, the tests), each with its own kwarg spelling.
+:class:`ServeConfig` is the one declarative description of a deployment
+and :func:`build_deployment` the one construction path: it validates the
+config as a whole (EVERY violation reported in one
+:class:`ServeConfigError`, one non-zero exit — not the first of a
+cascade), then builds exactly the engine the config describes.
+
+Config -> engine mapping::
+
+    encdec / vision arch          -> BatchedServer (lockstep fallback)
+    fleet.enabled                 -> FleetController      (make_fleet)
+    disagg.enabled                -> DisaggController     (make_disagg)
+    ep.ep_size > 0 (MoE arch)     -> EPContinuousBatchingEngine
+    otherwise                     -> ContinuousBatchingEngine
+    paged.enabled                 -> + BlockAllocator (paged KV, §9)
+    prefix.enabled                -> + PrefixIndex (COW prefix cache, §14)
+
+The nested dataclasses are frozen and JSON-trivial on purpose: a
+ServeConfig is a value, not a builder — it can be printed into a bench
+artifact or compared in a test without touching any device state.
+
+Migration from the old flag/kwarg spellings is table-driven in
+DESIGN.md §14.5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.serve.sampling import SamplingParams
+
+
+class ServeConfigError(ValueError):
+    """An invalid ServeConfig. The message lists EVERY violation
+    (semicolon-joined), so one failed launch reports the whole set."""
+
+
+def parse_group_spec(spec: str, default_cls: str) -> list:
+    """``--prefill-groups``/``--decode-groups`` value: either an integer
+    count (that many groups of the role's default class) or a
+    comma-separated device-class list (one group per entry)."""
+    items = [x.strip() for x in (spec or "").split(",") if x.strip()]
+    if len(items) == 1 and items[0].isdigit():
+        return [default_cls] * int(items[0])
+    return items
+
+
+def parse_kills(specs) -> list:
+    """``--kill-group`` occurrences -> [(tick, gid)], parsed by the ONE
+    fault-spec grammar (``ft.chaos.FaultPlan``): the legacy ``GID@TICK``
+    shorthand is sugar for a ``crash_start@TICK:gGID`` chaos entry, and
+    the full entry form is accepted verbatim — so a kill spec and a
+    ``--chaos`` schedule can never drift apart in syntax."""
+    from repro.ft.chaos import FaultPlan
+    kills = []
+    for spec in specs or ():
+        raw = spec.strip()
+        head = raw.split("@", 1)[0]
+        if "@" in raw and head.isdigit():
+            gid, tick = raw.split("@", 1)
+            raw = f"crash_start@{tick}:g{gid}"
+        try:
+            plan = FaultPlan.parse(raw)
+        except ValueError:
+            raise ValueError(
+                f"--kill-group wants GID@TICK (or a chaos-grammar "
+                f"crash_start@TICK:gGID entry), got {spec!r}") from None
+        (entry,) = plan.specs
+        tgt = entry.target or ""
+        if entry.site != "crash_start" or entry.tick is None \
+                or not (tgt.startswith("g") and tgt[1:].isdigit()):
+            raise ValueError(
+                f"--kill-group wants GID@TICK (or a chaos-grammar "
+                f"crash_start@TICK:gGID entry), got {spec!r}")
+        kills.append((entry.tick, int(tgt[1:])))
+    return kills
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCfg:
+    """Paged-KV geometry (DESIGN.md §9). ``enabled`` switches the unified
+    engine to paged mode; disagg/fleet deployments are paged inherently
+    and read only the geometry fields."""
+
+    enabled: bool = False
+    page_size: int = 16
+    pool_pages: Optional[int] = None          # decode/unified pool
+    prefill_pool_pages: Optional[int] = None  # disagg/fleet prefill pool
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheCfg:
+    """Prefix-cached COW paged KV (DESIGN.md §14). Requires a paged
+    deployment (unified ``paged`` or ``disagg``). ``fair`` switches
+    admission to per-tenant deficit round-robin."""
+
+    enabled: bool = False
+    capacity_pages: Optional[int] = None  # LRU bound on pinned pages
+    fair: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggCfg:
+    """Disaggregated prefill/decode deployment (DESIGN.md §10)."""
+
+    enabled: bool = False
+    transfer_chunk_pages: int = 4
+    link_bw: Optional[float] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EPCfg:
+    """Expert-parallel decode (DESIGN.md §11). ``ep_size`` == 0 is off;
+    ``placement`` is ``uniform`` (static round-robin) or ``planned``
+    (online heterogeneity-aware re-placement from the routing EMA)."""
+
+    ep_size: int = 0
+    placement: str = "uniform"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetCfg:
+    """Elastic multi-group fleet (DESIGN.md §12). ``kills`` are
+    (tick, gid) crash injections — see :func:`parse_kills`."""
+
+    enabled: bool = False
+    prefill_groups: Tuple[str, ...] = ("a40",)
+    decode_groups: Tuple[str, ...] = ("v100",)
+    elastic: bool = False
+    kills: Tuple[Tuple[int, int], ...] = ()
+    slo_ttft: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosCfg:
+    """Seeded fault schedule (DESIGN.md §13, fleet mode only)."""
+
+    spec: Optional[str] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """One declarative description of a serving deployment."""
+
+    slots: int = 4
+    max_len: int = 72
+    prefill_chunk: int = 16
+    token_budget: Optional[int] = None  # prefill tokens/tick (None: chunk)
+    seed: int = 0
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    paged: PagedCfg = PagedCfg()
+    prefix: PrefixCacheCfg = PrefixCacheCfg()
+    disagg: DisaggCfg = DisaggCfg()
+    ep: EPCfg = EPCfg()
+    fleet: FleetCfg = FleetCfg()
+    chaos: ChaosCfg = ChaosCfg()
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def sampling(self) -> SamplingParams:
+        return SamplingParams(temperature=self.temperature,
+                              top_k=self.top_k, top_p=self.top_p)
+
+    @property
+    def any_paged(self) -> bool:
+        """Whether any page machinery exists (unified paged, disagg or
+        fleet — the latter two are paged inherently)."""
+        return self.paged.enabled or self.disagg.enabled or self.fleet.enabled
+
+    def ep_decode_config(self):
+        """The runtime ``EPDecodeConfig`` this config describes (None when
+        EP is off)."""
+        if not self.ep.ep_size:
+            return None
+        from repro.serve.ep_decode import EPDecodeConfig
+        planned = self.ep.placement == "planned"
+        return EPDecodeConfig(ep_size=self.ep.ep_size, n_chunks=2,
+                              rebalance_every=8 if planned else 0,
+                              drift_threshold=0.05)
+
+    # -- construction from CLI args -----------------------------------------
+
+    @classmethod
+    def from_args(cls, args) -> "ServeConfig":
+        """Build from the launch driver's argparse namespace. Parse-level
+        problems (malformed kill specs, bad group lists) surface as
+        :class:`ServeConfigError` so the driver has ONE error path."""
+        try:
+            pre = tuple(parse_group_spec(
+                getattr(args, "prefill_groups", "a40"), "a40"))
+            dec = tuple(parse_group_spec(
+                getattr(args, "decode_groups", "v100"), "v100"))
+            kills = tuple(parse_kills(getattr(args, "kill_group", None)))
+        except ValueError as e:
+            raise ServeConfigError(str(e)) from None
+        return cls(
+            slots=args.slots,
+            max_len=args.prompt_len + args.gen,
+            prefill_chunk=args.prefill_chunk,
+            token_budget=args.prefill_budget,
+            seed=args.seed,
+            temperature=args.temperature,
+            top_k=args.top_k,
+            top_p=args.top_p,
+            paged=PagedCfg(
+                enabled=bool(getattr(args, "paged", False)),
+                page_size=getattr(args, "page_size", 16),
+                pool_pages=getattr(args, "pool_pages", None),
+                prefill_pool_pages=getattr(args, "prefill_pool_pages",
+                                           None)),
+            prefix=PrefixCacheCfg(
+                enabled=bool(getattr(args, "prefix_cache", False)),
+                capacity_pages=getattr(args, "prefix_capacity", None),
+                fair=bool(getattr(args, "fair", False))),
+            disagg=DisaggCfg(enabled=bool(getattr(args, "disagg", False))),
+            ep=EPCfg(ep_size=getattr(args, "ep_size", 0) or 0,
+                     placement=getattr(args, "ep_placement", "uniform")),
+            fleet=FleetCfg(
+                enabled=bool(getattr(args, "fleet", False)),
+                prefill_groups=pre, decode_groups=dec,
+                elastic=bool(getattr(args, "fleet_elastic", False)),
+                kills=kills,
+                slo_ttft=getattr(args, "slo_ttft", None)),
+            chaos=ChaosCfg(spec=getattr(args, "chaos", None),
+                           seed=getattr(args, "chaos_seed", 0)))
+
+    # -- validation ---------------------------------------------------------
+
+    def validate(self, model_cfg=None, mesh=None) -> None:
+        """Reject-don't-truncate validation of the WHOLE config.
+
+        Collects every violation and raises a single
+        :class:`ServeConfigError` — the launch driver turns that into one
+        clear non-zero exit instead of a cascade of partial failures.
+        ``model_cfg``/``mesh`` switch on the arch- and topology-dependent
+        checks (EP divisibility, recurrent-arch prefix rejection)."""
+        errs: List[str] = []
+        if self.slots < 1:
+            errs.append(f"slots must be >= 1, got {self.slots}")
+        if self.max_len < 2:
+            errs.append(f"max_len must be >= 2, got {self.max_len}")
+        if self.prefill_chunk < 1:
+            errs.append(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.token_budget is not None and self.token_budget < 1:
+            errs.append(
+                f"token_budget must be >= 1, got {self.token_budget}")
+        if self.any_paged:
+            if self.paged.page_size < 1:
+                errs.append(f"page_size must be >= 1, "
+                            f"got {self.paged.page_size}")
+            for name, v in (("pool_pages", self.paged.pool_pages),
+                            ("prefill_pool_pages",
+                             self.paged.prefill_pool_pages)):
+                if v is not None and v < 1:
+                    errs.append(f"{name} must be >= 1, got {v}")
+        if self.fleet.enabled and self.disagg.enabled:
+            errs.append("--fleet and --disagg are mutually exclusive "
+                        "deployment shapes")
+        if self.prefix.enabled and not (self.paged.enabled
+                                        or self.disagg.enabled):
+            errs.append("--prefix-cache needs a paged deployment "
+                        "(--paged or --disagg)")
+        if self.prefix.enabled and self.fleet.enabled:
+            errs.append("--prefix-cache is not supported with --fleet "
+                        "(per-group pools do not share a prefix index)")
+        if self.prefix.capacity_pages is not None \
+                and self.prefix.capacity_pages < 1:
+            errs.append(f"prefix capacity_pages must be >= 1, "
+                        f"got {self.prefix.capacity_pages}")
+        if self.chaos.spec and not self.fleet.enabled:
+            errs.append("--chaos requires --fleet (the chaos hook points "
+                        "live in the fleet controller)")
+        if self.fleet.kills and not self.fleet.enabled:
+            errs.append("--kill-group requires --fleet")
+        if self.fleet.slo_ttft is not None and not self.fleet.enabled:
+            errs.append("--slo-ttft requires --fleet")
+        if self.fleet.enabled:
+            if not self.fleet.prefill_groups or not self.fleet.decode_groups:
+                errs.append("fleet needs >= 1 prefill and >= 1 decode group")
+            from repro.core.hardware import CLASSES
+            unknown = [c for c in (*self.fleet.prefill_groups,
+                                   *self.fleet.decode_groups)
+                       if c not in CLASSES]
+            if unknown:
+                errs.append(f"unknown device class(es) {unknown}; "
+                            f"known: {sorted(CLASSES)}")
+        if self.chaos.spec:
+            from repro.ft.chaos import FaultPlan
+            try:
+                FaultPlan.parse(self.chaos.spec)
+            except ValueError as e:
+                errs.append(f"bad --chaos spec: {e}")
+        if self.ep.ep_size:
+            if self.fleet.enabled:
+                errs.append("--ep-size is not supported with --fleet")
+            if self.ep.placement not in ("uniform", "planned"):
+                errs.append(f"ep placement must be 'uniform' or 'planned', "
+                            f"got {self.ep.placement!r}")
+            if model_cfg is not None:
+                if not model_cfg.is_moe:
+                    errs.append(f"--ep-size needs a MoE arch; "
+                                f"{model_cfg.name} is dense")
+                elif mesh is not None:
+                    from repro.serve.ep_decode import validate_ep_config
+                    try:
+                        validate_ep_config(model_cfg, mesh,
+                                           self.ep_decode_config())
+                    except ValueError as e:
+                        errs.append(f"bad EP config: {e}")
+        if self.prefix.enabled and model_cfg is not None:
+            rec = sorted({s.mixer for s in model_cfg.layer_layout()
+                          if s.mixer in ("rglru", "ssd")})
+            if rec:
+                errs.append(
+                    f"--prefix-cache needs per-position KV only; "
+                    f"{model_cfg.name} carries recurrent mixers {rec} "
+                    f"whose state depends on every earlier token, so "
+                    f"skipping a cached prefix would corrupt it")
+        if errs:
+            raise ServeConfigError("; ".join(errs))
+
+
+def build_deployment(cfg, mesh, run, serve_cfg: ServeConfig, *,
+                     params=None, metrics=None, on_token=None,
+                     record_logits: bool = False):
+    """THE construction path from a :class:`ServeConfig` to a live engine.
+
+    Validates first (so an invalid config can never half-construct), then
+    builds the deployment the config describes — see the module docstring
+    for the mapping. ``params`` defaults to a fresh seeded init placed the
+    way each deployment wants it (jit-init under the program's shardings
+    for the plain unified engine; replicated for EP/disagg/fleet, which
+    place params themselves). All engines expose ``run(trace)``
+    (FleetController additionally takes ``kills=``) and ``rejected``.
+    """
+    import jax
+
+    from repro.models import stack
+    from repro.pytree import split_params
+
+    serve_cfg.validate(model_cfg=cfg, mesh=mesh)
+    sc = serve_cfg
+    key = jax.random.PRNGKey(0)
+
+    def replicated_params():
+        return params if params is not None \
+            else split_params(stack.init_model(key, cfg))[0]
+
+    if cfg.is_encdec or cfg.vision_seq > 0:
+        # Lockstep fallback: enc-dec / vision archs need per-request front
+        # embeddings the continuous engine does not carry.
+        from repro.models.config import ShapeConfig
+        from repro.serve.engine import BatchedServer, make_serve_program
+        shape = ShapeConfig("cli", "decode", sc.max_len, sc.slots)
+        program = make_serve_program(cfg, mesh, run, shape,
+                                     max_len=sc.max_len)
+        if params is None:
+            with mesh:
+                p = jax.jit(
+                    lambda: split_params(stack.init_model(key, cfg))[0],
+                    out_shardings=program.param_shardings)()
+        else:
+            p = params
+        return BatchedServer(program, p, sc.slots, sc.max_len)
+
+    if sc.fleet.enabled:
+        from repro.serve.fleet import make_fleet
+        chaos = None
+        if sc.chaos.spec:
+            from repro.ft.chaos import FaultInjector, FaultPlan
+            chaos = FaultInjector(FaultPlan.parse(sc.chaos.spec),
+                                  seed=sc.chaos.seed)
+        return make_fleet(
+            cfg, mesh, run, replicated_params(),
+            prefill_classes=list(sc.fleet.prefill_groups),
+            decode_classes=list(sc.fleet.decode_groups),
+            decode_slots=sc.slots, max_len=sc.max_len,
+            page_size=sc.paged.page_size,
+            decode_pages=sc.paged.pool_pages,
+            prefill_pages=sc.paged.prefill_pool_pages,
+            prefill_chunk=sc.prefill_chunk, token_budget=sc.token_budget,
+            seed=sc.seed, metrics=metrics, on_token=on_token,
+            elastic=sc.fleet.elastic, chaos=chaos,
+            slo_ttft=sc.fleet.slo_ttft)
+
+    if sc.disagg.enabled:
+        from repro.serve.disagg import make_disagg
+        return make_disagg(
+            cfg, mesh, run, replicated_params(), decode_slots=sc.slots,
+            max_len=sc.max_len, page_size=sc.paged.page_size,
+            decode_pages=sc.paged.pool_pages,
+            prefill_pages=sc.paged.prefill_pool_pages,
+            prefill_chunk=sc.prefill_chunk, token_budget=sc.token_budget,
+            seed=sc.seed,
+            transfer_chunk_pages=sc.disagg.transfer_chunk_pages,
+            link_bw=sc.disagg.link_bw, latency_s=sc.disagg.latency_s,
+            metrics=metrics, on_token=on_token,
+            record_logits=record_logits, ep=sc.ep_decode_config(),
+            prefix=sc.prefix)
+
+    from repro.serve.engine import (ContinuousBatchingEngine,
+                                    make_continuous_program)
+    from repro.serve.kv_blocks import BlockAllocator
+    from repro.serve.scheduler import Scheduler
+
+    program = make_continuous_program(cfg, mesh, run, serve_cfg=sc,
+                                      ep=sc.ep_decode_config())
+    allocator = prefix_index = None
+    if sc.paged.enabled:
+        allocator = BlockAllocator(program.n_pages, program.page_size,
+                                   program.max_pages)
+        if sc.prefix.enabled:
+            from repro.serve.prefix_index import PrefixIndex
+            prefix_index = PrefixIndex(
+                allocator, capacity_pages=sc.prefix.capacity_pages)
+    sched = Scheduler(sc.slots, sc.max_len, prefill_chunk=sc.prefill_chunk,
+                      token_budget=sc.token_budget, allocator=allocator,
+                      prefix_index=prefix_index, fair=sc.prefix.fair)
+    if program.ep is not None:
+        # The EP engine places (permutes + shards) replicated params
+        # itself.
+        from repro.serve.ep_decode import EPContinuousBatchingEngine
+        return EPContinuousBatchingEngine(
+            program, replicated_params(), sched, metrics=metrics,
+            on_token=on_token, record_logits=record_logits)
+    if params is None:
+        with mesh:
+            params = jax.jit(
+                lambda: split_params(stack.init_model(key, cfg))[0],
+                out_shardings=program.param_shardings)()
+    return ContinuousBatchingEngine(program, params, sched,
+                                    metrics=metrics, on_token=on_token,
+                                    record_logits=record_logits)

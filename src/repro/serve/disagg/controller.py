@@ -60,6 +60,8 @@ class DisaggController:
         self.pending: List[MigrationTicket] = []  # finished, unmigrated
         self.rejected: List[int] = []
         self.tick_count = 0
+        self.n_full_hits = 0  # prefix-cache full hits routed straight
+        #                       to decode (zero KV transfer, §14)
 
     # -- submission ---------------------------------------------------------
 
@@ -88,6 +90,7 @@ class DisaggController:
     # -- one controller tick ------------------------------------------------
 
     def tick(self) -> None:
+        self._admit_full_hits()
         self.pending.extend(self.prefill.step())
         while self.pending:
             # FIFO, head-of-line: a stuck head keeps its place in line.
@@ -119,6 +122,31 @@ class DisaggController:
         self.metrics.robust.checksum_failures = st.n_checksum_failures
         self.metrics.on_tick(self.queue_depth, self.decode.sched.n_active)
         self.tick_count += 1
+
+    def _admit_full_hits(self) -> None:
+        """Route prefix-cache FULL hits straight to decode (§14): a queued
+        request whose prompt (minus the always-prefilled last token) is
+        entirely resident in the DECODE pool's prefix index skips the
+        prefill worker AND the KV transfer — the decode worker mounts the
+        shared pages and runs the 1-token completion itself. Scans the
+        whole queue (a full hit behind a cold head should not wait for the
+        head's prefill), admitting in FIFO order among the hits;
+        non-hits keep their positions."""
+        sched = self.prefill.sched
+        if self.decode.sched.prefix_index is None or not sched.queue:
+            return
+        i = 0
+        while i < len(sched.queue):
+            if not self.decode.sched.has_free():
+                return
+            entry = sched.queue[i]
+            if self.decode.try_admit_cached(
+                    entry.request, entry.tokens, len(entry.resume),
+                    self.tick_count):
+                del sched.queue[i]
+                self.n_full_hits += 1
+            else:
+                i += 1
 
     @property
     def queue_depth(self) -> int:
@@ -161,7 +189,7 @@ def make_disagg(cfg: ModelConfig, mesh, run: RunConfig, params, *,
                 metrics: Optional[ServeMetrics] = None,
                 on_token: Optional[Callable] = None,
                 record_logits: bool = False, ep=None,
-                ep_placement=None) -> DisaggController:
+                ep_placement=None, prefix=None) -> DisaggController:
     """Wire up the full disaggregated deployment over one mesh.
 
     Both workers get their own paged program + pool + allocator (the
@@ -178,6 +206,14 @@ def make_disagg(cfg: ModelConfig, mesh, run: RunConfig, params, *,
     placed under ``ep_placement`` (default round-robin), and the decode
     worker's routed-copy histograms feed a RoutingEMA exposed at
     ``controller.decode.routing_ema``.
+
+    ``prefix`` (a ``serve.config.PrefixCacheCfg``) attaches a
+    :class:`~repro.serve.prefix_index.PrefixIndex` to the DECODE pool
+    only (DESIGN.md §14): decode-side registration feeds it, full hits
+    bypass prefill and the transfer entirely
+    (``DisaggController._admit_full_hits``), and its ``fair`` flag
+    switches the prefill queue to per-tenant deficit round-robin. The
+    prefill pool never shares pages — its exports require refcount 1.
     """
     max_pages = -(-max_len // page_size)
     prefill_pages = prefill_pages if prefill_pages is not None \
@@ -198,14 +234,21 @@ def make_disagg(cfg: ModelConfig, mesh, run: RunConfig, params, *,
     with mesh:
         pre_params = jax.device_put(params, pre_prog.param_shardings)
         dec_params = jax.device_put(params, dec_prog.param_shardings)
+    caching = prefix is not None and getattr(prefix, "enabled", False)
     pre_sched = PrefillScheduler(
         max_len, prefill_chunk=prefill_chunk, token_budget=token_budget,
         allocator=BlockAllocator(pre_prog.n_pages, page_size,
-                                 pre_prog.max_pages))
-    dec_sched = DecodeScheduler(
-        decode_slots,
-        allocator=BlockAllocator(dec_prog.n_pages, page_size,
-                                 dec_prog.max_pages))
+                                 pre_prog.max_pages),
+        fair=caching and prefix.fair)
+    dec_alloc = BlockAllocator(dec_prog.n_pages, page_size,
+                               dec_prog.max_pages)
+    prefix_index = None
+    if caching:
+        from repro.serve.prefix_index import PrefixIndex
+        prefix_index = PrefixIndex(dec_alloc,
+                                   capacity_pages=prefix.capacity_pages)
+    dec_sched = DecodeScheduler(decode_slots, allocator=dec_alloc,
+                                prefix_index=prefix_index)
     prefill = PrefillWorker(pre_prog, pre_params, pre_sched)
     decode = DecodeWorker(dec_prog, dec_params, dec_sched, metrics=metrics,
                           on_token=on_token, record_logits=record_logits)

@@ -247,6 +247,84 @@ class DecodeWorker:
         self._topp[slot] = sp.top_p
         return True
 
+    # -- prefix-cache full hit (DESIGN.md §14) ------------------------------
+
+    def try_admit_cached(self, req: Request, tokens: List[int],
+                         n_done: int, tick: int) -> bool:
+        """Admit a request whose prompt is a FULL prefix-cache hit straight
+        into a decode slot — zero KV transfer: the decode pool already
+        holds every line but the last, so a 1-token prefill at offset
+        ``len(tokens) - 1`` on THIS program (into a COW-forked tail page if
+        the cached one is shared) completes the KV and yields the same
+        final-position logits the prefill worker would have shipped —
+        token-exact by the key(rid, n) sampling contract. Opportunistic:
+        False (nothing changed) when there is no hit, no slot, or no
+        pages — the request stays queued for the ordinary prefill path."""
+        index = self.sched.prefix_index
+        if index is None or not self.sched.has_free() or len(tokens) < 2:
+            return False
+        pages, n_cached = index.lookup(tokens)
+        if n_cached < len(tokens) - 1:
+            return False
+        alloc = self.allocator
+        if not alloc.share_pages(req.rid, len(tokens), pages):
+            return False
+        last = len(tokens) - 1
+        pslot = last // alloc.page_size
+        table = alloc.tables[req.rid]
+        if alloc.is_shared(table[pslot]):
+            try:
+                old, new = alloc.cow_fork(req.rid, pslot)
+            except MemoryError:
+                alloc.free(req.rid)  # fall back to the prefill path
+                return False
+            with self.p.mesh:
+                self.state = self.p.fork_step(
+                    self.state, jnp.asarray([old], jnp.int32),
+                    jnp.asarray([new], jnp.int32))
+        slot = self.sched.claim_slot()
+        sp = req.sampling
+        ptrow = jnp.asarray(alloc.table(req.rid, self.p.max_pages))[None, :]
+        toks = np.asarray([tokens[last]], np.int32)[None, :]
+        with self.p.mesh:
+            prec = self.p.init_prec()
+            self.state, prec, logits = self.p.prefill_step(
+                self.params, self.state, prec, toks,
+                jnp.asarray(last, jnp.int32), ptrow)
+            first = self.p.sample_step(
+                logits, np.asarray([req.rid], np.int32),
+                np.asarray([n_done], np.int32),
+                np.asarray([sp.temperature], np.float32),
+                np.asarray([sp.top_k], np.int32),
+                np.asarray([sp.top_p], np.float32))
+            self.state = self.p.insert_step(self.state, prec,
+                                            jnp.asarray(slot, jnp.int32))
+        self._ptab[slot] = alloc.table(req.rid, self.p.max_pages)
+        first = int(np.asarray(first)[0])
+        if self.record_logits:
+            row = np.asarray(logits)[0]
+            if n_done == 0:
+                self.logits[req.rid] = [row]
+            else:
+                self.logits[req.rid].append(row)
+        self.metrics.on_token(req.rid, tick)
+        finished = self.sched.activate(req, slot, tokens, n_done, first)
+        if self.on_token:
+            self.on_token(req.rid, first, finished)
+        if finished:
+            self.metrics.on_finish(req.rid, tick)
+            self._ptab[slot] = -1
+            return True
+        self._tok[slot] = first
+        self._pos[slot] = len(tokens)
+        self._active[slot] = True
+        self._rid[slot] = req.rid
+        self._ngen[slot] = n_done + 1
+        self._temp[slot] = sp.temperature
+        self._topk[slot] = sp.top_k
+        self._topp[slot] = sp.top_p
+        return True
+
     # -- decode tick --------------------------------------------------------
 
     def ensure_pages(self) -> List[tuple]:
@@ -273,7 +351,38 @@ class DecodeWorker:
                 preempted.append((request, generated))
                 if victim == slot:
                     break  # this slot itself was evicted; it will resume
+            if self._active[slot]:
+                self._cow_guard(slot, rid, preempted)
         return preempted
+
+    def _cow_guard(self, slot: int, rid: int, preempted: List[tuple]) -> None:
+        """Fork the page this slot is about to write if it is still shared
+        (decode half of fork-on-divergence, §14). Pool OOM preempts the
+        newest running request for the copy target, appending to the
+        caller's ``preempted`` list."""
+        alloc = self.allocator
+        table = alloc.tables.get(rid)
+        pslot = int(self._pos[slot]) // alloc.page_size
+        if not table or pslot >= len(table) \
+                or not alloc.is_shared(table[pslot]):
+            return
+        while True:
+            try:
+                old, new = alloc.cow_fork(rid, pslot)
+                break
+            except MemoryError:
+                out = self.sched.pop_newest()
+                assert out is not None, "COW OOM with nothing to preempt"
+                victim, request, generated = out
+                self._clear_slot(victim)
+                preempted.append((request, generated))
+                if victim == slot:
+                    return  # the writer itself was evicted; it resumes
+        with self.p.mesh:
+            self.state = self.p.fork_step(
+                self.state, jnp.asarray([old], jnp.int32),
+                jnp.asarray([new], jnp.int32))
+        self._ptab[slot] = alloc.table(rid, self.p.max_pages)
 
     def decode_once(self, tick: int) -> None:
         """One batched decode step over all live slots."""

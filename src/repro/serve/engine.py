@@ -251,6 +251,7 @@ class ContinuousProgram:
     n_pages: int = 0
     max_pages: int = 0       # page-table slots per request
     init_prec: Callable = None  # () -> batch-1 prefill recurrent carry
+    fork_step: Callable = None  # (state, src[1], dst[1]) -> state (COW §14)
     # EP decode (DESIGN.md §11): when set, expert weights are sharded over
     # ep.ep_axis, params must be placed (serve/ep_decode.place_params) and
     # decode_step returns a 4th output — the per-layer routed-copy
@@ -282,11 +283,18 @@ def paged_state_specs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
 
 
 def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
-                            n_slots: int, max_len: int, seed: int = 0,
+                            serve_cfg=None,
+                            n_slots: int | None = None,
+                            max_len: int | None = None, seed: int = 0,
                             page_size: int | None = None,
                             n_pages: int | None = None,
                             ep=None) -> ContinuousProgram:
     """Build the jit'd steps of the continuous-batching engine.
+
+    ``serve_cfg`` (a :class:`repro.serve.config.ServeConfig`) is the
+    preferred input — slots, max_len, seed and the paged geometry all come
+    from it; the bare ``n_slots``/``max_len``/``page_size``/``n_pages``
+    kwargs remain as the legacy spelling for existing call sites.
 
     ``page_size`` switches on the paged-KV build (DESIGN.md §9): KV moves
     into shared ``[n_pages, page_size, ...]`` pools addressed through
@@ -313,6 +321,15 @@ def make_continuous_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
     (DESIGN.md §11); ``decode_step`` then returns a 4th output, the
     per-layer routed-copy histogram.
     """
+    if serve_cfg is not None:
+        n_slots = serve_cfg.slots
+        max_len = serve_cfg.max_len
+        seed = serve_cfg.seed
+        if serve_cfg.paged.enabled:
+            page_size = serve_cfg.paged.page_size
+            n_pages = serve_cfg.paged.pool_pages
+    assert n_slots is not None and max_len is not None, \
+        "pass serve_cfg or the legacy n_slots/max_len kwargs"
     assert not cfg.is_encdec and cfg.vision_seq == 0, \
         "continuous batching supports decoder-only LMs"
     if page_size is not None:
@@ -550,6 +567,17 @@ def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
         return sampling.sample_tokens(logits.astype(jnp.float32), keys,
                                       temp, topk, topp)
 
+    def fork(state, src, dst):
+        """Copy-on-write page copy (DESIGN.md §14): duplicate physical
+        page ``src`` into ``dst`` across every layer's K/V pool before a
+        writer diverges from a shared prefix. One page of device traffic —
+        the only KV copy anywhere in the paged engine."""
+        return stack.scatter_kv_pages(
+            state, stack.gather_kv_pages(state, src), dst)
+
+    jit_fork = jax.jit(fork, in_shardings=(ssh, None, None),
+                       out_shardings=ssh, donate_argnums=(0,))
+
     jit_prefill = jax.jit(prefill,
                           in_shardings=(psh, ssh, prec_sh, None, None, None),
                           out_shardings=(ssh, prec_sh, None),
@@ -574,7 +602,7 @@ def _make_paged_program(cfg: ModelConfig, mesh: Mesh, run: RunConfig, *,
         init_pstate=None,
         param_shardings=psh, state_shardings=ssh,
         paged=True, page_size=page_size, n_pages=n_pages,
-        max_pages=max_pages, ep=ep,
+        max_pages=max_pages, ep=ep, fork_step=jit_fork,
         init_prec=jax.jit(
             lambda: stack.split_kv_state(
                 stack.init_decode_state(cfg, 1, 1, dtype))[1],
@@ -670,9 +698,15 @@ class ContinuousBatchingEngine:
             chunk.tokens[chunk.start:chunk.start + chunk.length],
             np.int32)[None, :]
         if self.p.paged:
-            if chunk.start == 0:  # fresh (or resumed) -> fresh rec carry
+            if chunk.first:  # fresh (or resumed) -> fresh rec carry;
+                # a prefix hit starts at chunk.skipped, not 0 (§14)
                 with self.p.mesh:
                     self.prec = self.p.init_prec()
+            # Fork-on-divergence: this chunk writes lines
+            # [start, start+length) — any SHARED page in that range must
+            # be COW-forked before the scatter lands (a resumed mid-page
+            # prefill into a cached partial tail is the canonical case).
+            self._cow_guard(req.rid, chunk.start, chunk.length)
             ptrow = jnp.asarray(self.sched.allocator.table(
                 req.rid, self.p.max_pages))[None, :]
             with self.p.mesh:
@@ -739,12 +773,50 @@ class ContinuousBatchingEngine:
         self._topk[slot] = sp.top_k
         self._topp[slot] = sp.top_p
 
+    def _cow_guard(self, rid: int, line_start: int, n_lines: int,
+                   slot: Optional[int] = None) -> None:
+        """COW-fork every SHARED page of ``rid`` that the upcoming write
+        to lines [line_start, line_start + n_lines) would touch
+        (DESIGN.md §14): a fresh page replaces the shared one in the
+        table and ``fork_step`` copies its device lines, so no writer
+        ever mutates a page with refcount > 1. On pool exhaustion the
+        newest running request is preempted for the copy target."""
+        alloc = self.sched.allocator
+        ps = alloc.page_size
+        table = alloc.tables.get(rid)
+        if not table or n_lines <= 0:
+            return
+        lo = line_start // ps
+        hi = min((line_start + n_lines - 1) // ps, len(table) - 1)
+        for pslot in range(lo, hi + 1):
+            if not alloc.is_shared(table[pslot]):
+                continue
+            while True:
+                try:
+                    old, new = alloc.cow_fork(rid, pslot)
+                    break
+                except MemoryError:
+                    victim = self.sched.preempt_newest()
+                    assert victim is not None, \
+                        "COW OOM with nothing to preempt"
+                    self._clear_slot(victim)
+                    if slot is not None and victim == slot:
+                        return  # the writer itself was evicted; it resumes
+            with self.p.mesh:
+                self.state = self.p.fork_step(
+                    self.state, jnp.asarray([old], jnp.int32),
+                    jnp.asarray([new], jnp.int32))
+            if slot is not None:
+                self._ptab[slot] = alloc.table(rid, self.p.max_pages)
+
     def _ensure_pages(self) -> None:
         """Claim a pool page for every live slot whose next write position
         has crossed its allocated frontier; on pool OOM, preempt the newest
         running request (oldest slots are served first so eviction order is
         newest-first and the loop always converges — down to one live
-        request, which submit() guaranteed fits the pool)."""
+        request, which submit() guaranteed fits the pool). With a prefix
+        cache, a slot about to write into a still-shared page COW-forks it
+        first (the decode half of fork-on-divergence, §14)."""
         alloc = self.sched.allocator
         order = sorted((int(s) for s in np.nonzero(self._active)[0]),
                        key=lambda s: self.sched.running[s].seq)
@@ -761,6 +833,8 @@ class ContinuousBatchingEngine:
                 self._clear_slot(victim)
                 if victim == slot:
                     break  # this slot itself was evicted; it will resume
+            if self._active[slot]:
+                self._cow_guard(rid, int(self._pos[slot]), 1, slot=slot)
 
     def _decode_once(self) -> None:
         with self.p.mesh:
@@ -827,6 +901,7 @@ class ContinuousBatchingEngine:
         assert self.p.paged
         ticks = [t for t in self._page_ticks if t[1] > 0]
         lines = [p * self.p.page_size / a for p, a in ticks]
+        alloc = self.sched.allocator
         return {
             "page_size": self.p.page_size,
             "n_pages": self.p.n_pages,
@@ -834,6 +909,12 @@ class ContinuousBatchingEngine:
             "mean_lines_per_active_slot":
                 round(sum(lines) / len(lines), 2) if lines else 0.0,
             "n_preempted": self.sched.n_preempted,
+            # prefix-cache accounting (§14; zeros when caching is off)
+            "pages_allocated": alloc.n_fresh_allocs,
+            "pages_shared": alloc.n_shared_allocs,
+            "n_cow_forks": alloc.n_cow_forks,
+            "prefix_hits": self.sched.prefill.n_prefix_hits,
+            "tokens_skipped": self.sched.prefill.n_tokens_skipped,
         }
 
     # -- trace driver -------------------------------------------------------

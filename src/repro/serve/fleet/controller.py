@@ -108,7 +108,7 @@ class FleetGroup:
         sched = self.worker.sched
         n = sum(len(e.tokens) for e in sched.queue)
         if sched._prefilling is not None:
-            entry, _, start = sched._prefilling
+            entry, _, start, _ = sched._prefilling
             n += len(entry.tokens) - start
         return n
 
@@ -317,7 +317,7 @@ class FleetController:
         if g.role == PREFILL:
             sched = w.sched
             if sched._prefilling is not None:
-                entry, _, _ = sched._prefilling
+                entry, *_ = sched._prefilling
                 victims.append((entry.request, list(entry.resume)))
                 if abort_exports:
                     w.allocator.free(entry.request.rid)

@@ -1,4 +1,4 @@
-"""Paged KV-cache block allocator (DESIGN.md §9).
+"""Paged KV-cache block allocator (DESIGN.md §9, §14).
 
 vLLM-style block-granular cache management, host-side only (mirrors the
 scheduler: the allocator decides WHICH physical pages a request owns; the
@@ -8,22 +8,39 @@ layer; a page id indexes the same physical slot in every layer's pool.
 
 Contracts:
 
-* a physical page is owned by AT MOST one live request at a time
-  (``check()`` asserts it; tests drive it every engine tick);
-* freeing is a **page-table reset** — pages return to the free list and
-  the request's table entry is dropped, with no device traffic. Stale KV
-  lines in recycled pages are unreachable because the paged attention
-  paths compute key positions structurally from the page-table slot
-  (line ``j`` of table slot ``p`` is position ``p * page_size + j``) and
-  mask everything beyond the owner's causal frontier (DESIGN.md §9.2);
-* allocation is all-or-nothing: ``allocate``/``extend`` either hand over
-  every requested page or change nothing (no partial grabs to unwind);
+* every in-use physical page carries a REFCOUNT (DESIGN.md §14): one per
+  live-table occurrence, one per in-transit export, one per in-flight
+  import lease, one per prefix-index PIN. ``check()`` asserts exact
+  refcount conservation — the PR 4 "owned by at most one request"
+  invariant is the refcount-1 special case and still holds verbatim for
+  any run that never shares;
+* freeing is a **page-table reset** — a page returns to the free list
+  when its LAST reference drops, and the request's table entry is
+  dropped with no device traffic. Stale KV lines in recycled pages are
+  unreachable because the paged attention paths compute key positions
+  structurally from the page-table slot (line ``j`` of table slot ``p``
+  is position ``p * page_size + j``) and mask everything beyond the
+  owner's causal frontier (DESIGN.md §9.2). The same structural-position
+  argument is what makes SHARING sound: a page mounted at the same
+  logical slot of two tables reads identically for both owners;
+* ``share_pages`` builds a table whose leading slots alias
+  already-resident pages (prefix-cache hit) and only draws fresh pages
+  for the tail; ``cow_fork`` replaces one shared slot with a private
+  copy-target page *before* the owner's first write into it
+  (copy-on-write: writers never mutate a page with refcount > 1 — the
+  engine copies the page's device lines old -> new after forking);
+* allocation is all-or-nothing: ``allocate``/``share_pages``/``extend``
+  either hand over every requested page or change nothing. When the
+  free list runs short the allocator first consults the optional
+  ``reclaim`` hook (the prefix index's LRU eviction), which may unpin
+  cold cached pages back onto the free list;
 * ownership transfer (disaggregated serving, DESIGN.md §10) is a
   three-state machine per request: live -> exported (pages owned by the
   in-flight KV transfer, reachable by neither side's engines) ->
   released (back on the free list once the destination pool holds the
-  data). ``check()`` counts exported pages, so exactly-once ownership is
-  asserted ACROSS the handoff, not just within one pool;
+  data). Only EXCLUSIVELY owned pages (refcount 1) may be exported —
+  shared pages stay put, which is why prefix-hit requests skip the
+  transfer entirely;
 * the DESTINATION half of a handoff holds its claimed pages under an
   in-flight LEASE (``begin_import`` -> ``commit_import`` /
   ``abort_import``, DESIGN.md §13): leased pages are off the free list
@@ -35,7 +52,7 @@ Contracts:
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -57,6 +74,15 @@ class BlockAllocator:
         self.tables: Dict[int, List[int]] = {}  # rid -> owned page ids
         self.exported: Dict[int, List[int]] = {}  # rid -> in-transit pages
         self.leases: Dict[int, List[int]] = {}  # rid -> inbound in-flight
+        self.ref: Dict[int, int] = {}  # page -> total refcount (in-use only)
+        self.pins: Dict[int, int] = {}  # page -> prefix-index pin count
+        # Optional LRU-eviction hook (the prefix index): called with the
+        # page shortfall when the free list cannot cover a request, may
+        # return pages to the free list by unpinning cold cache entries.
+        self.reclaim: Optional[Callable[[int], int]] = None
+        self.n_fresh_allocs = 0  # pages drawn from the free list (bench)
+        self.n_shared_allocs = 0  # table slots served by sharing (bench)
+        self.n_cow_forks = 0  # cow_fork count (bench / tests)
 
     # -- capacity -----------------------------------------------------------
 
@@ -75,9 +101,41 @@ class BlockAllocator:
         """Whether a request of ``n_tokens`` total lines can EVER be served
         (worst-case page need within the whole pool and the per-seq table).
         Checked at submit so preemption can always make progress down to a
-        single live request."""
+        single live request — prefix-index pins do not break this because
+        ``reclaim`` can evict every pin whose page is not also live."""
         need = self.pages_for(n_tokens)
         return need <= min(self.n_pages, self.max_pages_per_seq)
+
+    # -- refcount internals -------------------------------------------------
+
+    def _incref(self, page: int) -> None:
+        self.ref[page] = self.ref.get(page, 0) + 1
+
+    def _decref(self, page: int) -> None:
+        n = self.ref[page] - 1
+        if n:
+            self.ref[page] = n
+        else:
+            del self.ref[page]
+            self._free.append(page)
+
+    def _take_free(self, need: int) -> Optional[List[int]]:
+        """Pop ``need`` fresh pages, consulting the ``reclaim`` hook on
+        shortfall. All-or-nothing: None when the pool cannot cover it."""
+        if need > len(self._free) and self.reclaim is not None:
+            self.reclaim(need - len(self._free))
+        if need > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(need)]
+        for p in pages:
+            self._incref(p)
+        self.n_fresh_allocs += len(pages)
+        return pages
+
+    def is_shared(self, page: int) -> bool:
+        """True when writes to ``page`` must COW-fork first (refcount > 1:
+        some other table, export, lease, or index pin also holds it)."""
+        return self.ref.get(page, 0) > 1
 
     # -- allocation ---------------------------------------------------------
 
@@ -87,26 +145,90 @@ class BlockAllocator:
         All-or-nothing: returns False (and allocates nothing) when the free
         list cannot cover the request. ``rid`` must not already own pages.
         """
+        return self.share_pages(rid, n_tokens, ())
+
+    def share_pages(self, rid: int, n_tokens: int,
+                    shared: "List[int] | tuple") -> bool:
+        """Table for ``rid`` covering ``n_tokens`` lines whose leading
+        slots ALIAS the already-resident ``shared`` pages (prefix-cache
+        hit, DESIGN.md §14); only the tail draws fresh pages. Shared pages
+        are increfed, never copied — a writer COW-forks before touching
+        one. All-or-nothing like ``allocate``."""
         assert rid not in self.tables, f"rid {rid} already owns pages"
         need = self.pages_for(n_tokens)
-        if need > len(self._free) or need > self.max_pages_per_seq:
+        shared = list(shared)[:need]
+        if need > self.max_pages_per_seq:
             return False
-        self.tables[rid] = [self._free.pop() for _ in range(need)]
+        for p in shared:
+            assert p in self.ref, f"shared page {p} is not resident"
+        # Hold our reference BEFORE drawing fresh pages: the reclaim hook
+        # may evict index pins mid-draw, and these pages must survive it.
+        for p in shared:
+            self._incref(p)
+        fresh = self._take_free(need - len(shared))
+        if fresh is None:
+            for p in shared:
+                self._decref(p)
+            return False
+        self.n_shared_allocs += len(shared)
+        self.tables[rid] = shared + fresh
         return True
 
     def extend(self, rid: int, n_new: int = 1) -> bool:
         """Append ``n_new`` pages to ``rid``'s table (decode growth)."""
         table = self.tables[rid]
-        if n_new > len(self._free) \
-                or len(table) + n_new > self.max_pages_per_seq:
+        if len(table) + n_new > self.max_pages_per_seq:
             return False
-        table.extend(self._free.pop() for _ in range(n_new))
+        fresh = self._take_free(n_new)
+        if fresh is None:
+            return False
+        table.extend(fresh)
         return True
 
+    def cow_fork(self, rid: int, slot: int) -> "tuple[int, int]":
+        """Replace the SHARED page at table slot ``slot`` of ``rid`` with a
+        private fresh page (fork-on-write, DESIGN.md §14). Host-side only:
+        the caller must copy the device lines ``old -> new`` (the engine's
+        ``fork_step``) before any write lands. Returns ``(old, new)``.
+        Raises MemoryError when no page can be reclaimed for the copy."""
+        table = self.tables[rid]
+        old = table[slot]
+        assert self.is_shared(old), \
+            f"cow_fork on exclusively-owned page {old} (slot {slot})"
+        fresh = self._take_free(1)
+        if fresh is None:
+            raise MemoryError("cow_fork: pool exhausted")
+        table[slot] = fresh[0]
+        self._decref(old)
+        self.n_cow_forks += 1
+        return old, fresh[0]
+
     def free(self, rid: int) -> None:
-        """Return every page of ``rid`` to the free list (copy-free recycle:
-        the page-table reset IS the recycle)."""
-        self._free.extend(self.tables.pop(rid, ()))
+        """Drop ``rid``'s table: each page loses one reference and returns
+        to the free list only when nobody else (table/export/lease/pin)
+        still holds it (copy-free recycle: the page-table reset IS the
+        recycle)."""
+        for p in self.tables.pop(rid, ()):
+            self._decref(p)
+
+    # -- prefix-index pins (DESIGN.md §14) ----------------------------------
+
+    def pin(self, page: int) -> None:
+        """Add a prefix-index reference to a resident page: the page
+        survives its owner's ``free`` so future requests can share it."""
+        assert page in self.ref, f"pin of non-resident page {page}"
+        self.pins[page] = self.pins.get(page, 0) + 1
+        self._incref(page)
+
+    def unpin(self, page: int) -> None:
+        """Drop one index reference (LRU eviction); the page is freed when
+        this was the last reference of any kind."""
+        n = self.pins[page] - 1
+        if n:
+            self.pins[page] = n
+        else:
+            del self.pins[page]
+        self._decref(page)
 
     # -- ownership transfer (disaggregated handoff, DESIGN.md §10) ----------
 
@@ -115,10 +237,16 @@ class BlockAllocator:
         transfer. The pages leave the table but do NOT return to the free
         list: they are owned by the in-flight transfer (readable source
         data, unreachable by any engine-side page table) until
-        ``release_exported`` lands them back. Returns the page ids in
-        logical (page-slot) order."""
+        ``release_exported`` lands them back. Only exclusively-owned
+        pages may travel — a shared page's other owners would be left
+        pointing at a recycled slot. Returns the page ids in logical
+        (page-slot) order."""
         assert rid not in self.exported, f"rid {rid} already exporting"
-        pages = self.tables.pop(rid)
+        pages = self.tables[rid]
+        for p in pages:
+            assert self.ref[p] == 1, \
+                f"export of shared page {p} (ref {self.ref[p]})"
+        del self.tables[rid]
         self.exported[rid] = pages
         return list(pages)
 
@@ -126,7 +254,8 @@ class BlockAllocator:
         """Finish an export: the destination pool holds the data, so the
         source pages recycle to the free list (a list move — no device
         traffic, like ``free``)."""
-        self._free.extend(self.exported.pop(rid))
+        for p in self.exported.pop(rid):
+            self._decref(p)
 
     def abort_export(self, rid: int) -> None:
         """Undo ``export_pages`` (failed transfer): the pages return to the
@@ -148,10 +277,13 @@ class BlockAllocator:
         assert rid not in self.tables, f"rid {rid} already owns pages"
         assert rid not in self.leases, f"rid {rid} already importing"
         need = self.pages_for(n_tokens)
-        if need > len(self._free) or need > self.max_pages_per_seq:
+        if need > self.max_pages_per_seq:
             return None
-        self.leases[rid] = [self._free.pop() for _ in range(need)]
-        return list(self.leases[rid])
+        pages = self._take_free(need)
+        if pages is None:
+            return None
+        self.leases[rid] = pages
+        return list(pages)
 
     def commit_import(self, rid: int) -> None:
         """Transfer landed: promote the lease to the live table."""
@@ -161,7 +293,8 @@ class BlockAllocator:
     def abort_import(self, rid: int) -> None:
         """Transfer failed: the leased pages hold garbage no table points
         at — return them to the free list untouched."""
-        self._free.extend(self.leases.pop(rid))
+        for p in self.leases.pop(rid):
+            self._decref(p)
 
     def import_pages(self, rid: int, n_tokens: int) -> Optional[List[int]]:
         """One-shot begin+commit import for transfers with no failure
@@ -189,16 +322,33 @@ class BlockAllocator:
         return out
 
     def check(self) -> None:
-        """Assert the no-sharing invariant: every physical page appears
-        exactly once across the free list, all live tables, all
-        in-transit exports, and all in-flight import leases."""
-        seen = list(self._free)
-        for rid, pages in self.tables.items():
-            seen.extend(pages)
-        for rid, pages in self.exported.items():
-            seen.extend(pages)
-        for rid, pages in self.leases.items():
-            seen.extend(pages)
-        assert len(seen) == self.n_pages, \
-            f"page leak: {len(seen)} tracked of {self.n_pages}"
-        assert len(set(seen)) == self.n_pages, "page owned twice"
+        """Assert refcount conservation (DESIGN.md §14): every page's
+        refcount equals its occurrences across live tables, in-transit
+        exports, in-flight import leases, and index pins; pages with no
+        references sit on the free list exactly once; nothing leaks and
+        nothing is double-owned. For runs that never share this reduces
+        to the PR 4 exactly-once invariant."""
+        want: Dict[int, int] = {}
+        for pages in self.tables.values():
+            for p in pages:
+                want[p] = want.get(p, 0) + 1
+        for pages in self.exported.values():
+            for p in pages:
+                want[p] = want.get(p, 0) + 1
+        for pages in self.leases.values():
+            for p in pages:
+                want[p] = want.get(p, 0) + 1
+        for p, n in self.pins.items():
+            want[p] = want.get(p, 0) + n
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "page owned twice (free)"
+        assert len(self._free) + len(self.ref) == self.n_pages, \
+            f"page leak: {len(self._free) + len(self.ref)} tracked " \
+            f"of {self.n_pages}"
+        for p, n in self.ref.items():
+            assert p not in free_set, f"page {p} both free and owned twice"
+            assert want.get(p, 0) == n, \
+                f"page {p} refcount {n} != {want.get(p, 0)} referenced " \
+                f"(leak or double-own)"
+        for p in want:
+            assert p in self.ref, f"page {p} referenced but leak-untracked"

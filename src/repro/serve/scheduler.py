@@ -43,6 +43,20 @@ return to the free list (a page-table reset, no device traffic) and it
 re-queues at the queue FRONT with its generated tokens as resume state.
 Re-prefilling prompt+generated reproduces its remaining tokens exactly
 because sampling keys are ``key(rid, n)`` — schedule-independent (§7.4).
+
+Prefix caching (``prefix_index`` set, DESIGN.md §14) changes admission
+from ``allocate`` to ``share_pages``: the longest cached prefix of the
+token list mounts as shared leading table slots and prefill SKIPS those
+lines entirely — the chunk stream starts at ``skipped`` (capped at
+``len(tokens) - 1`` so at least one line always prefills and the first
+sampled token keeps coming from prefill logits, schedule-independent as
+ever). The decode side registers finished KV runs back into the index.
+
+Fairness (``fair=True``, DESIGN.md §14): admission picks the next
+request by per-tenant deficit round-robin (the tenant with the fewest
+admissions so far goes first) instead of global FIFO, so one tenant's
+burst cannot starve the pool; within a tenant order stays FIFO, and a
+preempted request's front-requeue still resumes before anything else.
 """
 
 from __future__ import annotations
@@ -65,6 +79,7 @@ class Request:
     sampling: SamplingParams = GREEDY
     eos_token: Optional[int] = None
     arrival: float = 0.0  # trace time (engine ticks in the simulated clock)
+    tenant: int = 0  # fairness domain (multi-tenant admission, §14)
 
 
 @dataclasses.dataclass
@@ -90,6 +105,7 @@ class PrefillChunk:
     length: int
     tokens: List[int] = None  # full prompt (+ resumed generations)
     n_done: int = 0           # tokens already generated before this prefill
+    skipped: int = 0          # leading lines served by the prefix cache
 
     def __post_init__(self):
         if self.tokens is None:
@@ -98,6 +114,12 @@ class PrefillChunk:
     @property
     def final(self) -> bool:
         return self.start + self.length >= len(self.tokens)
+
+    @property
+    def first(self) -> bool:
+        """Whether this is the request's first chunk this prefill pass
+        (``start`` sits at the cache-skip point, not at 0 — §14)."""
+        return self.start == self.skipped
 
 
 @dataclasses.dataclass
@@ -112,15 +134,21 @@ class PrefillScheduler:
 
     def __init__(self, max_len: int, *, prefill_chunk: int = 64,
                  token_budget: Optional[int] = None,
-                 allocator: Optional[BlockAllocator] = None):
+                 allocator: Optional[BlockAllocator] = None,
+                 prefix_index=None, fair: bool = False):
         assert prefill_chunk >= 1
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.token_budget = token_budget or prefill_chunk
         self.allocator = allocator
+        self.prefix_index = prefix_index
+        self.fair = fair
         self.queue: Deque[_QueueEntry] = collections.deque()
-        self._prefilling = None  # (entry, slot, next_start) | None
+        self._prefilling = None  # (entry, slot, next_start, skipped) | None
         self.n_rejected = 0
+        self.n_prefix_hits = 0
+        self.n_tokens_skipped = 0
+        self._admitted: Dict[int, int] = {}  # tenant -> admissions (fair)
 
     # -- submission ---------------------------------------------------------
 
@@ -166,28 +194,62 @@ class PrefillScheduler:
         if self._prefilling is None:
             if not self.queue or not has_slot():
                 return None
-            entry = self.queue[0]
-            if self.allocator is not None and not self.allocator.allocate(
-                    entry.request.rid, len(entry.tokens)):
-                return None  # wait for pages (freed on finish / migration)
-            self.queue.popleft()
-            self._prefilling = (entry, claim_slot(), 0)
-        entry, slot, start = self._prefilling
+            idx = self._select()
+            entry = self.queue[idx]
+            skipped, shared = 0, ()
+            if self.allocator is not None:
+                if self.prefix_index is not None:
+                    shared, n_cached = self.prefix_index.lookup(entry.tokens)
+                    # >= 1 line always prefills so the first sampled token
+                    # keeps coming from prefill logits (§14).
+                    n_cached = min(n_cached, len(entry.tokens) - 1)
+                    if n_cached > 0:
+                        skipped = n_cached
+                    else:
+                        shared = ()
+                if not self.allocator.share_pages(
+                        entry.request.rid, len(entry.tokens), shared):
+                    return None  # wait for pages (freed on finish/migration)
+            del self.queue[idx]
+            if skipped:
+                self.n_prefix_hits += 1
+                self.n_tokens_skipped += skipped
+            tenant = entry.request.tenant
+            self._admitted[tenant] = self._admitted.get(tenant, 0) + 1
+            self._prefilling = (entry, claim_slot(), skipped, skipped)
+        entry, slot, start, skipped = self._prefilling
         length = min(self.prefill_chunk, len(entry.tokens) - start, budget)
         if length <= 0:
             return None
         return PrefillChunk(request=entry.request, slot=slot, start=start,
                             length=length, tokens=entry.tokens,
-                            n_done=len(entry.resume))
+                            n_done=len(entry.resume), skipped=skipped)
+
+    def _select(self) -> int:
+        """Queue index to admit next. FIFO by default; with ``fair`` the
+        tenant with the fewest admissions so far goes first (deficit
+        round-robin — a flooding tenant cannot starve the rest). A
+        preempted request requeued at the front always resumes first."""
+        if not self.fair or self.queue[0].resume:
+            return 0
+        tenants: List[int] = []
+        for e in self.queue:
+            if e.request.tenant not in tenants:
+                tenants.append(e.request.tenant)
+        pick = min(tenants, key=lambda t: self._admitted.get(t, 0))
+        for i, e in enumerate(self.queue):
+            if e.request.tenant == pick:
+                return i
+        raise AssertionError("unreachable: tenant vanished from queue")
 
     def finish_chunk(self, chunk: PrefillChunk) -> bool:
         """Record a completed chunk; True when the whole prompt is cached."""
-        entry, slot, start = self._prefilling
+        entry, slot, start, skipped = self._prefilling
         assert entry.request is chunk.request and start == chunk.start
         if chunk.final:
             self._prefilling = None
             return True
-        self._prefilling = (entry, slot, start + chunk.length)
+        self._prefilling = (entry, slot, start + chunk.length, skipped)
         return False
 
     # -- introspection ------------------------------------------------------
@@ -204,10 +266,12 @@ class DecodeScheduler:
     """Decode-side policy: slot lifecycle, results, preemption."""
 
     def __init__(self, n_slots: int, *,
-                 allocator: Optional[BlockAllocator] = None):
+                 allocator: Optional[BlockAllocator] = None,
+                 prefix_index=None):
         assert n_slots >= 1
         self.n_slots = n_slots
         self.allocator = allocator
+        self.prefix_index = prefix_index
         self.free: List[int] = list(range(n_slots - 1, -1, -1))  # pop -> 0
         self.running: Dict[int, _Running] = {}  # slot -> live request
         self.results: Dict[int, List[int]] = {}  # rid -> generated tokens
@@ -244,6 +308,15 @@ class DecodeScheduler:
             assert self.results[request.rid] == list(tokens[
                 len(request.prompt):]), "resume tokens diverged from results"
             self.results[request.rid].append(first_token)
+        if self.prefix_index is not None and self.allocator is not None:
+            # Prompt KV is resident NOW: register the FULL pages so
+            # concurrent same-prefix arrivals hit immediately. Full pages
+            # are never written again (decode only appends past them);
+            # the partial tail waits for finish-time registration.
+            ps = self.allocator.page_size
+            self.prefix_index.insert(
+                tokens, self.allocator.tables.get(request.rid, []),
+                n_valid=(len(tokens) // ps) * ps)
         self._admit_seq += 1
         self.running[slot] = _Running(
             request=request, n_generated=n_done + 1, seq=self._admit_seq)
@@ -265,6 +338,15 @@ class DecodeScheduler:
             del self.running[slot]
             self.free.append(slot)
             if self.allocator is not None:
+                if self.prefix_index is not None:
+                    # The last sampled token was never fed back, so lines
+                    # [0, prompt + generated - 1) hold valid KV — register
+                    # the whole run incl. the partial tail (multi-turn
+                    # replays hit it), THEN free: pinned pages survive the
+                    # page-table reset, unpinned ones recycle as before.
+                    seq = list(req.prompt) + self.results[req.rid][:-1]
+                    self.prefix_index.insert(
+                        seq, self.allocator.tables.get(req.rid, []))
                 self.allocator.free(req.rid)  # page-table reset = recycle
         return done
 
@@ -309,14 +391,18 @@ class Scheduler:
 
     def __init__(self, n_slots: int, max_len: int, *,
                  prefill_chunk: int = 64, token_budget: Optional[int] = None,
-                 allocator: Optional[BlockAllocator] = None):
+                 allocator: Optional[BlockAllocator] = None,
+                 prefix_index=None, fair: bool = False):
         self.n_slots = n_slots
         self.max_len = max_len
         self.allocator = allocator
+        self.prefix_index = prefix_index
         self.prefill = PrefillScheduler(max_len, prefill_chunk=prefill_chunk,
                                         token_budget=token_budget,
-                                        allocator=allocator)
-        self.decode = DecodeScheduler(n_slots, allocator=allocator)
+                                        allocator=allocator,
+                                        prefix_index=prefix_index, fair=fair)
+        self.decode = DecodeScheduler(n_slots, allocator=allocator,
+                                      prefix_index=prefix_index)
 
     # -- delegated state (public surface unchanged by the policy split) -----
 

@@ -1,0 +1,381 @@
+"""Prefix-cached copy-on-write paged KV (DESIGN.md §14).
+
+Four layers of coverage, host-side first:
+
+* property: random share / COW-fork / free / pin interleavings conserve
+  pages exactly (refcount ``check()`` after EVERY op, full-pool drain at
+  the end) and COW never mutates a page with refcount > 1;
+* property: the radix :class:`PrefixIndex` serves exactly the
+  longest-common-prefix line count a brute-force oracle over every
+  inserted sequence predicts;
+* engine: prefix caching ON is TOKEN-EXACT against OFF on a
+  shared-prefix trace, COW forks actually fire, and a flushed cache
+  leaves zero pages in use;
+* disagg: a full-hit request reaches decode with ZERO KV transfer.
+
+Runs under real hypothesis when installed and the vendored stub
+(tests/_stubs) otherwise.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.kv_blocks import BlockAllocator, pages_for
+from repro.serve.prefix_index import PrefixIndex
+
+pytestmark = pytest.mark.prefix  # CI prefix-smoke job slice
+
+PAGE = 4
+
+
+def _alloc(n_pages=32, max_pages=8):
+    return BlockAllocator(n_pages, PAGE, max_pages)
+
+
+# ---------------------------------------------------------------------------
+# Refcount + COW unit coverage
+# ---------------------------------------------------------------------------
+
+def test_share_pages_aliases_and_draws_only_the_tail():
+    a = _alloc()
+    assert a.allocate(1, 10)                 # 3 pages
+    donor = list(a.tables[1])
+    assert a.share_pages(2, 10, donor[:2])   # alias 2, draw 1 fresh
+    assert a.tables[2][:2] == donor[:2]
+    assert a.pages_in_use == 4               # 3 + 1 fresh, 2 aliased
+    assert a.is_shared(donor[0]) and a.is_shared(donor[1])
+    assert not a.is_shared(donor[2])
+    a.check()
+
+
+def test_share_is_all_or_nothing_and_keeps_donor_refs():
+    a = BlockAllocator(4, PAGE, 8)
+    assert a.allocate(1, 3 * PAGE)           # 3 of 4 pages
+    donor = list(a.tables[1])
+    # needs 2 fresh on top of 1 shared, only 1 free -> refused whole
+    assert not a.share_pages(2, 3 * PAGE, donor[:1])
+    assert a.ref[donor[0]] == 1              # incref rolled back
+    a.check()
+
+
+def test_cow_fork_gives_private_page_and_never_frees_the_shared_one():
+    a = _alloc()
+    assert a.allocate(1, 2 * PAGE)
+    donor = list(a.tables[1])
+    assert a.share_pages(2, 2 * PAGE, donor)
+    old, new = a.cow_fork(2, 1)
+    assert old == donor[1] and new != old
+    assert a.tables[2] == [donor[0], new]
+    assert a.ref[old] == 1                   # rid 1 still owns it
+    assert a.ref[new] == 1 and not a.is_shared(new)
+    assert a.n_cow_forks == 1
+    a.check()
+    with pytest.raises(AssertionError, match="exclusively-owned"):
+        a.cow_fork(2, 1)                     # COW on a private page is a bug
+
+
+def test_export_refuses_shared_pages():
+    a = _alloc()
+    assert a.allocate(1, PAGE)
+    assert a.share_pages(2, PAGE, a.tables[1])
+    with pytest.raises(AssertionError, match="shared"):
+        a.export_pages(1)
+
+
+def test_pin_outlives_owner_and_unpin_frees():
+    a = _alloc()
+    assert a.allocate(1, PAGE)
+    page = a.tables[1][0]
+    a.pin(page)
+    a.free(1)
+    assert page in a.ref and a.pages_in_use == 1   # survives the owner
+    a.check()
+    a.unpin(page)
+    assert a.pages_in_use == 0
+    a.check()
+
+
+# ---------------------------------------------------------------------------
+# Property: share/fork/free/pin interleavings conserve pages exactly
+# ---------------------------------------------------------------------------
+
+def _shared_slots(a, rid):
+    return [i for i, p in enumerate(a.tables[rid]) if a.is_shared(p)]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9),       # op selector
+                          st.integers(0, 4),       # rid
+                          st.integers(1, 40),      # token count
+                          st.integers(0, 7)),      # aux (slot / donor pick)
+                min_size=0, max_size=80))
+def test_share_cow_free_interleavings_conserve_pages(script):
+    a = _alloc(n_pages=24)
+    pinned = []
+    for sel, rid, n_tokens, aux in script:
+        ops = ["pin", "unpin"]
+        if rid in a.tables:
+            ops += ["free", "extend"]
+            if _shared_slots(a, rid):
+                ops += ["cow_fork"]
+        else:
+            ops += ["share", "allocate"]
+        op = ops[sel % len(ops)]
+        free_before = a.n_free
+        if op == "allocate":
+            ok = a.allocate(rid, n_tokens)
+            want = pages_for(n_tokens, PAGE)
+            assert a.n_free == free_before - (want if ok else 0)
+        elif op == "share":
+            donors = [r for r in a.tables if a.tables[r]]
+            shared = []
+            if donors:
+                donor = donors[aux % len(donors)]
+                k = aux % (len(a.tables[donor]) + 1)
+                shared = a.tables[donor][:k]
+            want = pages_for(n_tokens, PAGE)
+            shared = shared[:want]
+            ok = a.share_pages(rid, n_tokens, shared)
+            # conservation: only the tail beyond the aliased run is drawn
+            assert a.n_free == free_before - \
+                ((want - len(shared)) if ok else 0)
+            if ok:
+                assert a.tables[rid][:len(shared)] == shared
+        elif op == "extend":
+            ok = a.extend(rid, 1)
+            assert a.n_free == free_before - (1 if ok else 0)
+        elif op == "cow_fork":
+            slots = _shared_slots(a, rid)
+            slot = slots[aux % len(slots)]
+            old = a.tables[rid][slot]
+            ref_before = a.ref[old]
+            try:
+                _, new = a.cow_fork(rid, slot)
+            except MemoryError:
+                assert a.n_free == 0
+            else:
+                # COW never mutates the shared page: it is still resident
+                # with exactly one reference moved off it.
+                assert a.ref[old] == ref_before - 1 and old in a.ref
+                assert a.ref[new] == 1
+                assert a.n_free == free_before - 1
+        elif op == "free":
+            dying = sum(1 for p in set(a.tables[rid])
+                        if a.ref[p] == a.tables[rid].count(p))
+            a.free(rid)
+            assert a.n_free == free_before + dying
+        elif op == "pin":
+            resident = sorted(a.ref)
+            if resident:
+                page = resident[aux % len(resident)]
+                a.pin(page)
+                pinned.append(page)
+                assert a.n_free == free_before
+        elif op == "unpin":
+            if pinned:
+                page = pinned.pop(aux % len(pinned))
+                dying = a.ref[page] == 1
+                a.unpin(page)
+                assert a.n_free == free_before + (1 if dying else 0)
+        a.check()                            # conservation, every step
+        assert a.pages_in_use == a.n_pages - a.n_free
+    for page in pinned:
+        a.unpin(page)
+    for rid in list(a.tables):
+        a.free(rid)
+    a.check()
+    assert a.pages_in_use == 0               # nothing leaked, ever
+
+
+# ---------------------------------------------------------------------------
+# Property: radix index == brute-force longest-common-prefix oracle
+# ---------------------------------------------------------------------------
+
+_seq = st.lists(st.integers(0, 3), min_size=1, max_size=20)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(_seq, min_size=0, max_size=10),    # inserted sequences
+       st.lists(_seq, min_size=1, max_size=8))     # queries
+def test_index_matches_prefix_oracle(inserted, queries):
+    a = BlockAllocator(256, PAGE, 64)
+    idx = PrefixIndex(a)
+    for rid, toks in enumerate(inserted):
+        assert a.allocate(rid, len(toks))
+        idx.insert(toks, a.tables[rid])
+        a.free(rid)                          # pins keep the pages alive
+        idx.check()
+        a.check()
+    for toks in queries:
+        pages, n = idx.lookup(toks)
+        want = max((len(_lcp(toks, s)) for s in inserted), default=0)
+        assert n == want, f"query {toks}: served {n}, oracle {want}"
+        # the page run must cover exactly the served lines
+        assert len(pages) == pages_for(n, PAGE) or \
+            (n == 0 and not pages)
+        idx.check()
+    n_pinned = idx.n_pages
+    assert idx.flush() == n_pinned
+    a.check()
+    assert a.pages_in_use == 0               # flush recycles EVERY page
+
+
+def _lcp(a, b):
+    out = []
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        out.append(x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Eviction: leaf-first LRU, capacity bound, reclaim hook
+# ---------------------------------------------------------------------------
+
+def test_capacity_evicts_leaf_first_and_keeps_hot_interior():
+    a = BlockAllocator(64, PAGE, 16)
+    idx = PrefixIndex(a, capacity_pages=2)
+    toks = list(range(3 * PAGE))             # a 3-page chain
+    assert a.allocate(0, len(toks))
+    idx.insert(toks, a.tables[0])
+    a.free(0)
+    assert idx.n_pages == 2                  # tail leaf evicted, not root
+    idx.check()
+    _, n = idx.lookup(toks)
+    assert n == 2 * PAGE                     # surviving prefix still serves
+    idx.check()
+    a.check()
+
+
+def test_reclaim_hook_unwedges_allocation():
+    a = BlockAllocator(4, PAGE, 8)
+    idx = PrefixIndex(a)
+    toks = list(range(4 * PAGE))
+    assert a.allocate(0, len(toks))          # whole pool
+    idx.insert(toks, a.tables[0])
+    a.free(0)
+    assert a.n_free == 0                     # all four pages pinned
+    assert a.allocate(1, 3 * PAGE)           # eviction makes room
+    assert idx.n_evicted >= 3
+    a.check()
+    idx.check()
+
+
+# ---------------------------------------------------------------------------
+# Fairness: deficit round-robin admission
+# ---------------------------------------------------------------------------
+
+def _plan_order(fair, submits):
+    from repro.serve.scheduler import PrefillScheduler, Request
+    s = PrefillScheduler(64, prefill_chunk=64, fair=fair)
+    for rid, tenant in submits:
+        s.submit(Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=1,
+                         tenant=tenant))
+    order = []
+    while s.has_work():
+        chunk = s.plan(64, has_slot=lambda: True, claim_slot=lambda: 0)
+        assert chunk is not None and chunk.final
+        s.finish_chunk(chunk)
+        order.append(chunk.request.rid)
+    return order
+
+
+def test_fair_admission_interleaves_a_flooding_tenant():
+    burst = [(i, 0) for i in range(4)] + [(4, 1), (5, 2)]
+    assert _plan_order(False, burst) == [0, 1, 2, 3, 4, 5]  # FIFO starves
+    order = _plan_order(True, burst)
+    # deficit round-robin: tenants 1 and 2 are not stuck behind the burst
+    assert order.index(4) <= 2 and order.index(5) <= 2
+
+
+def test_fair_admission_resumes_preempted_first():
+    from repro.serve.scheduler import PrefillScheduler, Request
+    s = PrefillScheduler(64, prefill_chunk=64, fair=True)
+    s.submit(Request(rid=0, prompt=[1], max_new_tokens=1, tenant=0))
+    s.requeue_front(Request(rid=9, prompt=[1], max_new_tokens=4, tenant=5),
+                    [7, 8])
+    chunk = s.plan(64, has_slot=lambda: True, claim_slot=lambda: 0)
+    assert chunk.request.rid == 9            # resume beats fairness
+    assert chunk.tokens == [1, 7, 8]
+
+
+# ---------------------------------------------------------------------------
+# Engine: token-exactness, COW firing, recycle-no-leak  (device)
+# ---------------------------------------------------------------------------
+
+def _tiny_deployment(prefix_on, *, disagg=False, pool_pages=None):
+    from repro.launch.mesh import make_mesh
+    from repro.models import registry
+    from repro.models.modules import Policy, RunConfig
+    from repro.serve import (DisaggCfg, PagedCfg, PrefixCacheCfg,
+                             ServeConfig, build_deployment)
+    cfg = registry.smoke_config(registry.get_config("llama3.2-3b"))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    run = RunConfig(policy=Policy(), attn_impl="ref", moe_impl="gather")
+    sc = ServeConfig(
+        slots=2, max_len=24, prefill_chunk=16,
+        paged=PagedCfg(enabled=not disagg, page_size=8,
+                       pool_pages=pool_pages),
+        prefix=PrefixCacheCfg(enabled=prefix_on),
+        disagg=DisaggCfg(enabled=disagg))
+    return cfg, build_deployment(cfg, mesh, run, sc)
+
+
+def _shared_trace(vocab):
+    """Two exact-repeat prompts (12 tokens: one full 8-line page + a
+    4-line tail) staggered so the first FINISHES before the second
+    arrives — its registered partial tail page forces the sharer to
+    COW-fork mid-page — plus one cold distinct prompt."""
+    from repro.serve import Request
+    rng = np.random.RandomState(3)
+    p = rng.randint(0, vocab, size=(12,)).astype(int).tolist()
+    q = rng.randint(0, vocab, size=(10,)).astype(int).tolist()
+    return [Request(rid=0, prompt=list(p), max_new_tokens=6, arrival=0.0),
+            Request(rid=1, prompt=list(q), max_new_tokens=5, arrival=1.0),
+            Request(rid=2, prompt=list(p), max_new_tokens=6, arrival=40.0)]
+
+
+def test_prefix_cache_is_token_exact_and_forks_before_writes():
+    cfg, off = _tiny_deployment(False)
+    trace = _shared_trace(cfg.vocab_size)
+    baseline = off.run([r for r in trace])
+    cfg, on = _tiny_deployment(True)
+    got = on.run([r for r in trace])
+    assert got == baseline                   # caching never changes tokens
+    sched = on.sched
+    assert sched.prefill.n_prefix_hits >= 1
+    assert sched.prefill.n_tokens_skipped >= 8
+    # rid 2 mounts rid 0's registered partial tail page and must fork it
+    # before its first write lands.
+    assert sched.allocator.n_cow_forks >= 1
+    occ = on.page_occupancy()
+    assert occ["prefix_hits"] == sched.prefill.n_prefix_hits
+    assert occ["tokens_skipped"] == sched.prefill.n_tokens_skipped
+    sched.allocator.check()
+    sched.prefix_index.check()
+    # recycle-no-leak over shared + COW-forked pages: after the cache
+    # lets go, the pool is EXACTLY whole again.
+    sched.prefix_index.flush()
+    sched.allocator.check()
+    assert sched.allocator.pages_in_use == 0
+
+
+def test_disagg_full_hit_skips_the_transfer():
+    cfg, off = _tiny_deployment(False)
+    trace = _shared_trace(cfg.vocab_size)
+    baseline = off.run([r for r in trace])
+    cfg, eng = _tiny_deployment(True, disagg=True)
+    got = eng.run([r for r in trace])
+    assert got == baseline                   # exact across deployments too
+    # rid 2's whole prompt was decode-resident: it reached decode with
+    # ZERO KV transfer — only the two cold requests shipped pages.
+    assert eng.n_full_hits == 1
+    assert eng.transfer.stats.n_transfers == 2
+    eng.prefill.allocator.check()
+    eng.decode.allocator.check()
+    eng.decode.sched.prefix_index.check()
+    eng.decode.sched.prefix_index.flush()
+    eng.decode.allocator.check()
+    assert eng.decode.allocator.pages_in_use == 0

@@ -1,0 +1,202 @@
+"""ServeConfig deployment API (DESIGN.md §14.5).
+
+The config object is THE deployment description and
+:func:`build_deployment` THE construction path: these tests pin the
+aggregated reject-don't-truncate validation (every violation in ONE
+error), the unified ``--kill-group``/chaos fault-spec grammar, the
+argparse round-trip, the config -> engine-type mapping, and that the
+legacy ``make_continuous_program`` kwargs keep working.
+"""
+
+import argparse
+
+import pytest
+
+from repro.serve.config import (ChaosCfg, DisaggCfg, EPCfg, FleetCfg,
+                                PagedCfg, PrefixCacheCfg, ServeConfig,
+                                ServeConfigError, parse_kills)
+
+pytestmark = pytest.mark.prefix  # CI prefix-smoke job slice
+
+
+# ---------------------------------------------------------------------------
+# One fault-spec grammar
+# ---------------------------------------------------------------------------
+
+def test_kill_grammar_accepts_legacy_and_chaos_forms():
+    assert parse_kills(["2@8", "0@10"]) == [(8, 2), (10, 0)]
+    # the shorthand IS sugar for a chaos crash entry; the full form works
+    assert parse_kills(["crash_start@8:g2"]) == [(8, 2)]
+    assert parse_kills(None) == []
+
+
+@pytest.mark.parametrize("bad", [
+    "nope", "2@", "@8", "2@8:g1",          # malformed / over-specified
+    "drop%0.5",                             # wrong site
+    "crash_start:g2",                       # crash entries need @TICK
+    "crash_start@8",                        # ...and an explicit group
+])
+def test_kill_grammar_rejects(bad):
+    with pytest.raises(ValueError, match="kill-group"):
+        parse_kills([bad])
+
+
+# ---------------------------------------------------------------------------
+# Aggregated validation
+# ---------------------------------------------------------------------------
+
+def test_validate_collects_every_violation_in_one_error():
+    sc = ServeConfig(slots=0, max_len=1,
+                     paged=PagedCfg(enabled=True, page_size=0),
+                     prefix=PrefixCacheCfg(enabled=True),
+                     disagg=DisaggCfg(enabled=True),
+                     fleet=FleetCfg(enabled=True),
+                     chaos=ChaosCfg(spec="nope("))
+    with pytest.raises(ServeConfigError) as e:
+        sc.validate()
+    msg = str(e.value)
+    for frag in ("slots must be >= 1", "max_len must be >= 2",
+                 "page_size must be >= 1", "mutually exclusive",
+                 "--prefix-cache is not supported with --fleet",
+                 "bad --chaos spec"):
+        assert frag in msg, f"missing {frag!r} in {msg!r}"
+
+
+@pytest.mark.parametrize("sc, frag", [
+    (ServeConfig(prefix=PrefixCacheCfg(enabled=True)),
+     "needs a paged deployment"),
+    (ServeConfig(chaos=ChaosCfg(spec="drop%0.5")), "requires --fleet"),
+    (ServeConfig(fleet=FleetCfg(kills=((3, 1),))), "requires --fleet"),
+    (ServeConfig(fleet=FleetCfg(slo_ttft=1.0)), "requires --fleet"),
+    (ServeConfig(fleet=FleetCfg(enabled=True, decode_groups=())),
+     ">= 1 prefill and >= 1 decode group"),
+    (ServeConfig(fleet=FleetCfg(enabled=True, decode_groups=("tpu9",))),
+     "unknown device class"),
+    (ServeConfig(ep=EPCfg(ep_size=2), fleet=FleetCfg(enabled=True)),
+     "not supported with --fleet"),
+    (ServeConfig(ep=EPCfg(ep_size=2, placement="magic")),
+     "uniform"),
+    (ServeConfig(paged=PagedCfg(enabled=True),
+                 prefix=PrefixCacheCfg(enabled=True, capacity_pages=0)),
+     "capacity_pages must be >= 1"),
+])
+def test_validate_rejects(sc, frag):
+    with pytest.raises(ServeConfigError, match=frag):
+        sc.validate()
+
+
+def test_valid_configs_pass():
+    ServeConfig().validate()
+    ServeConfig(paged=PagedCfg(enabled=True),
+                prefix=PrefixCacheCfg(enabled=True, fair=True)).validate()
+    ServeConfig(disagg=DisaggCfg(enabled=True),
+                prefix=PrefixCacheCfg(enabled=True)).validate()
+    ServeConfig(fleet=FleetCfg(enabled=True, kills=((8, 2),),
+                               slo_ttft=2.0),
+                chaos=ChaosCfg(spec="drop%0.5*2")).validate()
+
+
+def test_arch_dependent_validation():
+    from repro.models import registry
+    dense = registry.get_config("llama3.2-3b")
+    moe = registry.get_config("qwen3-moe-30b-a3b")
+    rec = registry.get_config("mamba2-2.7b")
+    with pytest.raises(ServeConfigError, match="needs a MoE arch"):
+        ServeConfig(ep=EPCfg(ep_size=2)).validate(model_cfg=dense)
+    ServeConfig(ep=EPCfg(ep_size=2)).validate(model_cfg=moe)
+    # recurrent mixers carry whole-history state: a skipped prefix would
+    # corrupt it, so the combination is rejected, never truncated.
+    with pytest.raises(ServeConfigError, match="recurrent"):
+        ServeConfig(paged=PagedCfg(enabled=True),
+                    prefix=PrefixCacheCfg(enabled=True)).validate(
+                        model_cfg=rec)
+
+
+# ---------------------------------------------------------------------------
+# argparse round-trip
+# ---------------------------------------------------------------------------
+
+def _args(**over):
+    base = dict(slots=3, prompt_len=40, gen=8, prefill_chunk=16,
+                prefill_budget=None, seed=7, temperature=0.5, top_k=4,
+                top_p=0.9, paged=True, page_size=8, pool_pages=20,
+                prefill_pool_pages=None, prefix_cache=True,
+                prefix_capacity=6, fair=True, disagg=False, fleet=False,
+                prefill_groups="a40", decode_groups="2",
+                fleet_elastic=False, kill_group=["1@5"], chaos=None,
+                chaos_seed=0, slo_ttft=None, ep_size=0,
+                ep_placement="uniform")
+    base.update(over)
+    return argparse.Namespace(**base)
+
+
+def test_from_args_round_trip():
+    sc = ServeConfig.from_args(_args())
+    assert sc.slots == 3 and sc.max_len == 48 and sc.seed == 7
+    assert sc.sampling.temperature == 0.5 and sc.sampling.top_k == 4
+    assert sc.paged == PagedCfg(enabled=True, page_size=8, pool_pages=20)
+    assert sc.prefix == PrefixCacheCfg(enabled=True, capacity_pages=6,
+                                       fair=True)
+    assert sc.fleet.decode_groups == ("v100", "v100")  # count form
+    assert sc.fleet.kills == ((5, 1),)
+    # from_args only PARSES; policy stays in validate — and this namespace
+    # carries kills without --fleet, which validate rejects.
+    with pytest.raises(ServeConfigError, match="requires --fleet"):
+        sc.validate()
+    ServeConfig.from_args(_args(kill_group=None)).validate()
+
+
+def test_from_args_parse_errors_use_the_one_error_path():
+    with pytest.raises(ServeConfigError, match="kill-group"):
+        ServeConfig.from_args(_args(kill_group=["nope"]))
+
+
+# ---------------------------------------------------------------------------
+# build_deployment: config -> engine type  (device)
+# ---------------------------------------------------------------------------
+
+def _ctx():
+    from repro.launch.mesh import make_mesh
+    from repro.models import registry
+    from repro.models.modules import Policy, RunConfig
+    cfg = registry.smoke_config(registry.get_config("llama3.2-3b"))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    run = RunConfig(policy=Policy(), attn_impl="ref", moe_impl="gather")
+    return cfg, mesh, run
+
+
+def test_build_deployment_maps_config_to_engine():
+    from repro.serve import ContinuousBatchingEngine, build_deployment
+    cfg, mesh, run = _ctx()
+    sc = ServeConfig(slots=2, max_len=16)
+    eng = build_deployment(cfg, mesh, run, sc)
+    assert isinstance(eng, ContinuousBatchingEngine)
+    assert eng.sched.allocator is None           # dense KV, no paging
+    sc = ServeConfig(slots=2, max_len=16,
+                     paged=PagedCfg(enabled=True, page_size=8),
+                     prefix=PrefixCacheCfg(enabled=True))
+    eng = build_deployment(cfg, mesh, run, sc)
+    assert eng.sched.allocator is not None
+    assert eng.sched.prefix_index is not None
+    assert eng.sched.allocator.reclaim == eng.sched.prefix_index.evict
+
+
+def test_build_deployment_validates_first():
+    from repro.serve import build_deployment
+    cfg, mesh, run = _ctx()
+    sc = ServeConfig(prefix=PrefixCacheCfg(enabled=True))
+    with pytest.raises(ServeConfigError, match="paged deployment"):
+        build_deployment(cfg, mesh, run, sc)  # nothing half-constructed
+
+
+def test_legacy_make_continuous_program_kwargs_still_work():
+    from repro.serve import make_continuous_program
+    cfg, mesh, run = _ctx()
+    p = make_continuous_program(cfg, mesh, run, n_slots=2, max_len=16)
+    assert p.n_slots == 2 and p.max_len == 16
+    sc = ServeConfig(slots=3, max_len=24,
+                     paged=PagedCfg(enabled=True, page_size=8))
+    p = make_continuous_program(cfg, mesh, run, serve_cfg=sc)
+    assert p.n_slots == 3 and p.page_size == 8
+    with pytest.raises(AssertionError, match="serve_cfg or the legacy"):
+        make_continuous_program(cfg, mesh, run)

@@ -378,8 +378,8 @@ def test_disagg_driver_exits_nonzero_on_unfinished(monkeypatch):
     dropped or unfinished, so the CI disagg-smoke step actually gates."""
     from repro.launch import serve as serve_mod
     monkeypatch.setattr(serve_mod, "serve_arch",
-                        lambda arch, args: {"ok": False})
+                        lambda arch, args, serve_cfg=None: {"ok": False})
     assert serve_mod.main(["--smoke", "--disagg"]) == 1
     monkeypatch.setattr(serve_mod, "serve_arch",
-                        lambda arch, args: {"ok": True})
+                        lambda arch, args, serve_cfg=None: {"ok": True})
     assert serve_mod.main(["--smoke", "--disagg"]) == 0

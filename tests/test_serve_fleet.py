@@ -406,8 +406,8 @@ def test_parse_group_spec_and_kills():
 def test_fleet_driver_exits_nonzero_on_failure(monkeypatch):
     from repro.launch import serve as serve_mod
     monkeypatch.setattr(serve_mod, "serve_arch",
-                        lambda arch, args: {"ok": False})
+                        lambda arch, args, serve_cfg=None: {"ok": False})
     assert serve_mod.main(["--smoke", "--fleet"]) == 1
     monkeypatch.setattr(serve_mod, "serve_arch",
-                        lambda arch, args: {"ok": True})
+                        lambda arch, args, serve_cfg=None: {"ok": True})
     assert serve_mod.main(["--smoke", "--fleet"]) == 0

@@ -382,11 +382,11 @@ def test_serve_driver_exits_nonzero_on_dropped_requests(monkeypatch):
     a request unfinished, so the CI serve-smoke step actually gates."""
     from repro.launch import serve as serve_mod
     monkeypatch.setattr(serve_mod, "serve_arch",
-                        lambda arch, args: {"ok": arch == serve_mod.
+                        lambda arch, args, serve_cfg=None: {"ok": arch == serve_mod.
                                             SMOKE_ARCHS[0]})
     assert serve_mod.main(["--smoke"]) == 1
     monkeypatch.setattr(serve_mod, "serve_arch",
-                        lambda arch, args: {"ok": True})
+                        lambda arch, args, serve_cfg=None: {"ok": True})
     assert serve_mod.main(["--smoke"]) == 0
 
 
