@@ -131,6 +131,7 @@ class DisaggPlan:
     profile: P.ServeProfile
     predicted: sim.ServeSimResult
     predicted_unified: sim.ServeSimResult
+    expected_hit_ratio: float = 0.0  # prefix-cache discount the plan assumed
 
     @property
     def decode_attn(self) -> int:
@@ -154,7 +155,8 @@ class DisaggPlan:
 def plan_disagg_group(cfg: ModelConfig, zp: ZPGroupShape, trace, *,
                       prefill_chunk: int = 256, ctx: int = 2048,
                       slots_per_device: int = 8,
-                      page_size: int = 16) -> DisaggPlan:
+                      page_size: int = 16,
+                      expected_hit_ratio: float = 0.0) -> DisaggPlan:
     """Pick the prefill:decode device split maximizing simulated goodput —
     the serving analogue of Asym-EA's offload sweep (same shape: profile
     both classes on both roles, sweep assignments, validate candidates in
@@ -165,18 +167,31 @@ def plan_disagg_group(cfg: ModelConfig, zp: ZPGroupShape, trace, *,
     data-parallel engine (slowest class paces both phases); disagg
     candidates assign ``a`` attention-class + ``e`` expert-class devices
     to prefill (that many parallel batch-1 streams) and the rest to
-    decode, paying the page-handoff wire time per migrated request."""
+    decode, paying the page-handoff wire time per migrated request.
+
+    ``expected_hit_ratio`` (in [0, 1)) is the anticipated prefix-cache hit
+    fraction, e.g. a measured ``PrefixCache`` hit rate from a prior run or
+    the deployment's known prompt-template overlap. Cache-hit tokens skip
+    prefill compute entirely (the disagg engine's cached-admit path even
+    skips the page handoff for them), so the prefill leg — chunk time AND
+    handoff volume — is discounted by ``1 - hit`` while the decode leg is
+    untouched; a high-hit workload therefore plans fewer prefill devices
+    and banks the freed devices as decode slots."""
+    if not 0.0 <= expected_hit_ratio < 1.0:
+        raise ValueError(f"expected_hit_ratio must be in [0, 1), "
+                         f"got {expected_hit_ratio}")
     prof = P.serve_profile(cfg, zp.attn_class, zp.exp_class,
                            chunk=prefill_chunk, ctx=ctx,
                            decode_batch=slots_per_device,
                            page_size=page_size)
+    discount = 1.0 - expected_hit_ratio
     avg_prompt = sum(r.prompt for r in trace) / max(len(trace), 1)
-    t_handoff = -(-avg_prompt // page_size) * prof.t_page
+    t_handoff = -(-avg_prompt // page_size) * prof.t_page * discount
 
     unified = sim.simulate_serve_trace(
         trace, prefill_chunk=prefill_chunk,
         t_prefill_chunk=max(prof.t_prefill_chunk_attn,
-                            prof.t_prefill_chunk_exp),
+                            prof.t_prefill_chunk_exp) * discount,
         t_decode_step=max(prof.t_decode_step_attn, prof.t_decode_step_exp),
         decode_slots=slots_per_device * (zp.M + zp.N), colocated=True)
 
@@ -187,7 +202,7 @@ def plan_disagg_group(cfg: ModelConfig, zp: ZPGroupShape, trace, *,
             if n_pre < 1 or n_dec < 1:
                 continue
             t_chunk = max([prof.t_prefill_chunk_attn] * (a > 0) +
-                          [prof.t_prefill_chunk_exp] * (e > 0))
+                          [prof.t_prefill_chunk_exp] * (e > 0)) * discount
             t_step = max([prof.t_decode_step_attn] * (zp.M - a > 0) +
                          [prof.t_decode_step_exp] * (zp.N - e > 0))
             res = sim.simulate_serve_trace(
@@ -197,7 +212,8 @@ def plan_disagg_group(cfg: ModelConfig, zp: ZPGroupShape, trace, *,
                 n_prefill_streams=n_pre, t_handoff=t_handoff)
             cand = DisaggPlan(zp=zp, prefill_attn=a, prefill_exp=e,
                               profile=prof, predicted=res,
-                              predicted_unified=unified)
+                              predicted_unified=unified,
+                              expected_hit_ratio=expected_hit_ratio)
             if best is None or res.goodput > best.predicted.goodput \
                     or (res.goodput == best.predicted.goodput
                         and res.ttft_p50 < best.predicted.ttft_p50):

@@ -44,6 +44,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import zebra_spmd as zs
 from repro.models import modules, stack
+from repro.obs import trace as obs_trace
 from repro.models.config import LayerSpec, ModelConfig
 from repro.models.modules import RunConfig
 from repro.pytree import split_params
@@ -278,12 +279,19 @@ class ZebraMPMD:
         batch_sh = NamedSharding(self.attn_mesh, P("adata"))
         x: Dict = {}
         saved: Dict = {}
+        tr = obs_trace.TRACER
+        track = "zebra-mpmd"
+        if tr.enabled:
+            tr.declare_track(track, pid="train")
         for j in range(R):
-            tj = jax.device_put(toks[j], batch_sh)
-            x[(0, j)] = self.embed_f(attn_side["embed"], tj, positions)
+            with tr.span(track, f"embed mb{j}", microbatch=j):
+                tj = jax.device_put(toks[j], batch_sh)
+                x[(0, j)] = self.embed_f(attn_side["embed"], tj, positions)
         Q = self.Q
         for l in range(L):
             for j in range(R):
+                tr.begin(track, f"F l{l} mb{j}", layer=l, microbatch=j,
+                         chunks=Q)
                 out = self.attn_route_f(attn_side["layers"][l], x[(l, j)],
                                         positions)
                 (h, buf_r, buf_l, w, tok, slot, keep, order, aux) = out
@@ -308,6 +316,7 @@ class ZebraMPMD:
                 saved[(l, j)] = (h, buf_r, buf_l, w, tok, slot, keep, order,
                                  out_full)
                 x[(l + 1, j)] = y
+                tr.end(track)
 
         # ---- head + backward, Theorem-1 reverse order ----
         grads_a = jax.tree.map(jnp.zeros_like, attn_side)
@@ -315,19 +324,23 @@ class ZebraMPMD:
         losses = []
         g_x: Dict = {}
         for j in range(R):
-            head_in = {"final_norm": attn_side["final_norm"],
-                       "embed": attn_side["embed"]}
-            if "lm_head" in attn_side:
-                head_in["lm_head"] = attn_side["lm_head"]
-            losses.append(self.head_loss_f(head_in, x[(L, j)], tgts[j]))
-            gp, gx = self.head_bwd(head_in, x[(L, j)], tgts[j])
-            for k in ("final_norm", "embed", "lm_head"):
-                if k in gp:
-                    grads_a[k] = jax.tree.map(jnp.add, grads_a[k], gp[k])
-            g_x[(L, j)] = gx
+            with tr.span(track, f"head mb{j}", microbatch=j):
+                head_in = {"final_norm": attn_side["final_norm"],
+                           "embed": attn_side["embed"]}
+                if "lm_head" in attn_side:
+                    head_in["lm_head"] = attn_side["lm_head"]
+                losses.append(self.head_loss_f(head_in, x[(L, j)], tgts[j]))
+                gp, gx = self.head_bwd(head_in, x[(L, j)], tgts[j])
+                for k in ("final_norm", "embed", "lm_head"):
+                    if k in gp:
+                        grads_a[k] = jax.tree.map(jnp.add, grads_a[k],
+                                                  gp[k])
+                g_x[(L, j)] = gx
 
         for l in range(L - 1, -1, -1):
             for j in range(R):
+                tr.begin(track, f"B l{l} mb{j}", layer=l, microbatch=j,
+                         chunks=Q)
                 (h, buf_r, buf_l, w, tok, slot, keep, order,
                  out_full) = saved.pop((l, j))
                 n_att = buf_l.shape[0]
@@ -360,11 +373,14 @@ class ZebraMPMD:
                 grads_a["layers"][l] = jax.tree.map(
                     jnp.add, grads_a["layers"][l], gpa)
                 g_x[(l, j)] = dx
+                tr.end(track)
 
         for j in range(R):
-            ge = self.embed_bwd_f(attn_side["embed"], toks[j], positions,
-                                  g_x[(0, j)])
-            grads_a["embed"] = jax.tree.map(jnp.add, grads_a["embed"], ge)
+            with tr.span(track, f"embed^B mb{j}", microbatch=j):
+                ge = self.embed_bwd_f(attn_side["embed"], toks[j],
+                                      positions, g_x[(0, j)])
+                grads_a["embed"] = jax.tree.map(jnp.add, grads_a["embed"],
+                                                ge)
 
         loss = sum(losses) / R
         scale = 1.0 / R

@@ -198,8 +198,18 @@ class FaultInjector:
             self._remaining[i] -= 1
             self.events.append(FaultEvent(self.tick, site, target,
                                           len(self.events)))
+            self._trace(site, target)
             return True
         return False
+
+    def _trace(self, site: str, target: str) -> None:
+        """Mirror a fired fault as an instant on the "chaos" meta track
+        (obs §15) so the Perfetto timeline shows every injection."""
+        from repro.obs import trace as obs_trace
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.declare_track("chaos", pid="fleet", kind="meta")
+            tr.instant("chaos", site, target=target, seq=len(self.events))
 
     def active(self, site: str, target: str = "*") -> bool:
         """Whether a window fault (``hb_loss``) covers the current tick
@@ -214,6 +224,7 @@ class FaultInjector:
                     self._windows_logged.add(key)
                     self.events.append(FaultEvent(self.tick, site, target,
                                                   len(self.events)))
+                    self._trace(site, target)
                 return True
         return False
 

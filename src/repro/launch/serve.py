@@ -83,6 +83,8 @@ import numpy as np
 
 from repro.launch.mesh import make_mesh
 from repro.models import registry
+from repro.obs import format_report, write_chrome_trace
+from repro.obs import trace as obs_trace
 from repro.models.modules import Policy, RunConfig
 from repro.serve import (Request, SamplingParams, ServeConfig,
                          ServeConfigError, ServeMetrics, build_deployment)
@@ -211,6 +213,14 @@ def serve_arch(arch: str, args, serve_cfg: ServeConfig = None) -> dict:
 
     shed: set = set()
     leaked: list = []
+    trace_out = getattr(args, "trace_out", None)
+    tracer = None
+    if trace_out:
+        # Tick-clock tracing (DESIGN.md §15): installed process-wide so
+        # every instrumented hot path emits; off by default (NullTracer).
+        tracer = obs_trace.Tracer(
+            wall=bool(getattr(args, "trace_wall", False)))
+        obs_trace.install(tracer)
     try:
         engine = build_deployment(cfg, mesh, run, serve_cfg,
                                   metrics=metrics, on_token=stream)
@@ -219,7 +229,21 @@ def serve_arch(arch: str, args, serve_cfg: ServeConfig = None) -> dict:
         # topology problems) still fails the run, never half-serves.
         print(f"[serve] FAIL arch={cfg.name}: bad deployment: {e}",
               file=sys.stderr)
+        obs_trace.install(None)
         return {"ok": False, "n_requests": 0, "config_error": str(e)}
+    if tracer is not None:
+        # Unified counters registry: the exporter snapshots these into the
+        # trace artifact's reproCounters section.
+        tracer.registry.register("serve", metrics.summary)
+        tracer.registry.register("robust", metrics.robust.as_dict)
+        ema = getattr(engine, "ema", None)
+        if ema is None:
+            ema = getattr(getattr(engine, "decode", None),
+                          "routing_ema", None)
+        if ema is not None:
+            tracer.registry.register("routing_ema", lambda e=ema: {
+                "n_updates": e.n_updates,
+                "merged": [round(float(v), 6) for v in e.merged()]})
 
     t0 = time.perf_counter()
     if serve_cfg.fleet.enabled:
@@ -231,6 +255,7 @@ def serve_arch(arch: str, args, serve_cfg: ServeConfig = None) -> dict:
             # --fleet-elastic): requests would be dropped — fail the run.
             print(f"[serve] FAIL arch={cfg.name}: fleet stalled: {e}",
                   file=sys.stderr)
+            obs_trace.install(None)
             return {"ok": False, "n_requests": 0, "fleet_error": str(e)}
         shed = set(engine.shed)
     else:
@@ -382,6 +407,16 @@ def serve_arch(arch: str, args, serve_cfg: ServeConfig = None) -> dict:
                   and (metrics.requests.get(r.rid) is None
                        or metrics.requests[r.rid].finish_tick is None
                        or len(results.get(r.rid, [])) != r.max_new_tokens)]
+    if tracer is not None:
+        obj = write_chrome_trace(tracer, trace_out,
+                                 ticks=getattr(engine, "tick_count", None))
+        obs_trace.install(None)
+        print(f"[serve] arch={cfg.name} trace: "
+              f"{len(obj['traceEvents'])} events -> {trace_out}")
+        for line in format_report(obj["reproIdle"]).splitlines():
+            print(f"[serve] idle: {line}")
+        s["trace"] = {"path": trace_out,
+                      "n_events": len(obj["traceEvents"])}
     s["ok"] = not engine.rejected and not unfinished and not leaked \
         and s["n_requests"] == len(trace) - len(shed)
     if not s["ok"]:
@@ -501,6 +536,15 @@ def main(argv=None):
                     help="uniform: static round-robin expert placement; "
                          "planned: online heterogeneity-aware re-placement "
                          "from the observed routing EMA")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace-event JSON of the "
+                         "run (tick-clock spans, request flows, counters, "
+                         "idle-time attribution — DESIGN.md §15); tracing "
+                         "is fully off without this flag")
+    ap.add_argument("--trace-wall", action="store_true",
+                    help="annotate trace spans with wall-clock readings "
+                         "(opt-in; excluded from the deterministic trace "
+                         "signature)")
     args = ap.parse_args(argv)
 
     try:
@@ -514,7 +558,13 @@ def main(argv=None):
     archs = [args.arch] if args.arch else \
         (list(SMOKE_ARCHS) if args.smoke else ["llama3.2-3b"])
     failed = []
+    trace_out = args.trace_out
     for arch in archs:
+        if trace_out and len(archs) > 1:
+            # One artifact per arch (the smoke pair would overwrite).
+            stem, dot, ext = trace_out.rpartition(".")
+            args.trace_out = f"{stem}.{arch}.{ext}" if dot \
+                else f"{trace_out}.{arch}"
         s = serve_arch(arch, args, serve_cfg)
         if not s.get("ok", True):
             failed.append(arch)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.core.zebra_spmd import ZebraConfig
+from repro.obs import format_report, write_chrome_trace
+from repro.obs import trace as obs_trace
 from repro.data import DataConfig, DataLoader
 from repro.launch.mesh import make_mesh
 from repro.models import registry
@@ -59,6 +61,12 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--data", default=None, help="token .bin (else synthetic)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(obs §15; one tick per training step)")
+    ap.add_argument("--trace-wall", action="store_true",
+                    help="trace with wall-clock timestamps instead of the "
+                         "deterministic step clock")
     args = ap.parse_args(argv)
 
     cfg = registry.get_config(args.arch)
@@ -103,8 +111,18 @@ def main(argv=None):
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"zebra={dataclasses.asdict(program.zcfg) if program.zcfg else None}")
 
+    tracer = None
+    last_logged: dict = {}
+    if args.trace_out:
+        tracer = obs_trace.Tracer(wall=bool(args.trace_wall))
+        obs_trace.install(tracer)
+        tracer.declare_track("train", pid="train")
+        tracer.registry.register("train", lambda: dict(last_logged))
+
     t0 = time.time()
     for step in range(start_step, args.steps):
+        if tracer is not None:
+            tracer.advance(step)
         batch = next(loader)
         # modality-frontend stubs
         extra_in = {}
@@ -116,7 +134,7 @@ def main(argv=None):
             extra_in["vision_embeds"] = jnp.zeros(
                 (args.batch, cfg.vision_seq, cfg.vision_dim or cfg.d_model),
                 run.policy.compute_dtype)
-        with mesh:
+        with mesh, obs_trace.TRACER.span("train", f"step {step}", step=step):
             params, opt_state, metrics = program.train_step(
                 params, opt_state, {**batch, **extra_in})
         if (step + 1) % args.log_every == 0 or step == start_step:
@@ -126,6 +144,12 @@ def main(argv=None):
                   f"gnorm={float(metrics['grad_norm']):.3f} "
                   f"lr={float(metrics['lr']):.2e} {dt * 1e3:.0f} ms/step",
                   flush=True)
+            if tracer is not None:
+                last_logged.update(step=step + 1,
+                                   loss=float(metrics["loss"]),
+                                   nll=float(metrics["nll"]),
+                                   ms_per_step=round(dt * 1e3, 1))
+                tracer.count("train", "loss", float(metrics["loss"]))
         if ckpt and (step + 1) % args.ckpt_every == 0:
             ckpt.save(step + 1, params, opt_state,
                       extra={"loader": loader.state_dict()}, blocking=False)
@@ -133,8 +157,42 @@ def main(argv=None):
         ckpt.save(args.steps, params, opt_state,
                   extra={"loader": loader.state_dict()})
         ckpt.wait()
+    if tracer is not None:
+        if program.zcfg is not None:
+            _lay_zebra_sim(tracer, cfg, args)
+        obj = write_chrome_trace(tracer, args.trace_out)
+        obs_trace.install(None)
+        print(f"[train] trace: {len(obj['traceEvents'])} events "
+              f"-> {args.trace_out}")
+        for line in format_report(obj["reproIdle"]).splitlines():
+            print(f"[train] idle: {line}")
     print(f"[train] done: final loss {float(metrics['loss']):.4f}")
     return 0
+
+
+def _lay_zebra_sim(tracer, cfg, args) -> None:
+    """Lay the analytic zebra timeline (core.simulator over the canonical
+    schedule, reference A40/V100 ZP pair) onto seconds-domain tracks next
+    to the measured step clock. The zebra SPMD overlap itself is scheduled
+    inside XLA, so this simulated view — the paper's own validation
+    instrument — is what carries the per-stream / a2a-exposed breakdown."""
+    from repro.core import hardware as HW
+    from repro.core import schedule as S
+    from repro.core.profiler import ZPGroupShape, profile_layer
+    from repro.core.simulator import CommTimes, simulate
+    from repro.obs.zebra import sim_to_trace
+
+    zp = ZPGroupShape(M=1, N=1, attn_class=HW.A40, exp_class=HW.V100)
+    link_bw = min(zp.attn_class.link_bw, zp.exp_class.link_bw)
+    times = profile_layer(cfg, zp, args.batch, args.seq, args.microbatches,
+                          link_bw=link_bw)
+    sched = S.canonical_schedule(cfg.n_layers, args.microbatches,
+                                 n_chunks=max(args.n_chunks, 1))
+    res = simulate(sched, times, CommTimes(times.t_dispatch, times.t_combine),
+                   cfg.n_experts, zp.N, zp.M)
+    sim_to_trace(sched, res, tracer)
+    print(f"[train] zebra-sim: iter={res.iter_time * 1e3:.2f} ms "
+          f"attn_util={res.attn_util:.2f} exp_util={res.exp_util:.2f}")
 
 
 if __name__ == "__main__":

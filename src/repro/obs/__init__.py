@@ -1,0 +1,18 @@
+"""Observability spine (DESIGN.md §15): deterministic tick-clock tracing,
+a unified counters/gauges registry, Perfetto export, and idle-time
+attribution — the measured counterpart to the analytic profiler/simulator
+stack. Disabled by default; ``trace.install(Tracer())`` turns it on and
+costs nothing when off (no-op stubs)."""
+
+from repro.obs.export import to_chrome, write_chrome_trace
+from repro.obs.registry import Registry
+from repro.obs.report import format_report, idle_report
+from repro.obs.trace import (IDLE_BUCKETS, NULL, NullTracer, Tracer,
+                             current, install, use)
+from repro.obs.zebra import sim_to_trace
+
+__all__ = [
+    "IDLE_BUCKETS", "NULL", "NullTracer", "Registry", "Tracer",
+    "current", "format_report", "idle_report", "install", "sim_to_trace",
+    "to_chrome", "use", "write_chrome_trace",
+]

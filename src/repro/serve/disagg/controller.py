@@ -36,6 +36,7 @@ import jax
 
 from repro.models.config import ModelConfig
 from repro.models.modules import RunConfig
+from repro.obs import trace as obs_trace
 from repro.serve.engine import make_continuous_program
 from repro.serve.kv_blocks import BlockAllocator
 from repro.serve.kv_transfer import KVTransferEngine, TransferAbortedError
@@ -60,8 +61,19 @@ class DisaggController:
         self.pending: List[MigrationTicket] = []  # finished, unmigrated
         self.rejected: List[int] = []
         self.tick_count = 0
+        self.owns_clock = True  # standalone: this controller advances the
+        #                         tracer (fleet takes it over per group)
         self.n_full_hits = 0  # prefix-cache full hits routed straight
         #                       to decode (zero KV transfer, §14)
+
+    def set_tracks(self, prefill_track: str, decode_track: str) -> None:
+        """Rename the two role tracks (fleet groups use g{gid}:prefill /
+        g{gid}:decode) and cede the tick clock to the caller."""
+        self.prefill.track = prefill_track
+        self.prefill.sched.track = prefill_track
+        self.decode.track = decode_track
+        self.decode.sched.track = decode_track
+        self.owns_clock = False
 
     # -- submission ---------------------------------------------------------
 
@@ -86,10 +98,15 @@ class DisaggController:
                 f"pool holds")
         self.prefill.sched.submit(req)  # validates + prefill-pool fit
         self.metrics.on_submit(req.rid, len(req.prompt))
+        obs_trace.TRACER.flow(self.prefill.track, "queued", req.rid,
+                              prompt=len(req.prompt))
 
     # -- one controller tick ------------------------------------------------
 
     def tick(self) -> None:
+        tr = obs_trace.TRACER
+        if self.owns_clock:
+            tr.advance(self.tick_count)
         self._admit_full_hits()
         self.pending.extend(self.prefill.step())
         while self.pending:
@@ -121,6 +138,19 @@ class DisaggController:
         self.metrics.robust.transfer_retries = st.n_retries
         self.metrics.robust.checksum_failures = st.n_checksum_failures
         self.metrics.on_tick(self.queue_depth, self.decode.sched.n_active)
+        if tr.enabled:
+            # Per-role idle attribution (§15): a role track that opened no
+            # span this tick gets exactly one idle bucket.
+            if not tr.busy_this_tick(self.prefill.track):
+                bucket = "pool-OOM" \
+                    if self.prefill.sched.wait_reason == "pages" \
+                    else "queue-starved"
+                tr.mark_idle(self.prefill.track, bucket)
+            if not tr.busy_this_tick(self.decode.track):
+                bucket = "transfer-wait" if self.pending \
+                    else "queue-starved"
+                tr.mark_idle(self.decode.track, bucket)
+            tr.count(self.prefill.track, "queue_depth", self.queue_depth)
         self.tick_count += 1
 
     def _admit_full_hits(self) -> None:
@@ -145,6 +175,8 @@ class DisaggController:
                     self.tick_count):
                 del sched.queue[i]
                 self.n_full_hits += 1
+                obs_trace.TRACER.instant(self.decode.track, "full-hit",
+                                         rid=entry.request.rid)
             else:
                 i += 1
 

@@ -40,6 +40,7 @@ import numpy as np
 import jax
 
 from repro.models import stack
+from repro.obs import trace as obs_trace
 from repro.serve.engine import ContinuousProgram
 from repro.serve.kv_transfer import KVTransferEngine
 from repro.serve.metrics import ServeMetrics
@@ -74,6 +75,8 @@ class PrefillWorker:
         self.p = program
         self.params = params
         self.sched = sched
+        self.track = "prefill"  # tracer track (§15); fleet renames per group
+        sched.track = self.track
         with program.mesh:
             # The detached prefill state (stack.init_paged_prefill_state):
             # pools sized by the PREFILL group's HBM budget, batch-1
@@ -95,31 +98,39 @@ class PrefillWorker:
         The batch-1 stream is the landing site (slot hooks are trivial);
         page admission against the prefill allocator is the real gate."""
         tickets = []
+        tr = obs_trace.TRACER
         budget = self.sched.token_budget
         while budget > 0:
             chunk = self.sched.plan(budget, lambda: True, lambda: 0)
             if chunk is None:
                 break
             req = chunk.request
-            toks = np.asarray(
-                chunk.tokens[chunk.start:chunk.start + chunk.length],
-                np.int32)[None, :]
-            if chunk.start == 0:  # fresh (or resumed) -> fresh rec carry
+            with tr.span(self.track, "prefill", rid=req.rid,
+                         start=chunk.start, length=chunk.length):
+                if chunk.first:
+                    tr.flow(self.track, "prefill", req.rid)
+                toks = np.asarray(
+                    chunk.tokens[chunk.start:chunk.start + chunk.length],
+                    np.int32)[None, :]
+                if chunk.start == 0:  # fresh (or resumed) -> fresh carry
+                    with self.p.mesh:
+                        self.prec = self.p.init_prec()
+                ptrow = jnp.asarray(self.allocator.table(
+                    req.rid, self.p.max_pages))[None, :]
                 with self.p.mesh:
-                    self.prec = self.p.init_prec()
-            ptrow = jnp.asarray(self.allocator.table(
-                req.rid, self.p.max_pages))[None, :]
-            with self.p.mesh:
-                self.state, self.prec, logits = self.p.prefill_step(
-                    self.params, self.state, self.prec, toks,
-                    jnp.asarray(chunk.start, jnp.int32), ptrow)
+                    self.state, self.prec, logits = self.p.prefill_step(
+                        self.params, self.state, self.prec, toks,
+                        jnp.asarray(chunk.start, jnp.int32), ptrow)
             budget -= chunk.length
             if self.sched.finish_chunk(chunk):
-                tickets.append(MigrationTicket(
+                ticket = MigrationTicket(
                     request=req, tokens=list(chunk.tokens),
                     n_done=chunk.n_done,
                     src_pages=self.allocator.export_pages(req.rid),
-                    prec=self.prec, last_logits=logits))
+                    prec=self.prec, last_logits=logits)
+                tickets.append(ticket)
+                tr.instant(self.track, "ticket", rid=req.rid,
+                           pages=len(ticket.src_pages))
                 self.prec = None
         return tickets
 
@@ -142,6 +153,8 @@ class DecodeWorker:
         self.p = program
         self.params = params
         self.sched = sched
+        self.track = "decode"  # tracer track (§15); fleet renames per group
+        sched.track = self.track
         self.metrics = metrics or ServeMetrics()
         self.on_token = on_token
         self.record_logits = record_logits
@@ -192,11 +205,12 @@ class DecodeWorker:
             return False
         slot = self.sched.claim_slot()
         try:
-            with self.p.mesh:
+            with self.p.mesh, obs_trace.TRACER.span(
+                    self.track, "admit", rid=req.rid, pages=len(dst)):
                 self.state = transfer.transfer(
                     src_worker.state, self.state, ticket.src_pages, dst,
                     dst_n_pages=self.p.n_pages,
-                    src_name=src_name, dst_name=dst_name)
+                    src_name=src_name, dst_name=dst_name, rid=req.rid)
         except Exception as e:
             # The transfer's scatter donates our state: if any chunk
             # landed before the fault, the old reference is dead and the
@@ -286,7 +300,8 @@ class DecodeWorker:
         sp = req.sampling
         ptrow = jnp.asarray(alloc.table(req.rid, self.p.max_pages))[None, :]
         toks = np.asarray([tokens[last]], np.int32)[None, :]
-        with self.p.mesh:
+        with self.p.mesh, obs_trace.TRACER.span(
+                self.track, "cached-admit", rid=req.rid, cached=n_cached):
             prec = self.p.init_prec()
             self.state, prec, logits = self.p.prefill_step(
                 self.params, self.state, prec, toks,
@@ -386,7 +401,8 @@ class DecodeWorker:
 
     def decode_once(self, tick: int) -> None:
         """One batched decode step over all live slots."""
-        with self.p.mesh:
+        with self.p.mesh, obs_trace.TRACER.span(
+                self.track, "decode", n_active=int(self._active.sum())):
             out = self.p.decode_step(
                 self.params, self.state, self._tok[:, None], self._pos,
                 self._ptab, self._active, self._rid, self._ngen,

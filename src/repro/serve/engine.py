@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import stack
 from repro.models.config import ModelConfig, ShapeConfig
+from repro.obs import trace as obs_trace
 from repro.models.modules import RunConfig
 from repro.serve import sampling
 from repro.serve.metrics import ServeMetrics
@@ -637,6 +638,9 @@ class ContinuousBatchingEngine:
         self.logits: Dict[int, List[np.ndarray]] = {}  # rid -> [V] rows
         self.rejected: List[int] = []  # rids refused admission
         self.tick_count = 0
+        self.track = "serve"  # tracer track (fleet/disagg override per role)
+        self.owns_clock = True  # standalone: this engine advances the tracer
+        scheduler.set_track(self.track)
         B = program.n_slots
         with program.mesh:
             self.state = program.init_state()
@@ -667,24 +671,53 @@ class ContinuousBatchingEngine:
     def results(self) -> Dict[int, List[int]]:
         return self.sched.results
 
+    def set_track(self, track: str) -> None:
+        """Point this engine's trace events at ``track`` (fleet groups use
+        g{gid}, disagg roles use prefill/decode). Controllers that call
+        this own the tick clock, so the engine stops advancing it."""
+        self.track = track
+        self.owns_clock = False
+        self.sched.set_track(track)
+
     def submit(self, req: Request) -> None:
         self.sched.submit(req)
         self.metrics.on_submit(req.rid, len(req.prompt))
+        obs_trace.TRACER.flow(self.track, "queued", req.rid,
+                              prompt=len(req.prompt))
 
     # -- one engine tick ----------------------------------------------------
 
     def tick(self) -> None:
+        tr = obs_trace.TRACER
+        if self.owns_clock:
+            tr.advance(self.tick_count)
+        worked = False
         budget = self.sched.token_budget
         while budget > 0:
             chunk = self.sched.plan_prefill(budget)
             if chunk is None:
                 break
-            self._run_prefill_chunk(chunk)
+            with tr.span(self.track, "prefill", rid=chunk.request.rid,
+                         start=chunk.start, length=chunk.length):
+                if chunk.first:
+                    tr.flow(self.track, "prefill", chunk.request.rid)
+                self._run_prefill_chunk(chunk)
+            worked = True
             budget -= chunk.length
         if self.p.paged:
             self._ensure_pages()
         if self._active.any():
-            self._decode_once()
+            with tr.span(self.track, "decode",
+                         n_active=int(self._active.sum())):
+                self._decode_once()
+            worked = True
+        if tr.enabled:
+            tr.count(self.track, "queue_depth", self.sched.queue_depth)
+            if not worked:
+                bucket = "pool-OOM" \
+                    if self.sched.prefill.wait_reason == "pages" \
+                    else "queue-starved"
+                tr.mark_idle(self.track, bucket)
         self.metrics.on_tick(self.sched.queue_depth, self.sched.n_active)
         if self.p.paged:
             in_use = self.sched.allocator.pages_in_use

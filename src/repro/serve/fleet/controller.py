@@ -74,6 +74,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.ft.chaos import FaultInjector, GroupCrashed
 from repro.ft.monitor import (HeartbeatConfig, HeartbeatMonitor,
                               StragglerDetector)
+from repro.obs import trace as obs_trace
 from repro.serve.disagg.workers import (DecodeWorker, MigrationTicket,
                                         PrefillWorker)
 from repro.serve.kv_transfer import KVTransferEngine, TransferAbortedError
@@ -189,6 +190,7 @@ class FleetController:
         self.events: List[FleetEvent] = []
         self.n_flips = 0
         self.tick_count = 0
+        self._dead_tracks: set = set()  # tracks of removed groups (§15)
         self.monitor = HeartbeatMonitor(
             [g.name for g in self.groups],
             HeartbeatConfig(interval_s=1.0, grace_multiplier=grace_ticks),
@@ -210,6 +212,11 @@ class FleetController:
             self._wire(g)
 
     def _wire(self, g: FleetGroup) -> None:
+        # One tracer track per group (§15): both roles' spans land on
+        # g{gid}, so a flip shows up as the span names changing on the
+        # same track.
+        g.worker.track = g.name
+        g.worker.sched.track = g.name
         if g.role == DECODE:
             g.worker.sched.results = self.results
             g.worker.metrics = self.metrics
@@ -221,6 +228,18 @@ class FleetController:
             g.worker.on_token = \
                 lambda rid, tok, fin: self._on_token(gid, gen, rid, tok,
                                                      fin)
+
+    def _fleet_instant(self, name: str, **args) -> None:
+        """Control-plane instant on the "fleet" meta track (§15):
+        excluded from idle attribution, visible in the viewer."""
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.declare_track("fleet", pid="fleet", kind="meta")
+            tr.instant("fleet", name, **args)
+
+    def _event(self, kind: str, gid: int, detail: str = "") -> None:
+        self.events.append(FleetEvent(self.tick_count, kind, gid, detail))
+        self._fleet_instant(kind, gid=gid, detail=detail)
 
     def _on_token(self, gid: int, gen: int, rid: int, tok: int,
                   finished: bool) -> None:
@@ -277,13 +296,15 @@ class FleetController:
                 self.submitted.add(req.rid)
                 self.shed.append(req.rid)
                 self.metrics.robust.shed_requests += 1
-                self.events.append(FleetEvent(self.tick_count, "shed", -1,
-                                              f"rid {req.rid}"))
+                self._event("shed", -1, f"rid {req.rid}")
                 return
         g = self.router.place_request(pre, len(req.prompt))
         g.worker.sched.submit(req)  # validates + prefill-pool fit
         self.submitted.add(req.rid)
         self.metrics.on_submit(req.rid, len(req.prompt))
+        self._fleet_instant("route", rid=req.rid, gid=g.gid)
+        obs_trace.TRACER.flow(g.name, "queued", req.rid,
+                              prompt=len(req.prompt))
 
     # -- failure injection + recovery ---------------------------------------
 
@@ -363,9 +384,9 @@ class FleetController:
             # and the group will keep producing completions. Fence its
             # epoch and quarantine it; it may rejoin at gen+1 later.
             zombie = g.alive
-            self.events.append(FleetEvent(
-                self.tick_count, "dead", g.gid,
-                g.role + (" (zombie)" if zombie else "")))
+            self._event("dead", g.gid,
+                        g.role + (" (zombie)" if zombie else ""))
+            self._dead_tracks.add(g.name)
             victims = self._strip_group_work(g, abort_exports=False)
             if zombie:
                 self._quarantine(g)
@@ -375,9 +396,8 @@ class FleetController:
             for request, resume in victims:
                 self._requeue(request, resume)
             if victims:
-                self.events.append(FleetEvent(
-                    self.tick_count, "recover", g.gid,
-                    f"{len(victims)} requests re-prefill"))
+                self._event("recover", g.gid,
+                            f"{len(victims)} requests re-prefill")
 
     def _quarantine(self, g: FleetGroup) -> None:
         """Fence a falsely-dead group's epoch and detach it from every
@@ -385,6 +405,14 @@ class FleetController:
         corrupting the results log the replacement is rebuilding."""
         self.fenced.add((g.gid, g.generation))
         w = g.worker
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            # The zombie keeps computing: move it to a meta track (no idle
+            # attribution) so the replacement owns the real g{gid} track.
+            ztrack = f"{g.name}:zombie"
+            tr.declare_track(ztrack, pid="fleet", kind="meta")
+            w.track = ztrack
+            w.sched.track = ztrack
         if g.role == DECODE:
             # Private snapshot of the results log: the zombie's scheduler
             # keeps appending (its requests are still live inside it) but
@@ -416,11 +444,11 @@ class FleetController:
                 if z.role == DECODE else self._make_prefill()
             self._wire(z)
             self.groups.append(z)
+            self._dead_tracks.discard(z.name)
             self.monitor.add(z.name)
             self.detector.add(z.name)
             self.metrics.robust.zombie_rejoins += 1
-            self.events.append(FleetEvent(self.tick_count, "rejoin",
-                                          z.gid, f"gen {z.generation}"))
+            self._event("rejoin", z.gid, f"gen {z.generation}")
 
     # -- elastic role flips -------------------------------------------------
 
@@ -434,8 +462,7 @@ class FleetController:
         g.flips += 1
         self.n_flips += 1
         self._wire(g)
-        self.events.append(FleetEvent(self.tick_count, "flip", g.gid,
-                                      f"-> {to_role}"))
+        self._event("flip", g.gid, f"-> {to_role}")
 
     def _force_decode_flip(self) -> None:
         """Zero decode groups left: conscript a prefill group, displacing
@@ -492,6 +519,12 @@ class FleetController:
 
     def tick(self) -> None:
         chaos = self.chaos
+        tr = obs_trace.TRACER
+        tr.advance(self.tick_count)
+        if tr.enabled:
+            tr.declare_track("fleet", pid="fleet", kind="meta")
+            for g in self.groups:
+                tr.declare_track(g.name, pid="fleet")
         if chaos is not None:
             chaos.begin_tick(self.tick_count)
             for g in list(self.groups):
@@ -587,7 +620,34 @@ class FleetController:
         self.metrics.on_tick(
             self.queue_depth,
             sum(g.worker.sched.n_active for g in self.decode_groups()))
+        if tr.enabled:
+            self._attribute_idle(tr, chaos)
         self.tick_count += 1
+
+    def _attribute_idle(self, tr, chaos) -> None:
+        """Classify this tick for every group track that did no work
+        (§15). Exactly one bucket per idle group-tick; the report
+        defaults unmarked ticks to queue-starved, so removed groups'
+        trailing gaps are marked fault-stall here explicitly."""
+        for g in self.groups:
+            if tr.busy_this_tick(g.name):
+                continue
+            if not g.alive or (chaos is not None
+                               and chaos.active("hb_loss", g.name)):
+                bucket = "fault-stall"
+            elif g.role == PREFILL:
+                if any(p.src_gid == g.gid for p in self.pending):
+                    # Pool (partly) parked behind un-migrated tickets.
+                    bucket = "transfer-wait"
+                elif g.worker.sched.wait_reason == "pages":
+                    bucket = "pool-OOM"
+                else:
+                    bucket = "queue-starved"
+            else:
+                bucket = "drain" if g.draining else "queue-starved"
+            tr.mark_idle(g.name, bucket)
+        for name in self._dead_tracks:
+            tr.mark_idle(name, "fault-stall")
 
     def has_work(self) -> bool:
         return any(g.worker.sched.has_work()

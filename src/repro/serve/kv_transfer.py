@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.ft.chaos import FaultInjector, GroupCrashed
 from repro.models import stack
+from repro.obs import trace as obs_trace
 from repro.sharding.rules import constraint, transfer_payload_spec
 
 
@@ -142,7 +143,8 @@ class KVTransferEngine:
 
     def transfer(self, src_state, dst_state, src_ids: List[int],
                  dst_ids: List[int], *, dst_n_pages: int,
-                 src_name: str = "*", dst_name: str = "*"):
+                 src_name: str = "*", dst_name: str = "*",
+                 rid: Optional[int] = None):
         """Move pages ``src_ids`` of ``src_state``'s pools into pages
         ``dst_ids`` of ``dst_state``'s pools, chunk by chunk. Returns the
         updated destination state; the source state is read-only (its
@@ -161,15 +163,23 @@ class KVTransferEngine:
         assert len(src_ids) == len(dst_ids) and src_ids, \
             "transfer needs matching non-empty page-id lists"
         chaos = self.chaos
+        tr = obs_trace.TRACER
+        track = f"xfer:{src_name}->{dst_name}"
+        if tr.enabled:
+            tr.declare_track(track, kind="meta")
+            if rid is not None:
+                tr.flow(track, "transfer", rid, pages=len(src_ids))
         n = len(src_ids)
         cp = self.chunk_pages
         for lo in range(0, n, cp):
             if chaos is not None:
                 if chaos.fire("crash_mid_export", src_name):
+                    tr.instant(track, "crash", side="src", rid=rid)
                     exc = GroupCrashed("src", src_name)
                     exc.dst_state = dst_state
                     raise exc
                 if chaos.fire("crash_mid_import", dst_name):
+                    tr.instant(track, "crash", side="dst", rid=rid)
                     exc = GroupCrashed("dst", dst_name)
                     exc.dst_state = dst_state
                     raise exc
@@ -183,6 +193,7 @@ class KVTransferEngine:
             src_arr = jnp.asarray(src_chunk, jnp.int32)
             dst_arr = jnp.asarray(dst_chunk, jnp.int32)
             committed = False
+            tr.begin(track, "chunk", idx=lo // cp, pages=real, rid=rid)
             for attempt in range(1 + self.max_retries):
                 if attempt:
                     # Bounded exponential backoff before each retry,
@@ -190,11 +201,14 @@ class KVTransferEngine:
                     self.stats.n_retries += 1
                     self.stats.sim_seconds += \
                         self.backoff_s * (2 ** (attempt - 1))
+                    tr.instant(track, "retry", idx=lo // cp,
+                               attempt=attempt)
                 payload = self._gather(src_state, src_arr)
                 if chaos is not None and chaos.fire("drop", dst_name):
                     # Chunk lost on the wire: the receiver times out.
                     self.stats.n_timeouts += 1
                     self.stats.sim_seconds += self.timeout_s
+                    tr.instant(track, "drop", idx=lo // cp)
                     continue
                 crc = _tree_crc(payload) if self.verify_checksums else None
                 if chaos is not None and chaos.fire("corrupt", dst_name):
@@ -202,6 +216,7 @@ class KVTransferEngine:
                 if crc is not None and _tree_crc(payload) != crc:
                     # Receiver-side checksum mismatch: discard, retry.
                     self.stats.n_checksum_failures += 1
+                    tr.instant(track, "corrupt", idx=lo // cp)
                     continue
                 dst_state = self._scatter(dst_state, payload, dst_arr)
                 if chaos is not None and chaos.fire("stall", dst_name):
@@ -212,11 +227,14 @@ class KVTransferEngine:
                     self.stats.n_timeouts += 1
                     self.stats.n_replayed_chunks += 1
                     self.stats.sim_seconds += self.timeout_s
+                    tr.instant(track, "replay", idx=lo // cp)
                     continue
                 committed = True
                 break
+            tr.end(track, committed=committed)
             if not committed:
                 self.stats.n_aborts += 1
+                tr.instant(track, "abort", idx=lo // cp, rid=rid)
                 exc = TransferAbortedError(
                     f"chunk {lo // cp} of {src_name}->{dst_name} "
                     f"exhausted {self.max_retries} retries")

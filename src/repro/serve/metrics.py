@@ -58,16 +58,11 @@ def percentile(xs: List[float], q: float) -> float:
 
 
 def percentiles(xs: List[float], qs=(0.5, 0.95, 0.99)) -> Dict[str, float]:
-    """{"p50": ..., "p95": ..., "p99": ...} over one sorted pass."""
+    """{"p50": ..., "p95": ..., "p99": ...} over one sorted pass. Every
+    percentile in this module goes through :func:`percentile` — the one
+    exact-rank implementation (a nearest-rank `_pctl` twin used to live
+    here; keep it dead)."""
     return {f"p{int(q * 100)}": percentile(xs, q) for q in qs}
-
-
-def _pctl(xs: List[float], q: float) -> float:
-    if not xs:
-        return float("nan")
-    s = sorted(xs)
-    i = min(len(s) - 1, int(round(q * (len(s) - 1))))
-    return s[i]
 
 
 @dataclasses.dataclass

@@ -65,6 +65,7 @@ import collections
 import dataclasses
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.obs import trace as obs_trace
 from repro.serve.kv_blocks import BlockAllocator
 from repro.serve.sampling import GREEDY, SamplingParams
 
@@ -149,6 +150,13 @@ class PrefillScheduler:
         self.n_prefix_hits = 0
         self.n_tokens_skipped = 0
         self._admitted: Dict[int, int] = {}  # tenant -> admissions (fair)
+        self.track = "serve"  # tracer track (§15); factories override
+        # Why the last plan() returned None: "empty" (no queued work),
+        # "no-slot" (landing site busy), "pages" (pool cannot back the
+        # head), or None after a successful plan. Engines read this to
+        # bucket idle ticks (pool-OOM vs queue-starved) without the
+        # tracer ever influencing scheduling.
+        self.wait_reason: Optional[str] = None
 
     # -- submission ---------------------------------------------------------
 
@@ -192,7 +200,11 @@ class PrefillScheduler:
         if budget <= 0:
             return None
         if self._prefilling is None:
-            if not self.queue or not has_slot():
+            if not self.queue:
+                self.wait_reason = "empty"
+                return None
+            if not has_slot():
+                self.wait_reason = "no-slot"
                 return None
             idx = self._select()
             entry = self.queue[idx]
@@ -209,14 +221,22 @@ class PrefillScheduler:
                         shared = ()
                 if not self.allocator.share_pages(
                         entry.request.rid, len(entry.tokens), shared):
+                    self.wait_reason = "pages"
                     return None  # wait for pages (freed on finish/migration)
             del self.queue[idx]
             if skipped:
                 self.n_prefix_hits += 1
                 self.n_tokens_skipped += skipped
+                obs_trace.TRACER.instant(
+                    self.track, "prefix-skip", rid=entry.request.rid,
+                    skipped=skipped)
             tenant = entry.request.tenant
             self._admitted[tenant] = self._admitted.get(tenant, 0) + 1
             self._prefilling = (entry, claim_slot(), skipped, skipped)
+            obs_trace.TRACER.flow(
+                self.track, "admitted", entry.request.rid,
+                tokens=len(entry.tokens), skipped=skipped)
+        self.wait_reason = None
         entry, slot, start, skipped = self._prefilling
         length = min(self.prefill_chunk, len(entry.tokens) - start, budget)
         if length <= 0:
@@ -277,6 +297,7 @@ class DecodeScheduler:
         self.results: Dict[int, List[int]] = {}  # rid -> generated tokens
         self.n_preempted = 0
         self._admit_seq = 0
+        self.track = "serve"  # tracer track (§15); factories override
 
     # -- slots --------------------------------------------------------------
 
@@ -320,6 +341,8 @@ class DecodeScheduler:
         self._admit_seq += 1
         self.running[slot] = _Running(
             request=request, n_generated=n_done + 1, seq=self._admit_seq)
+        obs_trace.TRACER.flow(self.track, "decode", request.rid, slot=slot,
+                              n_done=n_done)
         return self._maybe_finish(slot, first_token)
 
     def note_token(self, slot: int, token: int) -> bool:
@@ -348,6 +371,8 @@ class DecodeScheduler:
                     self.prefix_index.insert(
                         seq, self.allocator.tables.get(req.rid, []))
                 self.allocator.free(req.rid)  # page-table reset = recycle
+            obs_trace.TRACER.flow(self.track, "finished", req.rid,
+                                  generated=run.n_generated)
         return done
 
     def pop_newest(self) -> Optional[Tuple[int, Request, List[int]]]:
@@ -364,6 +389,8 @@ class DecodeScheduler:
         if self.allocator is not None:
             self.allocator.free(rid)
         self.n_preempted += 1
+        obs_trace.TRACER.instant(self.track, "preempt", rid=rid, slot=slot,
+                                 generated=run.n_generated)
         return slot, run.request, list(self.results[rid])
 
     # -- introspection ------------------------------------------------------
@@ -403,6 +430,11 @@ class Scheduler:
                                         prefix_index=prefix_index, fair=fair)
         self.decode = DecodeScheduler(n_slots, allocator=allocator,
                                       prefix_index=prefix_index)
+
+    def set_track(self, track: str) -> None:
+        """Route both policies' trace events to ``track`` (§15)."""
+        self.prefill.track = track
+        self.decode.track = track
 
     # -- delegated state (public surface unchanged by the policy split) -----
 

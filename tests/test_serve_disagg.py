@@ -310,6 +310,37 @@ def test_plan_disagg_group_picks_role_split_and_goodput():
     assert plan.predicted.ttft_p50 < plan.predicted_unified.ttft_p50
 
 
+def test_plan_disagg_group_hit_ratio_shifts_split():
+    """A high expected prefix-cache hit ratio discounts the prefill leg,
+    so the planner reassigns prefill devices to decode: on a decode-heavy
+    load a 2+2 group plans 2 prefill devices cold but only 1 at 80% hits,
+    banking the freed device as decode slots (and never losing goodput)."""
+    from repro.models import registry
+    rng = np.random.RandomState(0)
+    t, trace = 0.0, []
+    for _ in range(40):
+        t += float(rng.exponential(0.2))
+        trace.append(sim.ServeRequest(arrival=t,
+                                      prompt=int(rng.randint(2048, 8192)),
+                                      gen=int(rng.randint(256, 512))))
+    cfg = registry.get_config("qwen3-moe-30b-a3b")
+    zp = ZPGroupShape(M=2, N=2, attn_class=A40, exp_class=V100)
+    cold = planner.plan_disagg_group(cfg, zp, trace, prefill_chunk=256,
+                                     ctx=2048, slots_per_device=8)
+    hot = planner.plan_disagg_group(cfg, zp, trace, prefill_chunk=256,
+                                    ctx=2048, slots_per_device=8,
+                                    expected_hit_ratio=0.8)
+    n_pre_cold = cold.prefill_attn + cold.prefill_exp
+    n_pre_hot = hot.prefill_attn + hot.prefill_exp
+    assert n_pre_cold == 2 and n_pre_hot == 1  # the split moved
+    assert hot.decode_attn + hot.decode_exp \
+        > cold.decode_attn + cold.decode_exp
+    assert hot.predicted.goodput >= cold.predicted.goodput
+    assert hot.expected_hit_ratio == 0.8 and cold.expected_hit_ratio == 0.0
+    with pytest.raises(ValueError):
+        planner.plan_disagg_group(cfg, zp, trace, expected_hit_ratio=1.0)
+
+
 def test_serve_simulator_conservation_and_monotonicity():
     """Sanity invariants: every request finishes exactly once; slower
     decode or prefill never raises goodput; the handoff cost only hurts."""
